@@ -1,0 +1,65 @@
+"""Ablations beyond the paper's tables.
+
+1. wait_fraction sweep (the §3.7 knob the paper says "can be configured by
+   the service provider"): latency/throughput/batch-size tradeoff curve.
+2. remat on/off: activation-residual vs recompute tradeoff for fine-tuning.
+3. token-budget packing utilization: compute saved vs per-client padding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import simulate
+from benchmarks.common import emit, residual_bytes, timeit
+from benchmarks.bench_batching import _clients, N_LAYERS, EXEC_OVERHEAD_13B, PER_TOKEN_13B
+
+
+def run(quick: bool = False):
+    rows = []
+    # 1. wait_fraction sweep
+    for wf in (0.0, 0.05, 0.1, 0.25, 0.5, 1.0):
+        r = simulate(_clients(), N_LAYERS, "opportunistic",
+                     EXEC_OVERHEAD_13B, PER_TOKEN_13B, wait_fraction=wf)
+        s = r.summary()
+        rows.append({"ablation": "wait_fraction", "x": wf,
+                     "latency_s": round(s["mean_latency_s"], 5),
+                     "throughput": round(s["throughput_tok_s"]),
+                     "avg_batch": round(s["avg_batch"], 2)})
+
+    # 2. remat on/off (residual proxy + step time, reduced model)
+    from repro.config import AdapterConfig, TrainConfig
+    from repro.configs import get_config
+    from repro.core import symbiosis
+    cfg = get_config("granite-3-8b").reduced(n_layers=4, d_model=256)
+    acfg = AdapterConfig(method="lora", rank=8, targets=("q", "v"))
+    base, bank, opt = symbiosis.init_system(cfg, acfg, 2, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 2, 128), jnp.int32),
+             "labels": jnp.ones((2, 2, 128), jnp.int32)}
+    for remat in (False, True):
+        step = jax.jit(symbiosis.make_multi_client_train_step(
+            cfg, acfg, TrainConfig(n_clients=2, remat=remat)))
+        t = timeit(lambda: step(base, bank, opt, batch, 1), reps=3)
+        rows.append({"ablation": "remat", "x": remat,
+                     "latency_s": round(t, 4), "throughput": "-",
+                     "avg_batch": "-"})
+
+    # 3. packing utilization: ragged clients into one budget vs padded batch
+    from repro.core import packing
+    import numpy as np
+    lens = [37, 5, 122, 64, 9, 80]
+    S_max, d = max(lens), 64
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(len(lens), S_max, d)).astype(np.float32))
+    budget = sum(lens)
+    p = packing.pack(x, jnp.asarray(lens, jnp.int32), budget)
+    padded_tokens = len(lens) * S_max
+    rows.append({"ablation": "packing", "x": f"{len(lens)}_ragged_clients",
+                 "latency_s": "-",
+                 "throughput": f"{budget}/{padded_tokens} tokens computed",
+                 "avg_batch": round(padded_tokens / budget, 2)})
+    return emit("ablations", rows)
+
+
+if __name__ == "__main__":
+    run()

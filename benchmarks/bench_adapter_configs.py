@@ -1,0 +1,47 @@
+"""Table 2: fine-tuning iteration latency for LoRA 1-4 adapter configs.
+
+Paper finding (C3): adding fine-tuned layers ([q] -> [q,k,v,o]) costs more
+than raising rank (8 -> 64). Reduced Llama2-13B-family model on CPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import AdapterConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import symbiosis
+from repro.data import make_client_batches
+from benchmarks.common import timeit, emit
+
+LORAS = {
+    "LoRA1_r8_q": AdapterConfig(method="lora", rank=8, targets=("q",)),
+    "LoRA2_r64_q": AdapterConfig(method="lora", rank=64, targets=("q",)),
+    "LoRA3_r8_qkvo": AdapterConfig(method="lora", rank=8,
+                                   targets=("q", "k", "v", "o")),
+    "LoRA4_r64_qkvo": AdapterConfig(method="lora", rank=64,
+                                    targets=("q", "k", "v", "o")),
+}
+
+
+def run(quick: bool = False):
+    cfg = get_config("symbiosis-llama2-13b").reduced(
+        n_layers=2 if quick else 4, d_model=256 if quick else 512)
+    tcfg = TrainConfig(n_clients=2, remat=False)
+    rows = []
+    for name, acfg in LORAS.items():
+        key = jax.random.PRNGKey(0)
+        base, bank, opt = symbiosis.init_system(cfg, acfg, 2, key)
+        step = jax.jit(symbiosis.make_multi_client_train_step(cfg, acfg, tcfg))
+        batch = make_client_batches(cfg, 2, 2, 128).batch(0)
+        t = timeit(lambda: step(base, bank, opt, batch, 0), reps=3)
+        rows.append({"adapter": name, "iter_latency_s": round(t, 4)})
+    # the paper's ordering: targets dominate rank
+    r = {x["adapter"]: x["iter_latency_s"] for x in rows}
+    rows.append({"adapter": "check_targets_cost_more_than_rank",
+                 "iter_latency_s":
+                 r["LoRA3_r8_qkvo"] >= r["LoRA2_r64_q"] * 0.9})
+    return emit("table2_adapter_configs", rows)
+
+
+if __name__ == "__main__":
+    run()

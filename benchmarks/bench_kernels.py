@@ -1,0 +1,78 @@
+"""Kernel-level microbench: Pallas ops (interpret mode) vs jnp references.
+
+On CPU, interpret-mode timing is NOT indicative of TPU performance — the
+value here is (a) correctness at benchmark scale, (b) the analytic VMEM /
+arithmetic-intensity table used in the roofline discussion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.hardware import V5E
+from repro.kernels import (sgmv, sgmv_ref, ragged_linear, ragged_linear_ref,
+                           decode_attn, decode_attn_ref)
+from benchmarks.common import emit
+
+
+def _intensity_rows():
+    rows = []
+    # sgmv: per 128-token block: 2*bt*din*r + 2*bt*r*dout flops,
+    # bytes: x + A + B + y
+    bt, din, r, dout = 128, 4096, 16, 4096
+    flops = 2 * bt * din * r + 2 * bt * r * dout
+    bts = (bt * din + din * r + r * dout + bt * dout) * 2
+    rows.append({"kernel": "sgmv", "config": f"bt{bt}_d{din}_r{r}",
+                 "flops": flops, "bytes": bts,
+                 "intensity": round(flops / bts, 2),
+                 "vmem_MB": round((bt * din + din * r + r * dout + bt * dout)
+                                  * 2 / 1e6, 2)})
+    # ragged_linear tile
+    t, k, d = 256, 512, 512
+    flops = 2 * t * k * d
+    bts = (t * k + k * d + t * d) * 2
+    rows.append({"kernel": "ragged_linear", "config": f"t{t}_k{k}_d{d}",
+                 "flops": flops, "bytes": bts,
+                 "intensity": round(flops / bts, 2),
+                 "vmem_MB": round((t * k + k * d + t * d) * 2 / 1e6, 2)})
+    # decode_attn block: G x block_kv
+    G, bkv, hd = 8, 512, 128
+    flops = 2 * G * bkv * hd * 2
+    bts = (G * hd + 2 * bkv * hd) * 2
+    rows.append({"kernel": "decode_attn", "config": f"G{G}_bkv{bkv}_hd{hd}",
+                 "flops": flops, "bytes": bts,
+                 "intensity": round(flops / bts, 2),
+                 "vmem_MB": round((G * hd + 2 * bkv * hd) * 2 / 1e6, 2)})
+    # flash_attn tile: block_q x block_kv (q stays VMEM-resident per row)
+    bq, bkv, hd = 256, 512, 128
+    flops = 2 * bq * bkv * hd * 2
+    bts = (bq * hd + 2 * bkv * hd + bq * hd) * 2
+    rows.append({"kernel": "flash_attn", "config": f"bq{bq}_bkv{bkv}_hd{hd}",
+                 "flops": flops, "bytes": bts,
+                 "intensity": round(flops / bts, 2),
+                 "vmem_MB": round((bq * hd * 2 + 2 * bkv * hd) * 2 / 1e6
+                                  + bq * (256 + hd) * 4 / 1e6, 2)})
+    ridge = V5E.peak_flops_bf16 / V5E.hbm_bandwidth
+    rows.append({"kernel": "v5e_ridge_point", "config": "flops/byte",
+                 "flops": "-", "bytes": "-", "intensity": round(ridge, 1),
+                 "vmem_MB": "-"})
+    return rows
+
+
+def run(quick: bool = False):
+    rows = _intensity_rows()
+    # correctness spot-checks at bench scale
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 256), jnp.float32)
+    A = jax.random.normal(key, (4, 256, 8))
+    B = jax.random.normal(key, (4, 8, 256))
+    ids = jnp.array([0, 3], jnp.int32)
+    err = float(jnp.abs(sgmv(x, A, B, ids) -
+                        sgmv_ref(x, A, B, ids, block_t=128)).max())
+    rows.append({"kernel": "sgmv", "config": "allclose_err", "flops": "-",
+                 "bytes": "-", "intensity": f"{err:.1e}", "vmem_MB": "-"})
+    return emit("kernels", rows)
+
+
+if __name__ == "__main__":
+    run()

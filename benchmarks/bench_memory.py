@@ -1,0 +1,89 @@
+"""Fig 9/10: memory consumption — memory-optimized backward (§3.6).
+
+No GPU allocator here, so the measured quantity is the VJP residual
+footprint (activation memory held for the backward pass) plus state sizes:
+  Fig 9: single job, Symbiosis-MO vs non-optimized vs torch-like baseline.
+  Fig 10: increasing clients — base-attributable residuals stay ~constant
+          with MO; client state grows linearly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AdapterConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import symbiosis
+from repro.core.virtlayer import make_client_ctx
+from repro.models import get_model
+from repro.models.losses import lm_loss
+from benchmarks.common import residual_bytes, tree_bytes, emit
+
+ACFG = AdapterConfig(method="lora", rank=8, targets=("q", "k", "v", "o"))
+
+
+def _residuals(cfg, mode, n_clients, seq=256):
+    """mode: 'mo' (§3.6 frozen backward), 'no_mo' (plain frozen matmuls —
+    JAX partial-eval still avoids saving x for non-differentiated W), or
+    'torch_like' (differentiate base params too, grads discarded — forces
+    the input-activation residuals torch autograd keeps, the paper's
+    baseline)."""
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    base, bank, _ = symbiosis.init_system(cfg, ACFG, n_clients, key)
+    ctx = make_client_ctx(cfg, ACFG, memory_optimized=(mode == "mo"))
+    batch = {"tokens": jnp.ones((n_clients, 2, seq), jnp.int32),
+             "labels": jnp.ones((n_clients, 2, seq), jnp.int32)}
+
+    def loss_adapter_only(bank):
+        def one(adapter, b):
+            logits, aux = model.forward(base, b, ctx, adapter, remat=False)
+            return lm_loss(logits, b["labels"], None, aux)
+        return jax.vmap(one, in_axes=(0, 0))(bank, batch).sum()
+
+    def loss_with_base(args):
+        bank, base_ = args
+        def one(adapter, b):
+            logits, aux = model.forward(base_, b, ctx, adapter, remat=False)
+            return lm_loss(logits, b["labels"], None, aux)
+        return jax.vmap(one, in_axes=(0, 0))(bank, batch).sum()
+
+    if mode == "torch_like":
+        res = residual_bytes(loss_with_base, (bank, base))
+    else:
+        res = residual_bytes(loss_adapter_only, bank)
+    return res, tree_bytes(bank), tree_bytes(base)
+
+
+def run(quick: bool = False):
+    cfg = get_config("symbiosis-llama2-13b").reduced(
+        n_layers=2, d_model=256 if quick else 512)
+    rows = []
+    # Fig 9: single fine-tuning job — MO vs torch-like baseline
+    res_mo, _, base_b = _residuals(cfg, "mo", 1)
+    res_no, _, _ = _residuals(cfg, "no_mo", 1)
+    res_torch, _, _ = _residuals(cfg, "torch_like", 1)
+    for name, r in (("symbiosis_MO", res_mo), ("no_MO_jax_partial_eval", res_no),
+                    ("torch_like_baseline", res_torch)):
+        rows.append({"fig": "9", "config": name, "clients": 1,
+                     "residual_MB": round(r / 1e6, 2),
+                     "base_MB": round(base_b / 1e6, 2)})
+    # Fig 10: increasing clients
+    for c in (1, 2, 4) if quick else (1, 2, 4, 8):
+        res, bank_b, _ = _residuals(cfg, "mo", c)
+        rows.append({"fig": "10", "config": "symbiosis_MO", "clients": c,
+                     "residual_MB": round(res / 1e6, 2),
+                     "client_state_MB": round(bank_b / 1e6, 2)})
+    # paper claims: MO cuts residuals vs the torch-like baseline; in JAX,
+    # partial evaluation already implies MO when the base is frozen — the
+    # custom_vjp makes that guarantee structural (equal footprints).
+    rows.append({"fig": "check", "config": "MO_beats_torch_baseline",
+                 "clients": "-", "residual_MB": bool(res_mo < res_torch)})
+    rows.append({"fig": "check", "config": "jax_partial_eval_equals_MO",
+                 "clients": "-",
+                 "residual_MB": bool(abs(res_mo - res_no) < 0.1 * res_mo + 1e6)})
+    return emit("fig9_10_memory", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall-time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def tree_bytes(tree) -> int:
+    import numpy as np
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def residual_bytes(f, *primals) -> int:
+    """Bytes captured by the VJP residuals of f — the activation-memory
+    proxy used for the Fig 9/10 reproduction (no GPU allocator here)."""
+    _, vjp = jax.vjp(f, *primals)
+    seen = set()
+    total = 0
+    for leaf in jax.tree.leaves(vjp):
+        if hasattr(leaf, "shape") and id(leaf) not in seen:
+            seen.add(id(leaf))
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def emit(bench: str, rows: list, out_dir: str = "experiments/bench"):
+    """Print CSV rows + persist JSON."""
+    os.makedirs(out_dir, exist_ok=True)
+    for r in rows:
+        print(f"{bench}," + ",".join(str(v) for v in r.values()))
+    with open(os.path.join(out_dir, f"{bench}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits CSV lines (bench,key=value,...) and writes experiments/bench/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+BENCHES = [
+    ("table2_adapter_configs", "benchmarks.bench_adapter_configs"),
+    ("fig9_10_memory", "benchmarks.bench_memory"),
+    ("fig11_12_multiclient", "benchmarks.bench_multiclient"),
+    ("fig15_17_sharded", "benchmarks.bench_sharded"),
+    ("fig18_19_heterogeneous", "benchmarks.bench_heterogeneous"),
+    ("fig21_privacy", "benchmarks.bench_privacy"),
+    ("fig22_23_mixed", "benchmarks.bench_mixed"),
+    ("table4_5_batching", "benchmarks.bench_batching"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("ablations", "benchmarks.bench_ablations"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller models / fewer points")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+    failures = []
+    for name, modname in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n=== {name} ({modname}) ===")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            mod.run(quick=args.quick)
+            print(f"=== {name}: done in {time.time() - t0:.1f}s ===")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end driver (deliverable b): train a ~100M-param model for a few
+hundred steps with 4 clients sharing the base, checkpoint, restore, serve.
+
+  PYTHONPATH=src python examples/finetune_e2e.py [--steps 200]
+
+~100M params: 4 layers x d_model 768 + vocab 49k embeddings (granite
+family). Takes a few minutes on CPU; loss per client drops markedly.
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AdapterConfig, TrainConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import symbiosis
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+from repro.common.tree import tree_count
+from repro.data import make_client_batches
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config("granite-3-8b").reduced(n_layers=4, d_model=768,
+                                             vocab=8192)
+    acfg = AdapterConfig(method="lora", rank=8, targets=("q", "k", "v", "o"))
+    tcfg = TrainConfig(n_clients=args.clients, lr=3e-3,
+                       total_steps=args.steps, warmup_steps=20)
+
+    key = jax.random.PRNGKey(0)
+    base, bank, opt = symbiosis.init_system(cfg, acfg, args.clients, key)
+    n_base = tree_count(base)
+    n_adapter = tree_count(jax.tree.map(lambda x: x[0], bank))
+    print(f"base: {n_base/1e6:.1f}M params (frozen, shared); "
+          f"adapter: {n_adapter/1e3:.0f}K params/client "
+          f"({100*n_adapter/n_base:.2f}% of base)")
+
+    step_fn = jax.jit(symbiosis.make_multi_client_train_step(cfg, acfg, tcfg),
+                      donate_argnums=(1, 2))
+    stream = make_client_batches(cfg, args.clients, 4, args.seq)
+
+    t0 = time.time()
+    first = last = None
+    for step in range(args.steps):
+        bank, opt, m = step_fn(base, bank, opt, stream.batch(step), step)
+        loss = np.asarray(m["loss"])
+        if step == 0:
+            first = loss.copy()
+        last = loss
+        if step % 25 == 0 or step == args.steps - 1:
+            tok_s = args.clients * 4 * args.seq * (step + 1) / (time.time() - t0)
+            print(f"step {step:4d} loss/client={np.round(loss, 3)} "
+                  f"({tok_s:,.0f} tok/s)")
+    drop = 100 * (first - last) / first
+    print(f"loss drop per client: {np.round(drop, 1)}%")
+    assert (last < first).all(), "training must reduce loss for every client"
+
+    # checkpoint the client bank (base saved separately, once — the
+    # as-a-service split) and restore into a fresh serving session
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, args.steps, base, name="base")
+        save_checkpoint(d, args.steps, bank, name="bank")
+        sizes = {n: sum(os.path.getsize(os.path.join(r, f))
+                        for r, _, fs in os.walk(os.path.join(
+                            d, f"step_{args.steps:08d}", n)) for f in fs)
+                 for n in ("base", "bank")}
+        print(f"checkpoints: base {sizes['base']/1e6:.1f}MB (shared), "
+              f"bank {sizes['bank']/1e6:.1f}MB ({args.clients} clients)")
+        bank2 = restore_checkpoint(d, args.steps, bank, name="bank")
+
+    scfg = ServeConfig(n_clients=args.clients, max_seq=64)
+    caches = symbiosis.init_client_caches(cfg, args.clients, 2, 64)
+    prefill = jax.jit(symbiosis.make_multi_client_prefill(cfg, acfg, scfg))
+    logits, _ = prefill(base, bank2, caches,
+                        {"tokens": jnp.ones((args.clients, 2, 16), jnp.int32)})
+    assert np.isfinite(np.asarray(logits)).all()
+    print("restored bank serves correctly — e2e OK")
+
+
+if __name__ == "__main__":
+    main()

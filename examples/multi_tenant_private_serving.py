@@ -1,0 +1,60 @@
+"""Privacy-preserving multi-tenancy (paper §3.8 / Fig 21).
+
+A tenant fine-tunes an adapter on "confidential" data, then serves through
+an UNTRUSTED base executor: every activation shipped to a frozen base layer
+carries additive noise; the pre-computed noise effect is subtracted from
+the output. The demo shows (a) what the executor observes is decorrelated
+from the true activations, (b) the final outputs are exactly those of the
+non-private run.
+
+  PYTHONPATH=src python examples/multi_tenant_private_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AdapterConfig
+from repro.configs import get_config
+from repro.core import adapters as ad_lib, privacy
+from repro.core.virtlayer import make_client_ctx, attach_privacy
+from repro.models import get_model
+
+cfg = get_config("granite-3-8b").reduced(n_layers=2, d_model=256)
+model = get_model(cfg)
+acfg = AdapterConfig(method="lora", rank=8, targets=("q", "v"))
+
+key = jax.random.PRNGKey(0)
+base = model.init_params(key)                       # provider-side
+adapter = ad_lib.init_adapter(cfg, acfg, jax.random.PRNGKey(1))  # tenant-side
+adapter = jax.tree.map(lambda x: x + 0.03, adapter)  # "fine-tuned"
+
+# Tenant generates a secret noise bank (2 variants, rotated across layers/
+# iterations) and asks the executor's BIAS-FREE flow for the noise effects.
+dims = {p: d for p, d in ad_lib.resolve_targets(cfg, acfg)}
+noise = privacy.make_noise(jax.random.PRNGKey(42), dims, n_variants=2, scale=3.0)
+adapter_priv = attach_privacy(adapter, cfg, base, noise)
+
+ctx_plain = make_client_ctx(cfg, acfg)
+ctx_priv = make_client_ctx(cfg, acfg, privacy_noise=noise, privacy_variant=1)
+
+batch = {"tokens": jax.random.randint(key, (2, 24), 0, cfg.vocab)}
+y_plain, _ = model.forward(base, batch, ctx_plain, adapter)
+y_priv, _ = model.forward(base, batch, ctx_priv, adapter_priv)
+
+err = float(jnp.abs(y_plain - y_priv).max())
+print(f"max |logit difference| private vs plain: {err:.2e}  (exactness, Fig 21)")
+assert err < 1e-2
+
+# What does the executor see? x+n instead of x:
+x = jax.random.normal(key, (4, cfg.d_model))
+n = privacy.select_variant(noise, "q", 1)
+seen = x + n
+corr = np.corrcoef(np.asarray(x).ravel(), np.asarray(seen).ravel())[0, 1]
+print(f"correlation(executor-observed, true activations) = {corr:.3f} "
+      f"(noise scale {float(jnp.std(n)):.1f} vs activation scale "
+      f"{float(jnp.std(x)):.1f})")
+
+# Fig 8's attack: with LoRA, (C - B)/A leaks Wa.Wb — under noise the
+# executor's observed input is x+n, so the recovered 'adapter effect' is
+# polluted by n's projection, and variant rotation prevents averaging it out.
+print("privacy demo OK")

@@ -1,0 +1,2 @@
+from repro.common.hardware import V5E
+from repro.common.tree import tree_bytes, tree_count, cast_tree

@@ -1,0 +1,36 @@
+"""Soft sharding constraints: no-ops without an ambient mesh.
+
+Model code stays mesh-agnostic — constraints only bind when the launcher
+established a mesh via ``jax.set_mesh`` (the dry-run / production path); CPU
+unit tests and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) iff every named axis in spec
+    exists in the ambient mesh; otherwise identity."""
+    axes = _ambient_axes()
+    if not axes:
+        return x
+    for s in spec:
+        for name in ((s,) if isinstance(s, str) else (s or ())):
+            if name not in axes:
+                return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

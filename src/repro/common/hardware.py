@@ -1,0 +1,31 @@
+"""Hardware constants for roofline analysis (TPU v5e, the target platform)."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops_bf16: float      # FLOP/s
+    hbm_bandwidth: float        # bytes/s
+    ici_link_bandwidth: float   # bytes/s per link (one direction)
+    ici_links: int              # usable ICI links per chip (2D torus on v5e)
+    hbm_bytes: float            # HBM capacity per chip
+    vmem_bytes: float           # VMEM per core
+    dcn_bandwidth: float        # bytes/s per host for cross-pod traffic
+    pcie_bandwidth: float       # bytes/s host<->device (for heterogeneous model)
+    host_flops: float           # rough CPU FLOP/s per host (heterogeneous model)
+    host_mem_bandwidth: float = 100e9   # bytes/s host DRAM (heterogeneous model)
+
+
+V5E = Chip(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 1024 * 1024,
+    dcn_bandwidth=25e9,
+    pcie_bandwidth=32e9,
+    host_flops=3e12,
+)

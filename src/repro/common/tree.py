@@ -1,0 +1,24 @@
+"""Pytree utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar parameters."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

@@ -1,0 +1,181 @@
+"""Configuration system: model / adapter / train / serve / shape configs.
+
+Every assigned architecture gets a ``ModelConfig`` in ``repro.configs.<id>``.
+Reduced variants for CPU smoke tests come from ``ModelConfig.reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+# Architecture families.
+DENSE = "dense"
+MOE = "moe"
+RWKV = "rwkv"      # attention-free SSM-style (RWKV6)
+HYBRID = "hybrid"  # Jamba: mamba + attention interleave + MoE
+ENCDEC = "encdec"  # Whisper backbone
+VLM = "vlm"        # LLaVA backbone (dense + patch-embedding frontend stub)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    head_pad: int = 0                 # extra ZERO-WEIGHT q-heads so that
+                                      # (n_heads+head_pad) divides the TP
+                                      # size (exact: padded wo rows are 0)
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_expert: int = 0                 # per-expert hidden dim (fine-grained MoE); 0 -> d_ff
+    moe_every: int = 1                # MoE FFN on layers where (layer % moe_every == moe_offset)
+    moe_offset: int = 0
+    first_dense_layers: int = 0       # DeepSeek-MoE: first layer uses a dense FFN
+    dense_residual: bool = False      # Arctic: dense FFN in parallel with MoE
+    # --- Hybrid (Jamba) / SSM ---
+    attn_every: int = 0               # attention on layers where (layer+1) % attn_every == 0
+    d_state: int = 16                 # Mamba state dim
+    d_conv: int = 4
+    mamba_expand: int = 2
+    # --- Encoder-decoder (Whisper) ---
+    n_enc_layers: int = 0
+    n_frontend_tokens: int = 0        # encoder frame tokens (audio) / image patch tokens (vlm)
+    # --- Attention variants ---
+    sliding_window: int = 0           # 0 -> full attention
+    # --- dtypes ---
+    dtype: str = "bfloat16"           # activations
+    param_dtype: str = "bfloat16"     # frozen base weights
+    # provenance
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def hp(self) -> int:
+        """Padded q-head count used by the attention implementation."""
+        return self.n_heads + self.head_pad
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.hp // self.n_kv_heads
+
+    @property
+    def ffn_hidden(self) -> int:
+        return self.d_expert or self.d_ff
+
+    def is_moe_layer(self, layer: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return layer % self.moe_every == self.moe_offset
+
+    def is_attn_layer(self, layer: int) -> bool:
+        """For hybrid archs: which decoder layers use attention (others use Mamba)."""
+        if self.arch != HYBRID:
+            return True
+        return (layer + 1) % self.attn_every == 0
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256, n_experts: int = 4,
+                vocab: int = 512) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        heads = max(1, min(self.n_heads, d_model // 64))
+        kv = max(1, min(self.n_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        changes = dict(
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=64 if self.head_dim else 0,
+            d_ff=d_model * 3,
+            vocab=vocab,
+            dtype="float32",
+            param_dtype="float32",
+        )
+        if self.n_experts:
+            changes.update(
+                n_experts=min(self.n_experts, n_experts),
+                top_k=min(self.top_k, 2),
+                n_shared_experts=min(self.n_shared_experts, 1),
+                d_expert=(d_model // 2) if self.d_expert else 0,
+                moe_every=self.moe_every,
+                moe_offset=min(self.moe_offset, n_layers - 1),
+                first_dense_layers=min(self.first_dense_layers, 1),
+            )
+        if self.arch == HYBRID:
+            changes.update(attn_every=2, n_layers=max(n_layers, 2))
+        if self.arch == ENCDEC:
+            changes.update(n_enc_layers=n_layers, n_frontend_tokens=16)
+        if self.arch == VLM:
+            changes.update(n_frontend_tokens=16)
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class AdapterConfig:
+    """A client's PEFT selection (paper goal 6: multiple PEFT methods)."""
+    method: str = "lora"              # lora | ia3 | prefix
+    rank: int = 8                     # lora
+    alpha: float = 16.0               # lora
+    targets: Sequence[str] = ("q", "v")   # subset of q,k,v,o,gate,up,down
+    n_prefix: int = 16                # prefix tuning: virtual tokens per layer
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    n_clients: int = 4                # concurrent fine-tuning clients sharing the base
+    microbatch: int = 0               # 0 -> no gradient accumulation
+    lr: float = 1e-4
+    weight_decay: float = 0.0
+    warmup_steps: int = 10
+    total_steps: int = 100
+    max_grad_norm: float = 1.0
+    remat: bool = True                # activation checkpointing of the layer body
+    memory_optimized_backward: bool = True   # paper §3.6 (Symbiosis-MO); False = torch-like baseline
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    n_clients: int = 8
+    max_seq: int = 2048
+    token_budget: int = 4096          # packed base-executor buffer capacity (paper §3.7)
+    policy: str = "opportunistic"     # lockstep | nolockstep | opportunistic
+    wait_fraction: float = 0.1        # opportunistic wait deadline as a fraction of request cost
+    privacy: bool = False             # paper §3.8 activation noise
+    seed: int = 0

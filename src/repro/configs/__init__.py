@@ -1,0 +1,42 @@
+"""Assigned-architecture configs (+ the paper's own eval model).
+
+``get_config(arch_id)`` resolves the ``--arch`` CLI flag; every config cites
+its source in ``CONFIG.source``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig
+
+# arch-id -> module name
+ARCHS = {
+    "rwkv6-7b": "rwkv6_7b",
+    "command-r-35b": "command_r_35b",
+    "stablelm-12b": "stablelm_12b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "qwen3-4b": "qwen3_4b",
+    "granite-3-8b": "granite_3_8b",
+    "arctic-480b": "arctic_480b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "whisper-small": "whisper_small",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    # the paper's own eval models (Table 3) — not in the assigned pool
+    "symbiosis-llama2-13b": "symbiosis_llama2_13b",
+    "gemma2-27b": "gemma2_27b",
+    "starcoder2-15b": "starcoder2_15b",
+}
+
+_PAPER_EXTRAS = {"symbiosis-llama2-13b", "gemma2-27b", "starcoder2-15b"}
+ASSIGNED = [a for a in ARCHS if a not in _PAPER_EXTRAS]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,17 @@
+"""rwkv6-7b — Finch: attention-free SSM with data-dependent decay.
+[arXiv:2404.05892] 32L d_model=4096 d_ff=14336 vocab=65536, head size 64.
+long_500k runs natively (O(1) recurrent state)."""
+from repro.config import ModelConfig, RWKV
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    arch=RWKV,
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,           # d_model / head_size(64)
+    n_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab=65536,
+    source="arXiv:2404.05892 (RWKV6 'Finch', data-dependent decay)",
+)

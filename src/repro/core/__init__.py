@@ -1,0 +1,15 @@
+"""The paper's primary contribution: Symbiosis split execution in JAX.
+
+frozen_linear — memory-optimized backward for frozen base layers (§3.6)
+virtlayer     — client-side splice (VirtLayer analogue, §3.2)
+adapters      — LoRA / IA3 / prefix PEFT banks (goal 6)
+packing       — token-budget ragged packing (§3.7)
+scheduler     — opportunistic batching policies (§3.7)
+privacy       — activation-noise protocol (§3.8)
+base_executor — host-level packed frozen-layer service (§3.2)
+symbiosis     — multi-client train/serve step composition
+"""
+from repro.core.frozen_linear import frozen_dense, frozen_expert
+from repro.core.virtlayer import make_client_ctx, attach_privacy
+from repro.core import adapters, packing, privacy, scheduler, symbiosis
+from repro.core.base_executor import BaseExecutor, calibrate_layer_cost

@@ -1,0 +1,96 @@
+"""Base executor: the shared frozen-layer service (paper §3.2).
+
+In-graph, the base executor is simply the set of frozen matmuls that every
+client's trace routes through (see core.virtlayer) — XLA compiles the merged
+token batch into single MXU matmuls. This module provides the *host-level*
+executor used by the opportunistic-batching engine (core.scheduler,
+serving.engine): it owns the frozen per-layer weights, accepts per-client
+layer requests as ragged token segments, packs them into a token-budget
+buffer (core.packing) and executes one fused matmul per (layer, path).
+
+Shape bucketing keeps re-compilation bounded: packed buffers are padded to
+the next power-of-two token budget.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.frozen_linear import frozen_dense
+
+
+def _bucket(n: int, floor: int = 64) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class BaseExecutor:
+    """Holds frozen base weights; serves per-layer batched execution."""
+
+    def __init__(self, layer_weights: Dict[Tuple[int, str], Tuple[jnp.ndarray, jnp.ndarray]]):
+        """layer_weights: (layer_idx, path) -> (W [din,dout], b or None)."""
+        self.weights = layer_weights
+        self._stats = {"calls": 0, "tokens": 0, "batched_requests": 0}
+
+        @functools.partial(jax.jit, static_argnums=(3,))
+        def _run(buf, w, b, has_b):
+            return frozen_dense(buf, w, b if has_b else None)
+
+        self._run = _run
+
+    def run_layer(self, layer: int, path: str,
+                  segments: List[np.ndarray]) -> List[np.ndarray]:
+        """Execute one base layer for a batch of client segments.
+
+        segments: list of [Ti, din] arrays (ragged — no padding, paper §3.7).
+        Returns the per-client outputs, split back out.
+        """
+        w, b = self.weights[(layer, path)]
+        lens = [s.shape[0] for s in segments]
+        total = sum(lens)
+        budget = _bucket(total)
+        din = w.shape[0]
+        S_max = max(lens)
+        stacked = np.zeros((len(segments), S_max, din), segments[0].dtype)
+        for i, s in enumerate(segments):
+            stacked[i, :lens[i]] = s
+        packed = packing.pack(jnp.asarray(stacked), jnp.asarray(lens, jnp.int32), budget)
+        out = self._run(packed.buf, w, b, b is not None)
+        unpacked = packing.unpack(packed, out, S_max)
+        unpacked = np.asarray(unpacked)
+        self._stats["calls"] += 1
+        self._stats["tokens"] += total
+        self._stats["batched_requests"] += len(segments)
+        return [unpacked[i, :lens[i]] for i in range(len(segments))]
+
+    @property
+    def stats(self):
+        s = dict(self._stats)
+        s["avg_batch"] = s["batched_requests"] / max(1, s["calls"])
+        return s
+
+
+def calibrate_layer_cost(din: int = 512, dout: int = 512, reps: int = 5):
+    """Measure (fixed overhead, per-token cost) of a packed base-layer call on
+    this host — used to parameterize the scheduler simulation."""
+    w = jnp.zeros((din, dout), jnp.float32)
+    f = jax.jit(lambda x: frozen_dense(x, w, None))
+    costs = {}
+    for n in (64, 1024):
+        x = jnp.ones((n, din), jnp.float32)
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f(x).block_until_ready()
+        costs[n] = (time.perf_counter() - t0) / reps
+    per_token = (costs[1024] - costs[64]) / (1024 - 64)
+    overhead = max(1e-6, costs[64] - 64 * per_token)
+    return overhead, max(per_token, 1e-9)

@@ -1,0 +1,84 @@
+"""Memory-optimized frozen base linears (paper §3.6).
+
+The paper's insight: for frozen linear/Conv1D layers the gradient of the
+output w.r.t. the input is the parameters themselves, so the base executor
+need not store input/output activations for fine-tuning requests — during
+the backward pass it computes ``dx = dy @ Wᵀ`` from the (resident) weights.
+This (a) makes the base-executor memory footprint constant in the number of
+clients (Fig 9/10) and (b) breaks the forward/backward batch lockstep (§3.6).
+
+JAX's partial evaluation already avoids saving ``x`` when ``W`` is not
+differentiated, but that behaviour is implicit and easily lost (e.g. if a
+caller differentiates w.r.t. base params for a baseline comparison). These
+``custom_vjp`` wrappers make the guarantee *structural*: the VJP residual is
+the weight (already resident — zero extra memory), never the activations.
+
+``tests/test_frozen_linear.py`` asserts the residual set of a grad-traced
+call contains no activation-shaped tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def _frozen_dense_nobias(x, w):
+    return jnp.einsum("...i,io->...o", x, w)
+
+
+def _fdn_fwd(x, w):
+    # Residual: ONLY the weight — never the activations (paper §3.6).
+    return _frozen_dense_nobias(x, w), (w,)
+
+
+def _fdn_bwd(res, g):
+    (w,) = res
+    dx = jnp.einsum("...o,io->...i", g, w)
+    # Zero cotangent for the frozen weight: XLA DCEs it (never consumed).
+    return dx, jnp.zeros_like(w)
+
+
+_frozen_dense_nobias.defvjp(_fdn_fwd, _fdn_bwd)
+
+
+@jax.custom_vjp
+def _frozen_dense_bias(x, w, b):
+    return jnp.einsum("...i,io->...o", x, w) + b
+
+
+def _fdb_fwd(x, w, b):
+    return _frozen_dense_bias(x, w, b), (w, b)
+
+
+def _fdb_bwd(res, g):
+    w, b = res
+    return (jnp.einsum("...o,io->...i", g, w), jnp.zeros_like(w), jnp.zeros_like(b))
+
+
+_frozen_dense_bias.defvjp(_fdb_fwd, _fdb_bwd)
+
+
+def frozen_dense(x, w, b=None):
+    """Frozen base linear with the memory-optimized backward (paper §3.6)."""
+    if b is None:
+        return _frozen_dense_nobias(x, w)
+    return _frozen_dense_bias(x, w, b)
+
+
+@jax.custom_vjp
+def frozen_expert(x, w):
+    """x [E, C, din] @ w [E, din, dout] (expert-parallel frozen base)."""
+    return jnp.einsum("eci,eio->eco", x, w)
+
+
+def _fe_fwd(x, w):
+    return frozen_expert(x, w), (w,)
+
+
+def _fe_bwd(res, g):
+    (w,) = res
+    return jnp.einsum("eco,eio->eci", g, w), jnp.zeros_like(w)
+
+
+frozen_expert.defvjp(_fe_fwd, _fe_bwd)

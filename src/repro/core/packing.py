@@ -1,0 +1,69 @@
+"""Token-budget ragged packing (paper §3.7, opportunistic batching).
+
+The paper flattens all ``batch×seq`` inputs from different clients into a
+1-D token stream for nn.Linear/Conv1D base layers, avoiding padding ("the
+position of a token does not matter"). The TPU/static-shape analogue is a
+fixed-capacity packed buffer: client segments of different lengths are
+scattered into a ``[budget, d]`` buffer with a live-token count; base linears
+run over the buffer once (compute ∝ budget, not n_clients × max_len).
+
+All functions are jit-compatible (static budget, dynamic lengths).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Packed(NamedTuple):
+    buf: jnp.ndarray       # [budget, d]
+    seg_ids: jnp.ndarray   # [budget] int32, client id per slot (-1 = dead)
+    slot_pos: jnp.ndarray  # [budget] int32, position within the segment
+    lengths: jnp.ndarray   # [C] int32
+    offsets: jnp.ndarray   # [C] int32 (exclusive cumsum of lengths)
+
+    @property
+    def live(self):
+        return self.seg_ids >= 0
+
+
+def pack(inputs: jnp.ndarray, lengths: jnp.ndarray, budget: int) -> Packed:
+    """inputs [C, S_max, d] (padded per client), lengths [C] -> Packed.
+
+    Tokens beyond the budget are dropped (the scheduler sizes the budget so
+    this doesn't happen in practice; tests cover the overflow path).
+    """
+    C, S_max, d = inputs.shape
+    offsets = jnp.cumsum(lengths) - lengths                        # [C]
+    pos = jnp.arange(S_max)[None, :]                               # [1,S]
+    valid = pos < lengths[:, None]                                 # [C,S]
+    dest = jnp.where(valid, offsets[:, None] + pos, budget)        # OOB -> dropped
+    flat_dest = dest.reshape(-1)
+    buf = jnp.zeros((budget, d), inputs.dtype).at[flat_dest].set(
+        inputs.reshape(C * S_max, d), mode="drop")
+    seg = jnp.full((budget,), -1, jnp.int32).at[flat_dest].set(
+        jnp.repeat(jnp.arange(C, dtype=jnp.int32), S_max), mode="drop")
+    slot = jnp.zeros((budget,), jnp.int32).at[flat_dest].set(
+        jnp.tile(jnp.arange(S_max, dtype=jnp.int32), C), mode="drop")
+    return Packed(buf=buf, seg_ids=seg, slot_pos=slot, lengths=lengths, offsets=offsets)
+
+
+def unpack(packed: Packed, buf: jnp.ndarray, S_max: int) -> jnp.ndarray:
+    """Gather a processed [budget, d'] buffer back to [C, S_max, d']."""
+    C = packed.lengths.shape[0]
+    pos = jnp.arange(S_max)[None, :]
+    valid = pos < packed.lengths[:, None]
+    src = jnp.where(valid, packed.offsets[:, None] + pos, buf.shape[0])  # OOB
+    out = buf.at[src.reshape(-1)].get(mode="fill", fill_value=0)
+    return out.reshape(C, S_max, buf.shape[-1])
+
+
+def packed_positions(packed: Packed) -> jnp.ndarray:
+    """Per-slot sequence positions (for RoPE over packed token streams)."""
+    return packed.slot_pos
+
+
+def live_token_count(packed: Packed) -> jnp.ndarray:
+    return packed.lengths.sum()

@@ -1,0 +1,64 @@
+"""Activation privacy for multi-tenancy (paper §3.8).
+
+Threat model: the base-executor service provider observes the activations a
+client ships to frozen base layers and could extract the client's adapter
+parameters (model-extraction: with LoRA, (C - B)/A in Fig 8). Defense: the
+client adds noise ``n`` to the activations; the *noise effect*
+``n_eff = n @ W`` is computed ONCE per noise value via a bias-free executor
+flow, and subtracted from every noisy output:
+
+    y = ((x + n) @ W + b) - (n @ W)  ==  x @ W + b      (exact, linearity)
+
+Non-linear base layers cannot be protected this way — the paper restricts the
+mechanism to nn.Linear/Conv1D, which is what the base executor serves.
+
+Multiple pre-generated noise vectors are rotated across layers/iterations
+(key-indexed) so the executor cannot align observed noisy activations with a
+single noise value.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_noise(key, paths_dims, n_variants: int = 2, scale: float = 1.0,
+               dtype=jnp.float32):
+    """Per-path noise bank: path -> [n_variants, din]."""
+    noise = {}
+    for i, (path, (din, _dout)) in enumerate(sorted(paths_dims.items())):
+        noise[path] = (jax.random.normal(jax.random.fold_in(key, i),
+                                         (n_variants, din), jnp.float32) * scale).astype(dtype)
+    return noise
+
+
+def noise_effect(noise, weights):
+    """Pre-compute n_eff = n @ W for every (path, variant).
+
+    ``weights``: path -> W [din, dout] (or stacked [L, din, dout]; the leading
+    layer axis broadcasts through the einsum). This is the bias-free executor
+    flow of §3.8: the base executor computes Conv1D(n, W) with b nulled.
+    """
+    eff = {}
+    for path, n in noise.items():
+        w = weights[path]
+        if w.ndim == 2:
+            eff[path] = jnp.einsum("vi,io->vo", n.astype(w.dtype), w)
+        else:  # [L, din, dout] stacked base layers
+            eff[path] = jnp.einsum("vi,lio->lvo", n.astype(w.dtype), w)
+    return eff
+
+
+def private_dense(base_dense, x, w, b, path, n, n_eff):
+    """One private base-layer invocation.
+
+    n [din], n_eff [dout] — the variant has been selected by the caller.
+    ``base_dense`` is the (possibly memory-optimized) frozen linear.
+    """
+    y_noisy = base_dense(x + n.astype(x.dtype), w, b)
+    return y_noisy - n_eff.astype(y_noisy.dtype)
+
+
+def select_variant(noise_or_eff, path, variant):
+    bank = noise_or_eff[path]
+    return jax.lax.dynamic_index_in_dim(bank, variant, axis=bank.ndim - 2, keepdims=False)

@@ -1,0 +1,184 @@
+"""Opportunistic batching policies (paper §3.7, Tables 4/5).
+
+Event-driven engine over the base executor. Each client alternates
+client-side compute (attention/adapter — duration from its cost model) with
+a base-layer request per layer. The base executor serializes batched
+executions; the policy decides how long a layer batch may wait:
+
+* ``lockstep``     — a layer executes only when ALL active clients' requests
+                     for that layer have arrived (torch autograd semantics;
+                     what vLLM-style co-batching imposes).
+* ``nolockstep``   — every request executes immediately, batch of 1.
+* ``opportunistic``— a request waits at most ``wait_fraction`` × its own
+                     iteration cost; whatever accumulated is batched. Large
+                     (prefill/fine-tune) requests tolerate longer waits than
+                     latency-sensitive decodes — the paper's size-aware rule.
+
+The engine is a simulation *calibrated with measured per-op costs* (see
+``base_executor.calibrate_layer_cost``); it optionally executes the real
+packed matmuls to validate that batching preserves outputs.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class ClientSpec:
+    client_id: int
+    n_tokens: int                 # tokens per base-layer request
+    client_side_time: float       # seconds of client-side compute per layer
+    n_iterations: int = 1         # fine-tune steps or decode tokens to run
+    latency_sensitive: bool = False
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    per_client_latency: Dict[int, float]
+    avg_batch_size: float
+    total_tokens: int
+    throughput: float
+    n_executions: int
+
+    def summary(self):
+        lat = sum(self.per_client_latency.values()) / max(1, len(self.per_client_latency))
+        return {"throughput_tok_s": self.throughput, "mean_latency_s": lat,
+                "avg_batch": self.avg_batch_size, "makespan_s": self.makespan}
+
+
+def simulate(clients: List[ClientSpec], n_layers: int, policy: str,
+             exec_overhead: float, per_token_cost: float,
+             wait_fraction: float = 0.1, backward: bool = False) -> SimResult:
+    """Run the event-driven engine (work-conserving executor).
+
+    A layer batch becomes *ready* per the policy (immediately / when all
+    active clients arrived / after a size-aware deadline); the executor,
+    when idle, dispatches the oldest ready layer with EVERYTHING pending on
+    it — so batches keep accumulating while the executor is busy, like a
+    real serving queue.
+
+    backward=True doubles the layer walk (fine-tuning fwd+bwd; the §3.6
+    memory-optimized backward lets batches differ between fwd and bwd —
+    lockstep mode forbids that, per the paper)."""
+    total_layers = n_layers * (2 if backward else 1)
+
+    events = []                      # (time, seq, kind, payload)
+    seq = 0
+
+    def push(t, kind, payload):
+        nonlocal seq
+        heapq.heappush(events, (t, seq, kind, payload))
+        seq += 1
+
+    iters_left = {c.client_id: c.n_iterations for c in clients}
+    spec = {c.client_id: c for c in clients}
+    start_time = {c.client_id: 0.0 for c in clients}
+    latencies: Dict[int, List[float]] = {c.client_id: [] for c in clients}
+
+    pending: Dict[int, List] = {}    # layer -> [(client_id, arrive_t)]
+    ready_at: Dict[int, float] = {}  # layer -> time it became ready
+    exec_busy = False
+    n_exec = 0
+    batch_sizes = []
+
+    def exec_cost(tokens):
+        return exec_overhead + tokens * per_token_cost
+
+    def mark_ready(layer, t):
+        if layer in pending and pending[layer] and layer not in ready_at:
+            ready_at[layer] = t
+
+    def try_dispatch(now):
+        nonlocal exec_busy, n_exec
+        if exec_busy:
+            return
+        if ready_at:
+            layer = min(ready_at, key=ready_at.get)
+            del ready_at[layer]
+        elif policy == "opportunistic" and pending:
+            # work-conserving: an idle executor never waits on a deadline —
+            # the wait only lets batches grow while the executor is BUSY.
+            layer = min(pending, key=lambda l: pending[l][0][1])
+        else:
+            return
+        if policy == "nolockstep":
+            entries = [pending[layer].pop(0)]
+            if not pending[layer]:
+                del pending[layer]
+            else:
+                ready_at[layer] = now          # rest remains ready
+        else:
+            entries = pending.pop(layer)
+        tokens = sum(spec[cid].n_tokens for cid, _ in entries)
+        exec_busy = True
+        n_exec += 1
+        batch_sizes.append(len(entries))
+        push(now + exec_cost(tokens), "exec_done", (layer, entries))
+
+    active = {c.client_id for c in clients}
+
+    def lockstep_check(now):
+        for lay in list(pending):
+            if pending[lay] and {e[0] for e in pending[lay]} >= active:
+                mark_ready(lay, now)
+
+    for c in clients:
+        push(c.client_side_time, "request", (c.client_id, 0))
+
+    now = 0.0
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == "request":
+            cid, layer = payload
+            if layer >= total_layers:
+                latencies[cid].append(now - start_time[cid])
+                iters_left[cid] -= 1
+                if iters_left[cid] > 0:
+                    start_time[cid] = now
+                    push(now + spec[cid].client_side_time, "request", (cid, 0))
+                else:
+                    active.discard(cid)
+                    if policy == "lockstep":
+                        lockstep_check(now)
+                        try_dispatch(now)
+                continue
+            pending.setdefault(layer, []).append((cid, now))
+            if policy == "nolockstep":
+                mark_ready(layer, now)
+            elif policy == "lockstep":
+                lockstep_check(now)
+            else:  # opportunistic: size-aware deadline
+                iter_cost = spec[cid].client_side_time + exec_cost(spec[cid].n_tokens)
+                wait = (0.0 if spec[cid].latency_sensitive
+                        else wait_fraction * iter_cost)
+                if wait == 0.0:
+                    mark_ready(layer, now)
+                else:
+                    push(now + wait, "deadline", layer)
+            try_dispatch(now)
+        elif kind == "deadline":
+            mark_ready(payload, now)
+            try_dispatch(now)
+        elif kind == "exec_done":
+            layer, entries = payload
+            exec_busy = False
+            for cid, _ in entries:
+                push(now + spec[cid].client_side_time, "request",
+                     (cid, layer + 1))
+            try_dispatch(now)
+
+    per_client = {cid: (sum(ls) / len(ls) if ls else 0.0)
+                  for cid, ls in latencies.items()}
+    makespan = now
+    tokens_total = sum(c.n_tokens * c.n_iterations for c in clients)
+    return SimResult(
+        makespan=makespan,
+        per_client_latency=per_client,
+        avg_batch_size=(sum(batch_sizes) / len(batch_sizes)) if batch_sizes else 0.0,
+        total_tokens=tokens_total,
+        throughput=tokens_total / max(makespan, 1e-9),
+        n_executions=n_exec,
+    )

@@ -1,0 +1,202 @@
+"""Symbiosis system composition — the paper's contribution as a composable
+JAX module.
+
+Builds the multi-client steps in which ONE frozen base-parameter tree serves
+a *bank* of clients (fine-tuning trainers and/or inference sessions):
+
+* ``make_multi_client_train_step`` — C clients fine-tune their own adapters
+  against the shared base. Client-side state (adapter params, AdamW state,
+  per-client batch) carries a leading client axis (vmapped); base matmuls see
+  the merged token batch, so cross-client batching happens inside one XLA
+  matmul — the in-graph form of the paper's base-executor batching (§3.7).
+* ``make_multi_client_decode_step`` / ``prefill`` — inference banks sharing
+  the base, one token per step per request against per-client KV caches.
+* ``make_mixed_step`` — inference + fine-tuning clients time-share the base
+  in one step (paper §4.4).
+
+The torch-like comparison baseline (each job re-differentiates a private
+base copy, saving activations) is available via
+``memory_optimized_backward=False`` + ``baseline_dedicated_base=True``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AdapterConfig, ModelConfig, TrainConfig, ServeConfig
+from repro.core import adapters as adapters_lib
+from repro.core.virtlayer import make_client_ctx
+from repro.models import get_model
+from repro.models.losses import lm_loss
+from repro.optim import adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+
+def init_system(cfg: ModelConfig, acfg: AdapterConfig, n_clients: int, key,
+                adapter_dtype=jnp.float32):
+    """Returns (base_params, client_bank_adapters, opt_state_bank)."""
+    k_base, k_bank = jax.random.split(key)
+    model = get_model(cfg)
+    base = model.init_params(k_base)
+    bank = adapters_lib.init_client_bank(cfg, acfg, n_clients, k_bank, adapter_dtype)
+    opt = jax.vmap(adamw_init)(bank)
+    return base, bank, opt
+
+
+# ---------------------------------------------------------------------------
+# Multi-client fine-tuning
+# ---------------------------------------------------------------------------
+
+def make_multi_client_train_step(cfg: ModelConfig, acfg: AdapterConfig,
+                                 tcfg: TrainConfig, *, moe_dispatch="scatter",
+                                 capacity_factor: float = 1.25):
+    model = get_model(cfg)
+    ctx = make_client_ctx(cfg, acfg, memory_optimized=tcfg.memory_optimized_backward)
+
+    def client_loss(adapter, base, batch):
+        logits, aux = model.forward(base, batch, ctx, adapter,
+                                    remat=tcfg.remat, moe_dispatch=moe_dispatch,
+                                    capacity_factor=capacity_factor)
+        return lm_loss(logits, batch["labels"], batch.get("mask"), aux)
+
+    grad_fn = jax.value_and_grad(client_loss)
+
+    def _grads(base, bank, batch):
+        """(losses [C], grads bank-tree). With tcfg.microbatch > 0 the
+        per-client batch axis is split into microbatches accumulated with
+        lax.scan — adapter grads are tiny, so accumulation is nearly free
+        while activation temps shrink by the microbatch factor."""
+        nmb = tcfg.microbatch
+        B = batch["tokens"].shape[1]
+        if not nmb or nmb <= 1 or B % nmb or B == nmb:
+            return jax.vmap(grad_fn, in_axes=(0, None, 0))(bank, base, batch)
+
+        def split(x):   # [C, B, ...] -> [nmb, C, B/nmb, ...]
+            return x.reshape(x.shape[0], nmb, B // nmb, *x.shape[2:]).swapaxes(0, 1)
+
+        mb = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), bank)
+
+        def body(carry, mbatch):
+            loss_acc, g_acc = carry
+            losses, grads = jax.vmap(grad_fn, in_axes=(0, None, 0))(bank, base, mbatch)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / nmb,
+                                 g_acc, grads)
+            return (loss_acc + losses / nmb, g_acc), None
+
+        (losses, grads), _ = jax.lax.scan(body, (jnp.zeros((losses_shape(bank),)),
+                                                 zero_g), mb)
+        return losses, grads
+
+    def losses_shape(bank):
+        return jax.tree.leaves(bank)[0].shape[0]
+
+    def train_step(base, bank, opt, batch, step):
+        """batch: pytree with leading [C, B, ...] axes; step: scalar int."""
+        lr = warmup_cosine(step, tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+        losses, grads = _grads(base, bank, batch)
+        new_bank, new_opt, gnorms = jax.vmap(
+            lambda p, g, s: adamw_update(p, g, s, lr,
+                                         weight_decay=tcfg.weight_decay,
+                                         max_grad_norm=tcfg.max_grad_norm)
+        )(bank, grads, opt)
+        return new_bank, new_opt, {"loss": losses, "gnorm": gnorms, "lr": lr}
+
+    return train_step
+
+
+def make_baseline_train_step(cfg: ModelConfig, acfg: AdapterConfig,
+                             tcfg: TrainConfig):
+    """Torch-like baseline: ONE client, differentiates through the base tree
+    (grads discarded) — forces activation residuals for every base linear,
+    emulating the paper's non-memory-optimized baseline for Fig 9/10."""
+    model = get_model(cfg)
+    ctx = make_client_ctx(cfg, acfg, memory_optimized=False)
+
+    def loss(adapter_and_base, batch):
+        adapter, base = adapter_and_base
+        logits, aux = model.forward(base, batch, ctx, adapter, remat=tcfg.remat)
+        return lm_loss(logits, batch["labels"], batch.get("mask"), aux)
+
+    def train_step(base, adapter, opt, batch, step):
+        lr = warmup_cosine(step, tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+        (l, grads) = jax.value_and_grad(loss)((adapter, base), batch)
+        g_adapter, _g_base_discarded = grads
+        adapter, opt, gnorm = adamw_update(adapter, g_adapter, opt, lr,
+                                           weight_decay=tcfg.weight_decay,
+                                           max_grad_norm=tcfg.max_grad_norm)
+        return adapter, opt, {"loss": l, "gnorm": gnorm, "lr": lr}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Multi-client inference
+# ---------------------------------------------------------------------------
+
+def make_multi_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
+                              scfg: ServeConfig, **ctx_kw):
+    model = get_model(cfg)
+    ctx = make_client_ctx(cfg, acfg, **ctx_kw)
+
+    def prefill(base, bank, caches, batch):
+        """batch tokens [C, B, S]; caches with leading [C]."""
+        def one(adapter, cache, b):
+            return model.prefill(base, b, cache, ctx, adapter)
+        return jax.vmap(one, in_axes=(0, 0, 0))(bank, caches, batch)
+
+    return prefill
+
+
+def make_multi_client_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
+                                  scfg: ServeConfig, *, ring: bool = False, **ctx_kw):
+    model = get_model(cfg)
+    ctx = make_client_ctx(cfg, acfg, **ctx_kw)
+    kw = {"ring": True} if ring else {}
+
+    def decode(base, bank, caches, tokens):
+        """tokens [C, B] -> (logits [C, B, V], new caches)."""
+        def one(adapter, cache, tok):
+            return model.decode_step(base, cache, tok, ctx, adapter, **kw)
+        return jax.vmap(one, in_axes=(0, 0, 0))(bank, caches, tokens)
+
+    return decode
+
+
+def init_client_caches(cfg: ModelConfig, n_clients: int, batch: int, max_seq: int,
+                       dtype=None, *, window: int = 0, quant: bool = False):
+    model = get_model(cfg)
+    kw = {}
+    if window:
+        kw["window"] = window
+    if quant:
+        kw["quant"] = True
+    one = model.init_cache(batch, max_seq, dtype, **kw)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape)
+                        .copy(), one)
+
+
+# ---------------------------------------------------------------------------
+# Mixed inference + fine-tuning (paper §4.4)
+# ---------------------------------------------------------------------------
+
+def make_mixed_step(cfg: ModelConfig, acfg: AdapterConfig, tcfg: TrainConfig,
+                    scfg: ServeConfig):
+    """One step: FT clients take a train step while inference clients decode,
+    all against the same resident base params."""
+    train_step = make_multi_client_train_step(cfg, acfg, tcfg)
+    decode_step = make_multi_client_decode_step(cfg, acfg, scfg)
+
+    def mixed(base, ft_bank, ft_opt, ft_batch, inf_bank, inf_caches, inf_tokens, step):
+        ft_bank, ft_opt, metrics = train_step(base, ft_bank, ft_opt, ft_batch, step)
+        logits, inf_caches = decode_step(base, inf_bank, inf_caches, inf_tokens)
+        return ft_bank, ft_opt, inf_caches, logits, metrics
+
+    return mixed

@@ -1,0 +1,113 @@
+"""VirtLayer: the client-side splice that redirects frozen base layers
+(paper §3.2, Figure 4) — JAX form.
+
+In the paper, VirtLayer is an nn.Module stand-in that ships activations to
+the base executor over IPC/NCCL. In SPMD JAX the "redirection" is a
+compile-time graph splice: ``make_client_ctx`` builds a ``LinCtx`` whose
+LinearFns (1) run the frozen base matmul with the memory-optimized backward
+(§3.6), (2) apply the client's PEFT adapter for targeted paths, and (3)
+optionally wrap the call in the §3.8 noise-privacy protocol. Model code is
+untouched (paper design goal 3) — the hook threads through every
+architecture in ``repro.models``.
+
+The per-layer adapter/privacy state rides the layer scan as a sliced pytree;
+``for_layer`` binds one layer's slice into the hook.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AdapterConfig, ModelConfig
+from repro.core import adapters as adapters_lib
+from repro.core import privacy as privacy_lib
+from repro.core.frozen_linear import frozen_dense, frozen_expert
+from repro.models.blocks import LinearFns
+from repro.models.transformer import LinCtx
+
+PRIV_KEY = "_priv"
+
+
+def _plain_dense(x, w, b, path):
+    y = jnp.einsum("...i,io->...o", x, w)
+    return y + b if b is not None else y
+
+
+def _plain_expert(x, w, path):
+    return jnp.einsum("eci,eio->eco", x, w)
+
+
+def make_client_ctx(cfg: ModelConfig, acfg: Optional[AdapterConfig] = None, *,
+                    memory_optimized: bool = True,
+                    privacy_noise=None, privacy_variant=0) -> LinCtx:
+    """Build the Symbiosis client context.
+
+    memory_optimized=False emulates the torch-style baseline in which base
+    activations are saved for the backward pass (used for the Fig 9/10
+    memory comparison).
+    privacy_noise: path -> [V, din] noise bank (client secret). The matching
+    per-layer noise effects must have been attached to the adapter tree via
+    ``attach_privacy``.
+    """
+    base_dense = frozen_dense if memory_optimized else _plain_dense_nohook
+    base_expert = frozen_expert if memory_optimized else _plain_expert_nohook
+
+    def for_layer(ad_slice) -> LinearFns:
+        priv_eff = None
+        if isinstance(ad_slice, dict) and PRIV_KEY in ad_slice:
+            priv_eff = ad_slice[PRIV_KEY]
+
+        def dense(x, w, b, path):
+            if acfg is not None:
+                x = adapters_lib.pre_scale(x, path, ad_slice, acfg, cfg)
+            if priv_eff is not None and path in priv_eff:
+                n = privacy_lib.select_variant(privacy_noise, path, privacy_variant)
+                eff = jax.lax.stop_gradient(priv_eff[path])[privacy_variant]
+                y = privacy_lib.private_dense(base_dense, x, w, b, path, n, eff)
+            else:
+                y = base_dense(x, w, b)
+            if acfg is not None:
+                y = adapters_lib.apply_adapter(y, x, path, ad_slice, acfg, cfg)
+            return y
+
+        def expert(x, w, path):
+            return base_expert(x, w)
+
+        return LinearFns(dense=dense, expert=expert)
+
+    top = LinearFns(dense=lambda x, w, b, path: base_dense(x, w, b),
+                    expert=lambda x, w, path: base_expert(x, w))
+    return LinCtx(top=top, for_layer=for_layer)
+
+
+def _plain_dense_nohook(x, w, b=None):
+    y = jnp.einsum("...i,io->...o", x, w)
+    return y + b if b is not None else y
+
+
+def _plain_expert_nohook(x, w):
+    return jnp.einsum("eci,eio->eco", x, w)
+
+
+def attach_privacy(adapter_tree, cfg: ModelConfig, base_params, noise,
+                   container: str = "layers"):
+    """Insert per-layer noise effects (n_eff = n @ W_layer) into the adapter
+    tree so they ride the layer scan next to the adapter weights.
+
+    Supports the dense/moe/vlm container layout ('layers'; leaves are stacked
+    [L, din, dout]). Returns a new adapter tree with `_priv` per layer.
+    """
+    attn = base_params[container]["attn"]
+    weights = {"q": attn["wq"], "k": attn["wk"], "v": attn["wv"], "o": attn["wo"]}
+    if "mlp" in base_params[container]:
+        mlp = base_params[container]["mlp"]
+        if "gate" in mlp:
+            weights.update(gate=mlp["gate"], up=mlp["up"], down=mlp["down"])
+    eff = privacy_lib.noise_effect(noise, {p: w for p, w in weights.items() if p in noise})
+    out = dict(adapter_tree) if adapter_tree else {}
+    layers = dict(out.get(container) or {})
+    layers[PRIV_KEY] = eff            # each leaf [L, V, dout] -> sliced per layer
+    out[container] = layers
+    return out

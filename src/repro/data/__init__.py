@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMDataset, make_client_batches, frontend_stub

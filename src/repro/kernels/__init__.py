@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §7).
+
+sgmv          — multi-adapter LoRA gather-matmul over packed tokens
+ragged_linear — token-packed frozen base linear (no-padding batching, §3.7)
+decode_attn   — blocked GQA decode attention (online softmax, KV streaming)
+flash_attn    — causal GQA flash attention fwd (prefill/train hot path; the
+                VMEM-resident-carry fix for the roofline's memory term)
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper: padding/dispatch/fallback), ref.py (pure-jnp oracle).
+"""
+from repro.kernels.sgmv import sgmv, sgmv_ref
+from repro.kernels.ragged_linear import ragged_linear, ragged_linear_ref
+from repro.kernels.decode_attn import decode_attn, decode_attn_ref
+from repro.kernels.flash_attn import flash_attn, flash_attn_ref

@@ -1,0 +1,106 @@
+"""Blocked GQA decode attention — Pallas TPU kernel (online softmax).
+
+The client-side hot op for decode_32k / long_500k: one query token attends
+to a seq_len-deep KV cache. The cache never fits VMEM, so it is streamed
+HBM→VMEM in ``block_kv`` chunks while a running (max, denominator, weighted
+accumulator) triple lives in VMEM scratch — flash-decoding restructured for
+the TPU: the KV axis is the *innermost sequential grid dimension* (Pallas
+TPU grids iterate sequentially per core, so the scratch carries state), and
+the G query heads of one KV group form the MXU's M dimension.
+
+Grid (B, K, T/block_kv); the per-batch valid length is scalar-prefetched so
+fully-masked chunks are skipped (long_500k with short live prefixes pays
+only for live cache).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+_NEG = -1e30
+
+
+def _da_kernel(pos,                    # scalar-prefetch [B] int32
+               q_ref,                  # [1, 1, G, hd]
+               k_ref,                  # [1, bkv, 1, hd]
+               v_ref,                  # [1, bkv, 1, hd]
+               o_ref,                  # [1, 1, G, hd]
+               m_ref, l_ref, acc_ref,  # scratch [G,128],[G,128],[G,hd] f32
+               *, block_kv: int, n_kv: int, window: int):
+    b = pl.program_id(0)
+    c = pl.program_id(2)
+    t0 = c * block_kv
+    p = pos[b]
+
+    @pl.when(c == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # chunk live iff it intersects [max(0, p-window+1), p]
+    lo = (p - window + 1) if window else 0
+    live = (t0 <= p) & (t0 + block_kv > lo)
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [G, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [bkv, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)               # [bkv, hd]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [G, bkv]
+        s = s * (1.0 / math.sqrt(q.shape[-1]))
+        t = t0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = t <= p
+        if window:
+            mask &= (p - t) < window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, :1]                                # [G,1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        ps = jnp.exp(s - m_new)                              # [G, bkv]
+        l_ref[:, :1] = l_ref[:, :1] * alpha + ps.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            ps, v, preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(c == n_kv - 1)
+    def _():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attn_pallas(q, k, v, pos, *, block_kv: int = 512, window: int = 0,
+                       interpret: bool = False):
+    """q [B, K, G, hd]; k/v [B, T, K, hd]; pos [B]. T % block_kv == 0."""
+    B, K, G, hd = q.shape
+    T = k.shape[1]
+    n_kv = T // block_kv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, c, pos: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b, h, c, pos: (b, c, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b, h, c, pos: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, c, pos: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_da_kernel, block_kv=block_kv, n_kv=n_kv, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k, v)

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for blocked GQA decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.decode_attn import decode_attn_pallas
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "window",
+                                             "use_kernel", "interpret"))
+def decode_attn(q, k, v, pos, *, block_kv: int = 512, window: int = 0,
+                use_kernel: bool = True, interpret: bool = True):
+    """Single-token GQA decode attention. q [B,K,G,hd]; k/v [B,T,K,hd];
+    pos [B] int32 last-valid index. Optional sliding window."""
+    if not use_kernel:
+        return decode_attn_ref(q, k, v, pos, window=window)
+    T = k.shape[1]
+    bkv = min(block_kv, T)
+    pad = (-T) % bkv
+    if pad:
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k, v = zeros(k), zeros(v)
+    return decode_attn_pallas(q, k, v, pos, block_kv=bkv, window=window,
+                              interpret=interpret)

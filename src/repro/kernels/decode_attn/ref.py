@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for blocked GQA decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q, k, v, pos, *, window: int = 0):
+    """Single-token GQA attention against a KV cache.
+
+    q [B, K, G, hd]; k/v [B, T, K, hd]; pos [B] int32 (last valid index).
+    Optional sliding window. Returns out [B, K, G, hd].
+    """
+    hd = q.shape[-1]
+    T = k.shape[1]
+    s = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    t = jnp.arange(T)[None, :]
+    valid = t <= pos[:, None]
+    if window:
+        valid &= (pos[:, None] - t) < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

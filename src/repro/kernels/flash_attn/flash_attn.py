@@ -1,0 +1,114 @@
+"""Causal GQA flash attention (prefill/train forward) — Pallas TPU kernel.
+
+The §Perf it1 lesson made concrete: a lax.scan online-softmax pays HBM
+loop-carry traffic per KV block; a KERNEL keeps the running (max, denom,
+accumulator) in VMEM scratch across the sequential KV grid dimension, so the
+only HBM traffic is Q/K/V reads + one output write — the roofline's memory
+term drops from O(S·T) score bytes to O(S·hd + T·hd).
+
+Grid (B, H, nq, nkv), nkv innermost (sequential per core on TPU). Causality
+prunes whole KV blocks: block j is skipped unless its start <= the q-block's
+last position (and, with a sliding window, unless it intersects the window).
+GQA: the kv head for q-head h is h // G via the BlockSpec index_map — no
+KV replication materializes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _fa_kernel(q_ref,                  # [1, bq, 1, hd]
+               k_ref, v_ref,           # [1, bkv, 1, hd]
+               o_ref,                  # [1, bq, 1, hd]
+               m_ref, l_ref, acc_ref,  # scratch [bq,128],[bq,128],[bq,hd]
+               *, block_q: int, block_kv: int, n_kv: int, window: int,
+               causal: bool):
+    i = pl.program_id(2)               # q block
+    j = pl.program_id(3)               # kv block
+    q0 = i * block_q
+    t0 = j * block_kv
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block pruning: kv block must start at/before the q block's end;
+    # with a window it must also reach past the q block's trailing edge.
+    live = True
+    if causal:
+        live = t0 <= q0 + block_q - 1
+        if window:
+            live &= (t0 + block_kv) > (q0 - window + 1)
+
+    @pl.when(live if causal else True)
+    def _():
+        q = q_ref[0, :, 0].astype(jnp.float32)               # [bq, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [bkv, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(q.shape[-1]))
+        if causal:
+            qp = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kp = t0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = qp >= kp
+            if window:
+                mask &= (qp - kp) < window
+            s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, :, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attn_pallas(q, k, v, *, block_q: int = 256, block_kv: int = 512,
+                      causal: bool = True, window: int = 0,
+                      interpret: bool = False):
+    """q [B,S,H,hd]; k/v [B,T,K,hd], H % K == 0, S % block_q == 0,
+    T % block_kv == 0."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    nq, nkv = S // block_q, T // block_kv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, block_q=block_q, block_kv=block_kv,
+                          n_kv=nkv, window=window, causal=causal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.flash_attn import flash_attn_pallas
+from repro.kernels.flash_attn.ref import flash_attn_ref
+
+
+def _pad_axis(x, axis, multiple):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "causal",
+                                             "window", "use_kernel",
+                                             "interpret"))
+def flash_attn(q, k, v, *, block_q: int = 256, block_kv: int = 512,
+               causal: bool = True, window: int = 0,
+               use_kernel: bool = True, interpret: bool = True):
+    """Causal GQA flash attention. q [B,S,H,hd]; k/v [B,T,K,hd].
+    Arbitrary S/T (auto-padded; padded kv masked by causality iff causal —
+    for non-causal inputs T must already divide block_kv)."""
+    if not use_kernel:
+        return flash_attn_ref(q, k, v, causal=causal, window=window)
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    bq = min(block_q, max(8, S))
+    bkv = min(block_kv, max(8, T))
+    qp = _pad_axis(q, 1, bq)
+    kp = _pad_axis(k, 1, bkv)
+    vp = _pad_axis(v, 1, bkv)
+    if not causal and kp.shape[1] != T:
+        raise ValueError("non-causal flash_attn requires T % block_kv == 0")
+    out = flash_attn_pallas(qp, kp, vp, block_q=bq, block_kv=bkv,
+                            causal=causal, window=window, interpret=interpret)
+    return out[:, :S]

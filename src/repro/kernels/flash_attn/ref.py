@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for causal GQA flash attention (prefill/train forward)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attn_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,S,H,hd]; k/v [B,T,K,hd] (H % K == 0). Self-attention positions
+    are the natural ranges (prefill: q position i attends kv <= i).
+    Returns [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vr = jnp.repeat(v, G, axis=2) if G > 1 else v
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        qp = jnp.arange(S)[:, None]
+        kp = jnp.arange(T)[None, :]
+        m = qp >= kp
+        if window:
+            m &= (qp - kp) < window
+        s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

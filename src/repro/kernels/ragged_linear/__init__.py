@@ -1,0 +1,2 @@
+from repro.kernels.ragged_linear.ops import ragged_linear
+from repro.kernels.ragged_linear.ref import ragged_linear_ref

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for the ragged (token-packed) base linear."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ragged_linear.ref import ragged_linear_ref
+from repro.kernels.ragged_linear.ragged_linear import ragged_linear_pallas
+
+
+def _pad_to(x, axis, multiple):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
+                                             "block_t", "block_d", "block_k"))
+def ragged_linear(buf, w, b=None, n_live=None, *, use_kernel: bool = True,
+                  interpret: bool = True, block_t: int = 256,
+                  block_d: int = 512, block_k: int = 512):
+    """Packed-buffer frozen linear: buf [budget, din] @ w [din, dout] (+ b),
+    slots >= n_live zeroed. Arbitrary shapes (auto-padded to tiles)."""
+    budget, din = buf.shape
+    dout = w.shape[-1]
+    if n_live is None:
+        n_live = budget
+    if not use_kernel:
+        return ragged_linear_ref(buf, w, b, n_live)
+
+    bt = min(block_t, max(8, budget))
+    bd = min(block_d, max(128, dout))
+    bk = min(block_k, max(128, din))
+    bufp = _pad_to(_pad_to(buf, 0, bt), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bd)
+    bp = _pad_to(b, 0, bd) if b is not None else None
+    y = ragged_linear_pallas(bufp, wp, bp, n_live, block_t=bt, block_d=bd,
+                             block_k=bk, interpret=interpret)
+    return y[:budget, :dout]

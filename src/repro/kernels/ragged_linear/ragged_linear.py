@@ -1,0 +1,82 @@
+"""Token-packed frozen base linear — Pallas TPU kernel.
+
+The in-graph form of the paper's §3.7 "flatten batch×seq into a 1-D token
+stream, no padding" base-executor execution: the packed buffer has a static
+token *budget* but only ``n_live`` slots are real. The kernel tiles
+[budget, din] @ [din, dout] for the MXU and uses the scalar-prefetched live
+count to SKIP whole token blocks past the live watermark (``pl.when``) — the
+TPU analogue of not spending FLOPs on padding.
+
+Grid (nt, nd, nk): token tiles × dout tiles × din tiles, din innermost for
+fp32 accumulation in a VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rl_kernel(n_live,                 # scalar-prefetch [1] int32
+               x_ref,                  # [bt, bk]
+               w_ref,                  # [bk, bd]
+               b_ref,                  # [1, bd] (zeros when no bias)
+               y_ref,                  # [bt, bd]
+               acc_ref,                # scratch [bt, bd] f32
+               *, block_t: int, n_k: int):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+    live = i * block_t < n_live[0]     # any live token in this tile?
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _():
+        acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                                w_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        out = acc_ref[...] + b_ref[0].astype(jnp.float32)
+        # mask the intra-tile tail so dead slots emit exact zeros
+        t0 = i * block_t
+        row = t0 + jax.lax.broadcasted_iota(jnp.int32, out.shape, 0)
+        out = jnp.where(row < n_live[0], out, 0.0)
+        y_ref[...] = out.astype(y_ref.dtype)
+
+
+def ragged_linear_pallas(buf, w, b, n_live, *, block_t: int = 256,
+                         block_d: int = 512, block_k: int = 512,
+                         interpret: bool = False):
+    """buf [budget, din] @ w [din, dout] + b, rows >= n_live zeroed.
+    budget % block_t == 0, dout % block_d == 0, din % block_k == 0."""
+    budget, din = buf.shape
+    dout = w.shape[-1]
+    nt, nd, nk = budget // block_t, dout // block_d, din // block_k
+    if b is None:
+        b = jnp.zeros((dout,), buf.dtype)
+    n_live = jnp.asarray(n_live, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, nd, nk),
+        in_specs=[
+            pl.BlockSpec((block_t, block_k), lambda i, j, k, nl: (i, k)),
+            pl.BlockSpec((block_k, block_d), lambda i, j, k, nl: (k, j)),
+            pl.BlockSpec((1, block_d), lambda i, j, k, nl: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_d), lambda i, j, k, nl: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_t, block_d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_rl_kernel, block_t=block_t, n_k=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((budget, dout), buf.dtype),
+        interpret=interpret,
+    )(n_live, buf, w, b.reshape(1, dout))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the token-packed frozen base linear."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ragged_linear_ref(buf, w, b, n_live):
+    """y = buf @ w (+ b) with rows >= n_live zeroed.
+
+    buf [budget, din]; w [din, dout]; b [dout] or None; n_live scalar int32.
+    The zeroing reproduces the packed-buffer contract: dead slots hold
+    garbage and must not leak into unpacked outputs.
+    """
+    y = jnp.einsum("ti,io->to", buf.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    live = (jnp.arange(buf.shape[0]) < n_live)[:, None]
+    return jnp.where(live, y, 0.0).astype(buf.dtype)

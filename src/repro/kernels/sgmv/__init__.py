@@ -1,0 +1,2 @@
+from repro.kernels.sgmv.ops import sgmv
+from repro.kernels.sgmv.ref import sgmv_ref

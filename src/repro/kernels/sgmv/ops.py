@@ -1,0 +1,48 @@
+"""Jit'd public wrapper for the SGMV kernel (padding + dispatch + fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sgmv.ref import sgmv_ref
+from repro.kernels.sgmv.sgmv import sgmv_pallas_safe
+
+
+def _pad_to(x, axis, multiple):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d", "scale",
+                                             "use_kernel", "interpret"))
+def sgmv(x, A, B, block_adapter, *, block_t: int = 128, block_d: int = 512,
+         scale: float = 1.0, use_kernel: bool = True, interpret: bool = True):
+    """Multi-adapter LoRA delta over a packed token buffer.
+
+    x [T, din]; A [n, din, r]; B [n, r, dout]; block_adapter [T // block_t]
+    (id per token block; negative = dead block). Arbitrary shapes — padding
+    to tile multiples is handled here. ``interpret=True`` is the CPU default
+    (this container); on TPU pass interpret=False.
+    """
+    if not use_kernel:
+        return sgmv_ref(x, A, B, block_adapter, block_t=block_t, scale=scale)
+
+    T0, dout0 = x.shape[0], B.shape[-1]
+    x, _ = _pad_to(x, 0, block_t)
+    nb = x.shape[0] // block_t
+    ids = jnp.full((nb,), -1, jnp.int32).at[:block_adapter.shape[0]].set(block_adapter)
+    # pad rank to the fp32 sublane tile and dout to the lane tile
+    A, _ = _pad_to(A, 2, 8)
+    B, _ = _pad_to(B, 1, 8)
+    bd = min(block_d, max(128, dout0))
+    B, _ = _pad_to(B, 2, bd)
+    y = sgmv_pallas_safe(x, A, B, ids, block_t=block_t, block_d=bd,
+                         scale=scale, interpret=interpret)
+    return y[:T0, :dout0]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SGMV (segmented gather matrix-vector) LoRA op."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgmv_ref(x, A, B, block_adapter, *, block_t: int, scale: float = 1.0):
+    """Segmented LoRA delta over a token-packed buffer.
+
+    x [T, din] — packed tokens; T % block_t == 0, and every block of
+        ``block_t`` tokens belongs to a single adapter (the scheduler pads
+        client segments to the tile size, like Punica/S-LoRA).
+    A [n_adapters, din, r]; B [n_adapters, r, dout].
+    block_adapter [T // block_t] int32 — adapter id per token block
+        (negative id = dead block → zero output).
+    Returns y [T, dout] = (x @ A[a]) @ B[a] * scale per block.
+    """
+    T, din = x.shape
+    nb = T // block_t
+    r = A.shape[-1]
+    dout = B.shape[-1]
+    xb = x.reshape(nb, block_t, din)
+    a = jnp.clip(block_adapter, 0, A.shape[0] - 1)
+    Ab = A[a]                                  # [nb, din, r]
+    Bb = B[a]                                  # [nb, r, dout]
+    h = jnp.einsum("bti,bir->btr", xb.astype(jnp.float32), Ab.astype(jnp.float32))
+    y = jnp.einsum("btr,bro->bto", h, Bb.astype(jnp.float32)) * scale
+    y = jnp.where((block_adapter >= 0)[:, None, None], y, 0.0)
+    return y.reshape(T, dout).astype(x.dtype)

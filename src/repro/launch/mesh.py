@@ -1,0 +1,41 @@
+"""Production meshes (DESIGN.md §5).
+
+Single pod: (data=16, model=16) = 256 v5e chips. Multi-pod adds a leading
+DCN-connected ``pod`` axis: (pod=2, data=16, model=16) = 512 chips.
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """1-chip mesh with the production axis names (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def batch_axes(mesh) -> tuple:
+    """The axes a leading batch/client dimension shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_size(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,97 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(n):
+    return f"{n/1e9:.2f}GB" if n >= 1e8 else f"{n/1e6:.1f}MB"
+
+
+def roofline_table(recs, mesh="pod16x16", tag=""):
+    rows = []
+    hdr = ("| arch | shape | C×B | compute s | memory s | collective s | "
+           "bound | HBM/dev args+temp | MODEL/HLO flops |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for r in recs:
+        if not r.get("ok") or r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0))
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['n_clients']}×{r['batch_per_client']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | **{rl['dominant']}** "
+            f"| {hbm/1e9:.1f}GB | {ratio:.2f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | lower s | compile s | devices | "
+            "collective bytes/dev | per-dev args |",
+            "|" + "---|" * 8]
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        mem = r.get("memory", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['lower_s']} "
+            f"| {r['compile_s']} | {r['n_devices']} "
+            f"| {fmt_bytes(r['walker']['coll_bytes'])} "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes', 0))} |")
+    return "\n".join(rows)
+
+
+def summarize(recs):
+    ok = [r for r in recs if r.get("ok")]
+    by_mesh = {}
+    for r in ok:
+        by_mesh.setdefault(r["mesh"], []).append(r)
+    lines = [f"total runs: {len(ok)}"]
+    for m, rs in sorted(by_mesh.items()):
+        doms = {}
+        for r in rs:
+            doms[r["roofline"]["dominant"]] = doms.get(
+                r["roofline"]["dominant"], 0) + 1
+        lines.append(f"  {m}: {len(rs)} ok; dominant terms: {doms}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--table", choices=("roofline", "dryrun", "summary"),
+                    default="summary")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.table == "roofline":
+        print(roofline_table(recs, mesh=args.mesh))
+    elif args.table == "dryrun":
+        print(dryrun_table(recs))
+    else:
+        print(summarize(recs))
+
+
+if __name__ == "__main__":
+    main()

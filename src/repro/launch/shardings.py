@@ -1,0 +1,175 @@
+"""Sharding plans: path/shape rules -> PartitionSpec trees (DESIGN.md §5).
+
+Base params:   tensor-parallel over ``model`` (column-parallel up/qkv,
+               row-parallel down/o — with the GQA kv-replication caveat:
+               q/o shard only when H % model == 0, kv only when
+               K % model == 0, else replicated), expert-parallel MoE
+               (experts over ``model``), replicated over data/pod.
+Client state:  leading client axis over (pod, data); KV-cache T axis over
+               ``model`` (flash-decode style cross-chip cache split);
+               RWKV wkv-state heads / Mamba expanded-dim over ``model``.
+Batches:       leading client axis over (pod, data).
+
+Every rule checks divisibility and falls back to replication — the plan is
+total over any architecture in the registry.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.launch.mesh import batch_axes, batch_size, model_size
+
+# Leaf names (last path component) -> role.
+_COL = {"gate", "up", "fc1", "cm_k", "in_proj", "dt_proj", "wr", "wg",
+        "embed", "enc_pos", "dec_pos"}
+_ROW = {"wo", "down", "fc2", "cm_v", "out_proj"}
+_KV = {"wk", "wv"}
+# KV-cache leaf names whose T axis (ndim-3) shards over model.
+_KVCACHE = {"k", "v", "self_k", "self_v"}
+
+
+def _path_names(path) -> list:
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+# A frozen base leaf whose model-sharded size still exceeds this gets an
+# additional data-axis shard (the paper's FSDP-sharded base executor mode —
+# frozen weights are all-gathered per layer, never gradient-synced).
+_FSDP_THRESHOLD_BYTES = 4e9
+
+
+def base_param_specs(cfg: ModelConfig, mesh, params_shape) -> object:
+    """PartitionSpec tree for the frozen base parameter tree.
+
+    ``params_shape``: tree of ShapeDtypeStruct (from jax.eval_shape)."""
+    import numpy as np
+    msize = model_size(mesh)
+    baxes = batch_axes(mesh)
+    H, K = cfg.hp, cfg.n_kv_heads
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = len(leaf.shape)
+        spec = [None] * nd
+
+        def set_axis(ax, ok=True):
+            if ok and _div(leaf.shape[ax], msize):
+                spec[ax] = "model"
+
+        def maybe_fsdp():
+            """Shard one more dim over (pod, data) if the leaf is huge."""
+            import jax.numpy as jnp_
+            itemsize = jnp_.dtype(leaf.dtype).itemsize
+            n = int(np.prod(leaf.shape)) * itemsize
+            shards = msize if "model" in spec else 1
+            if n / shards <= _FSDP_THRESHOLD_BYTES:
+                return
+            dsize = batch_size(mesh)
+            for ax in range(nd - 1, -1, -1):
+                if spec[ax] is None and _div(leaf.shape[ax], dsize):
+                    spec[ax] = baxes if len(baxes) > 1 else baxes[0]
+                    return
+
+        if "experts" in names and nd >= 3:
+            # [.., E, din, dout] -> expert-parallel over E
+            set_axis(nd - 3, ok=_div(leaf.shape[nd - 3], msize))
+            maybe_fsdp()
+        elif name in _COL and nd >= 2:
+            set_axis(nd - 1)
+        elif name == "wq" and nd >= 2:
+            set_axis(nd - 1, ok=_div(H, msize))
+        elif name in _KV and nd >= 2:
+            # rwkv uses wk/wv as [d,d] channel projections: always shardable;
+            # attention K/V projections only when K % model == 0.
+            is_square = leaf.shape[nd - 1] == cfg.d_model
+            set_axis(nd - 1, ok=is_square or _div(K, msize))
+        elif name in _ROW and nd >= 2:
+            ok = True
+            if name == "wo":
+                ok = _div(H, msize)
+            set_axis(nd - 2, ok=ok)
+        elif name == "lm_head" and nd >= 2:
+            if _div(leaf.shape[nd - 1], msize):
+                spec[nd - 1] = "model"          # vocab-parallel
+            elif _div(leaf.shape[nd - 2], msize):
+                spec[nd - 2] = "model"          # row-parallel (odd vocab)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def client_state_specs(cfg: ModelConfig, mesh, tree_shape,
+                       *, client_axis: bool = True,
+                       full_mesh: bool = False) -> object:
+    """Spec tree for client banks / optimizer state / caches / batches.
+
+    Leading client axis shards over (pod, data) when divisible. KV caches
+    additionally shard their T axis over ``model``; when the client axis
+    cannot shard (e.g. long_500k C=1) the T axis takes (pod, data, model) —
+    sequence-parallel decode across the whole mesh.
+
+    full_mesh=True (replicated-base client-parallel): the client axis
+    spreads over EVERY mesh axis (pod, data, model) and nothing shards over
+    model separately."""
+    baxes = batch_axes(mesh)
+    bsize = batch_size(mesh)
+    msize = model_size(mesh)
+    if full_mesh:
+        baxes = baxes + ("model",)
+        bsize *= msize
+        msize = 1
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        c_sharded = False
+        if client_axis and nd >= 1 and _div(leaf.shape[0], bsize):
+            spec[0] = baxes if len(baxes) > 1 else baxes[0]
+            c_sharded = True
+        if name in _KVCACHE and nd >= 4:
+            t_ax = nd - 3
+            if t_ax > 0:
+                if c_sharded or not client_axis:
+                    if _div(leaf.shape[t_ax], msize):
+                        spec[t_ax] = "model"
+                else:
+                    # client axis unshardable: spread T over the whole mesh
+                    full = bsize * msize
+                    if _div(leaf.shape[t_ax], full):
+                        spec[t_ax] = baxes + ("model",)
+                    elif _div(leaf.shape[t_ax], msize):
+                        spec[t_ax] = "model"
+        elif name in ("cross_k", "cross_v") and nd >= 4:
+            if _div(leaf.shape[nd - 3], msize):
+                spec[nd - 3] = "model"
+        elif name == "wkv" and nd >= 4:
+            if _div(leaf.shape[nd - 3], msize):
+                spec[nd - 3] = "model"          # heads of the wkv state
+        elif name == "h" and nd >= 2:
+            if _div(leaf.shape[nd - 2], msize):
+                spec[nd - 2] = "model"          # mamba expanded dim
+        elif name == "conv" and nd >= 2:
+            if _div(leaf.shape[nd - 1], msize):
+                spec[nd - 1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, tree_shape)
+
+
+def attach(mesh, shape_tree, spec_tree):
+    """ShapeDtypeStructs with NamedShardings attached (dry-run stand-ins)."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shape_tree, spec_tree)

@@ -1,0 +1,181 @@
+"""Per-(arch × shape × mesh) step functions + ShapeDtypeStruct input specs.
+
+The dry-run contract (deliverable e): for every assigned architecture and
+input shape, produce the step function that production would run and a tree
+of sharded ShapeDtypeStruct stand-ins — weak-type-correct, shardable, zero
+allocation — so ``jit(fn).lower(*specs).compile()`` proves the distribution
+config is coherent.
+
+Shape kinds map to steps (DESIGN.md §6):
+  train_4k      -> multi-client fine-tuning step (C clients × B batch)
+  prefill_32k   -> multi-client prefill (forward + cache fill)
+  decode_32k    -> multi-client serve_step: ONE token vs seq_len-deep cache
+  long_500k     -> serve_step; sub-quadratic archs only (rwkv/jamba native
+                   state; llava via its Mistral sliding-window ring cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (AdapterConfig, ModelConfig, ServeConfig, ShapeConfig,
+                          TrainConfig, SHAPES, ENCDEC, VLM, RWKV, HYBRID)
+from repro.configs import get_config
+from repro.core import symbiosis
+from repro.launch import shardings
+from repro.launch.mesh import batch_axes, batch_size
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Paper Table 2 "LoRA 3": rank 8 on [q,k,v,o] — the adapter used throughout
+# the paper's evaluation (and our dry-runs).
+DEFAULT_ADAPTER = AdapterConfig(method="lora", rank=8, targets=("q", "k", "v", "o"))
+
+# long_500k applicability (DESIGN.md §6).
+_LONG_OK = {
+    "rwkv6-7b": "O(1) recurrent state",
+    "jamba-v0.1-52b": "hybrid: KV only on 4 attention layers",
+    "llava-next-mistral-7b": "Mistral sliding-window (4096) ring cache",
+}
+_DECODELESS: set = set()   # all assigned archs have a decode path
+
+
+@dataclasses.dataclass
+class SpecBundle:
+    arch: str
+    shape: str
+    fn: Callable            # the step to lower
+    args: tuple             # ShapeDtypeStruct trees (sharded)
+    n_clients: int
+    batch_per_client: int
+    meta: dict
+
+
+def is_applicable(arch_id: str, shape_name: str) -> tuple:
+    if shape_name == "long_500k" and arch_id not in _LONG_OK:
+        return False, "full attention, no sub-quadratic variant (DESIGN.md §6)"
+    if shape_name in ("decode_32k", "long_500k") and arch_id in _DECODELESS:
+        return False, "encoder-only arch has no decode step"
+    return True, _LONG_OK.get(arch_id, "")
+
+
+def _client_split(global_batch: int, mesh, *, full_mesh: bool = False) -> tuple:
+    """(n_clients, batch_per_client): client axis fills the (pod,data) mesh —
+    or the ENTIRE mesh when full_mesh (replicated-base client-parallel)."""
+    bsize = batch_size(mesh)
+    if full_mesh:
+        from repro.launch.mesh import model_size
+        bsize *= model_size(mesh)
+    C = min(bsize, global_batch)
+    while global_batch % C:
+        C -= 1
+    return C, global_batch // C
+
+
+def _frontend_struct(cfg: ModelConfig, C: int, B: int):
+    if cfg.arch == ENCDEC:
+        return {"frames": jax.ShapeDtypeStruct(
+            (C, B, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))}
+    if cfg.arch == VLM:
+        return {"img_embed": jax.ShapeDtypeStruct(
+            (C, B, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))}
+    return {}
+
+
+def _scalar(mesh, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct((), dtype, sharding=NamedSharding(mesh, P()))
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, *,
+                acfg: AdapterConfig = DEFAULT_ADAPTER,
+                memory_optimized: bool = True,
+                remat: bool = True,
+                moe_dispatch: str = "scatter",
+                replicate_base: bool = False,
+                kv_quant: bool = False,
+                microbatch_rows: int = 4,
+                capacity_factor: float = 1.25) -> SpecBundle:
+    """Build (step_fn, sharded arg specs) for one dry-run combination.
+
+    replicate_base (beyond-paper hillclimb knob): replicate frozen base
+    weights over the whole mesh and spread the CLIENT axis over every mesh
+    axis — zero tensor-parallel collectives for models that fit per-chip."""
+    ok, note = is_applicable(arch_id, shape_name)
+    if not ok:
+        raise ValueError(f"{arch_id} × {shape_name} skipped: {note}")
+    cfg = get_config(arch_id)
+    shape: ShapeConfig = SHAPES[shape_name]
+    C, B = _client_split(shape.global_batch, mesh, full_mesh=replicate_base)
+
+    # --- state trees (shape-only) ------------------------------------
+    sys_shape = jax.eval_shape(
+        lambda: symbiosis.init_system(cfg, acfg, C, jax.random.PRNGKey(0)))
+    base_s, bank_s, opt_s = sys_shape
+    if replicate_base:
+        from jax.sharding import PartitionSpec as P_
+        base_spec = jax.tree.map(lambda s: P_(), base_s)
+        cs = lambda t: shardings.client_state_specs(cfg, mesh, t,
+                                                    full_mesh=True)
+    else:
+        base_spec = shardings.base_param_specs(cfg, mesh, base_s)
+        cs = lambda t: shardings.client_state_specs(cfg, mesh, t)
+    base = shardings.attach(mesh, base_s, base_spec)
+    bank = shardings.attach(mesh, bank_s, cs(bank_s))
+    opt = shardings.attach(mesh, opt_s, cs(opt_s))
+
+    meta = {"n_clients": C, "batch_per_client": B, "note": note,
+            "seq_len": shape.seq_len, "kind": shape.kind}
+
+    if shape.kind == "train":
+        # Microbatch so each accumulation step sees <= microbatch_rows rows
+        # per client: activation temps stay inside HBM at 4k sequence
+        # length. Fewer microbatches = fewer FSDP weight re-gathers (§Perf).
+        nmb = max(1, B // microbatch_rows)
+        tcfg = TrainConfig(n_clients=C, remat=remat, microbatch=nmb,
+                           memory_optimized_backward=memory_optimized)
+        meta["microbatch"] = nmb
+        fn = symbiosis.make_multi_client_train_step(
+            cfg, acfg, tcfg, moe_dispatch=moe_dispatch,
+            capacity_factor=capacity_factor)
+        batch_struct = {
+            "tokens": jax.ShapeDtypeStruct((C, B, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((C, B, shape.seq_len), jnp.int32),
+        }
+        batch_struct.update(_frontend_struct(cfg, C, B))
+        batch = shardings.attach(mesh, batch_struct, cs(batch_struct))
+        args = (base, bank, opt, batch, _scalar(mesh))
+        return SpecBundle(arch_id, shape_name, fn, args, C, B, meta)
+
+    # VLM prefill writes image-prefix + text positions into the cache.
+    max_seq = shape.seq_len + (cfg.n_frontend_tokens if cfg.arch == VLM else 0)
+    scfg = ServeConfig(n_clients=C, max_seq=max_seq)
+    ring = (shape_name == "long_500k" and cfg.arch not in (RWKV, HYBRID)
+            and cfg.sliding_window > 0)
+    window = cfg.sliding_window if ring else 0
+    quant = kv_quant and cfg.arch not in (RWKV, HYBRID) and shape.kind == "decode"
+    cache_s = jax.eval_shape(
+        lambda: symbiosis.init_client_caches(cfg, C, B, max_seq,
+                                             window=window, quant=quant))
+    caches = shardings.attach(mesh, cache_s, cs(cache_s))
+    meta["ring"] = ring
+    meta["kv_quant"] = quant
+
+    if shape.kind == "prefill":
+        fn = symbiosis.make_multi_client_prefill(
+            cfg, acfg, scfg, memory_optimized=memory_optimized)
+        batch_struct = {
+            "tokens": jax.ShapeDtypeStruct((C, B, shape.seq_len), jnp.int32)}
+        batch_struct.update(_frontend_struct(cfg, C, B))
+        batch = shardings.attach(mesh, batch_struct, cs(batch_struct))
+        args = (base, bank, caches, batch)
+        return SpecBundle(arch_id, shape_name, fn, args, C, B, meta)
+
+    # decode kinds
+    fn = symbiosis.make_multi_client_decode_step(
+        cfg, acfg, scfg, ring=ring, memory_optimized=memory_optimized)
+    tok_struct = {"tokens": jax.ShapeDtypeStruct((C, B), jnp.int32)}
+    tokens = shardings.attach(mesh, tok_struct, cs(tok_struct))["tokens"]
+    args = (base, bank, caches, tokens)
+    return SpecBundle(arch_id, shape_name, fn, args, C, B, meta)

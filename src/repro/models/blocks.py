@@ -1,0 +1,419 @@
+"""Shared neural building blocks (pure JAX, functional).
+
+Every frozen-base matmul in every architecture goes through a ``LinearFns``
+hook. This is the JAX analogue of the paper's VirtLayer splice (§3.2): the
+default hook executes the matmul inline ("fused baseline"); the Symbiosis core
+substitutes a hook that applies the memory-optimized frozen linear (§3.6),
+per-client PEFT adapters, and the privacy noise protocol (§3.8) — without any
+change to model code (paper design goal 3: model transparency).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class LinearFns(NamedTuple):
+    """Hook for base-model linear layers.
+
+    dense(x, w, b, path):   x [..., din] @ w [din, dout] (+ b) -> [..., dout]
+    expert(x, w, path):     x [E, C, din] @ w [E, din, dout]   -> [E, C, dout]
+    """
+    dense: Callable
+    expert: Callable
+
+
+def _default_dense(x, w, b, path):
+    y = jnp.einsum("...i,io->...o", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _default_expert(x, w, path):
+    return jnp.einsum("eci,eio->eco", x, w)
+
+
+DEFAULT_LIN = LinearFns(dense=_default_dense, expert=_default_expert)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, din, dout, dtype):
+    scale = 1.0 / math.sqrt(din)
+    return (jax.random.uniform(key, (din, dout), jnp.float32, -scale, scale)).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-6):
+    """qk-norm: normalize the last (head) dim. scale [hd]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(hd: int, theta: float):
+    return theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, hd]; positions [..., S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked-causal for long sequences, decode with cache)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype, causal=True):
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.hp * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.hp * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _pick_chunk(S: int, B: int, H: int, T: int, chunk_q: int,
+                budget_bytes: float = 256e6) -> int:
+    """Query-chunk size: a divisor of S bounding the fp32 score buffer
+    B*H*c*T*4 <= budget (the flash-attention memory property, statically)."""
+    c = chunk_q
+    while c > 16 and (S % c or B * H * c * T * 4 > budget_bytes):
+        c //= 2
+    while S % c and c > 1:   # S with odd factors: fall to a true divisor
+        c -= 1
+    return max(c, 1)
+
+
+def mha_forward(params, cfg, x, positions, lin: LinearFns, *, causal: bool = True,
+                kv_x: Optional[jnp.ndarray] = None, kv_positions=None,
+                path_prefix: str = "", chunk_q: int = 1024):
+    """Full attention over a sequence (training / prefill / encoder / cross-attn).
+
+    x [B,S,d]. If kv_x is given this is cross-attention (non-causal over kv_x).
+
+    Layout notes (GSPMD-friendliness, DESIGN.md §5): heads are kept *flat*
+    [B,S,H,hd] and KV heads are replicated to H via ``jnp.repeat`` (classic
+    kv-replication tensor parallelism) — the grouped [K,G] form cannot be
+    sharded when K < the model-axis size, the flat form shards whenever
+    H % model == 0. Long sequences are processed in query chunks to bound
+    the score buffer (the pure-JAX analogue of flash attention's memory
+    behaviour); the chunk adapts so the fp32 scores stay within budget.
+    """
+    B, S, _ = x.shape
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
+    G = H // K
+    src = kv_x if kv_x is not None else x
+    T = src.shape[1]
+    if kv_positions is None:
+        kv_positions = positions if kv_x is None else jnp.arange(T)[None, :].repeat(B, 0)
+
+    q = lin.dense(x, params["wq"], params.get("bq"), path_prefix + "q")
+    k = lin.dense(src, params["wk"], params.get("bk"), path_prefix + "k")
+    v = lin.dense(src, params["wv"], params.get("bv"), path_prefix + "v")
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, T, K, hd)
+    v = v.reshape(B, T, K, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(params["q_norm"], q)
+        k = head_rmsnorm(params["k_norm"], k)
+    if kv_x is None and cfg.rope_theta > 0:  # self-attention uses RoPE (except whisper-style)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    if G > 1:   # kv-replication: [B,T,K,hd] -> [B,T,H,hd]
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    scale = 1.0 / math.sqrt(hd)
+    window = cfg.sliding_window
+
+    def attend_chunk(q_chunk, qpos_chunk):
+        # q_chunk [B,c,H,hd] -> [B,c,H,hd]
+        s = jnp.einsum("bshd,bthd->bhst", q_chunk, k).astype(jnp.float32) * scale
+        if causal and kv_x is None:
+            m = qpos_chunk[:, None, :, None] >= kv_positions[:, None, None, :]
+            if window:
+                m &= (qpos_chunk[:, None, :, None] - kv_positions[:, None, None, :]) < window
+            s = jnp.where(m, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhst,bthd->bshd", p, v)
+
+    def attend_chunk_flash(q_chunk, qpos_chunk, block_kv: int):
+        """Online-softmax over KV blocks: the [c, T] score matrix never
+        materializes — only [c, block_kv] tiles and running (max, denom,
+        acc) carries live at once (the in-JAX analogue of our Pallas
+        decode/flash kernels; §Perf iteration 1)."""
+        c = q_chunk.shape[1]
+        nkv = T // block_kv
+        kb = k.reshape(B, nkv, block_kv, H, hd).transpose(1, 0, 2, 3, 4)
+        vb = v.reshape(B, nkv, block_kv, H, hd).transpose(1, 0, 2, 3, 4)
+        pb = kv_positions.reshape(B, nkv, block_kv).transpose(1, 0, 2)
+        m0 = jnp.full((B, H, c, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, c, 1), jnp.float32)
+        a0 = jnp.zeros((B, H, c, hd), jnp.float32)
+
+        def body(carry, blk):
+            m, l, acc = carry
+            kc, vc, pc = blk
+            s = jnp.einsum("bshd,bthd->bhst", q_chunk, kc).astype(jnp.float32) * scale
+            if causal and kv_x is None:
+                msk = qpos_chunk[:, None, :, None] >= pc[:, None, None, :]
+                if window:
+                    msk &= (qpos_chunk[:, None, :, None]
+                            - pc[:, None, None, :]) < window
+                s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l = l * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhst,bthd->bhsd", p,
+                                           vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+        out = acc / jnp.maximum(l, 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(v.dtype)      # [B,c,H,hd]
+
+    # §Perf iterations 2/3: online-softmax (flash) only pays off once T is
+    # large enough that score-matrix traffic dominates its loop-carry
+    # traffic (empirically T > 8k); below that, plain chunked attention
+    # with a 1 GB score budget (64 MB/device under 16-way head sharding)
+    # minimizes K/V re-reads.
+    block_kv = 1024 if T % 1024 == 0 else (512 if T % 512 == 0 else 0)
+    use_flash = block_kv > 0 and T > 8192 and kv_x is None
+    if use_flash:
+        chunk = _pick_chunk(S, B, H, block_kv, max(chunk_q, 2048))
+    else:
+        chunk = _pick_chunk(S, B, H, T, chunk_q, budget_bytes=1e9)
+    att = ((lambda qc, pc: attend_chunk_flash(qc, pc, block_kv))
+           if use_flash else attend_chunk)
+    if S <= chunk:
+        out = att(q, positions)
+    else:
+        n = S // chunk
+        qc = q.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(B, n, chunk).transpose(1, 0, 2)
+        out = jax.lax.map(lambda args: att(*args), (qc, pc))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+    out = out.reshape(B, S, H * hd)
+    return lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+
+
+def quantize_head(x):
+    """Per-head symmetric int8 quantization. x [..., hd] ->
+    (q int8 [..., hd], scale f32 [..., 1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def mha_decode_quant(params, cfg, x, cache_k, cache_ks, cache_v, cache_vs,
+                     pos, lin: LinearFns, *, path_prefix: str = "",
+                     ring: bool = False):
+    """Decode against an int8-quantized KV cache (beyond-paper §Perf
+    optimization: halves the HBM bytes of the cache read, the dominant
+    roofline term of decode shapes).
+
+    cache_k/v int8 [B,T,K,hd]; cache_ks/vs f32 [B,T,K,1] per-head scales.
+    Returns (out, new_k, new_ks, new_v, new_vs)."""
+    B = x.shape[0]
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
+    G = H // K
+    T = cache_k.shape[1]
+
+    q = lin.dense(x, params["wq"], params.get("bq"), path_prefix + "q").reshape(B, 1, H, hd)
+    k = lin.dense(x, params["wk"], params.get("bk"), path_prefix + "k").reshape(B, 1, K, hd)
+    v = lin.dense(x, params["wv"], params.get("bv"), path_prefix + "v").reshape(B, 1, K, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(params["q_norm"], q)
+        k = head_rmsnorm(params["k_norm"], k)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    kq, ks = quantize_head(k)
+    vq, vs = quantize_head(v)
+    slot = (pos % T) if ring else pos
+    idx = slot[:, None, None, None]
+    t_iota = jnp.arange(T)[None, :, None, None]
+    write = t_iota == idx
+    cache_k = jnp.where(write, kq, cache_k)
+    cache_ks = jnp.where(write, ks, cache_ks)
+    cache_v = jnp.where(write, vq, cache_v)
+    cache_vs = jnp.where(write, vs, cache_vs)
+
+    t_ar = jnp.arange(T)[None, :]
+    if ring:
+        cycle = (pos[:, None] - t_ar) // T
+        abs_pos = cycle * T + t_ar
+        valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+        if cfg.sliding_window:
+            valid &= (pos[:, None] - abs_pos) < cfg.sliding_window
+    else:
+        valid = (t_ar <= pos[:, None])
+        if cfg.sliding_window:
+            valid &= (pos[:, None] - t_ar) < cfg.sliding_window
+
+    qg = q.reshape(B, 1, K, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    # int8 scores with per-entry rescale: q·(kq*ks) == (q·kq)*ks
+    s = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32))
+    s = s * cache_ks[..., 0].transpose(0, 2, 1)[:, :, None, None, :] * scale
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    pv = p * cache_vs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bkgst,btkh->bskgh", pv,
+                     cache_v.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(B, 1, H * hd)
+    out = lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+    return out, cache_k, cache_ks, cache_v, cache_vs
+
+
+def mha_decode(params, cfg, x, cache_k, cache_v, pos, lin: LinearFns,
+               *, path_prefix: str = "", ring: bool = False):
+    """Single-token decode. x [B,1,d]; cache_k/v [B,T,K,hd]; pos [B] int32.
+
+    ring=True treats the cache as a ring buffer of size T (< full context):
+    slot = pos % T, validity derived from absolute positions — the
+    sliding-window long-context variant (cfg.sliding_window must be <= T).
+
+    Returns (out [B,1,d], new_k, new_v).
+    """
+    B = x.shape[0]
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
+    G = H // K
+    T = cache_k.shape[1]
+
+    q = lin.dense(x, params["wq"], params.get("bq"), path_prefix + "q").reshape(B, 1, H, hd)
+    k = lin.dense(x, params["wk"], params.get("bk"), path_prefix + "k").reshape(B, 1, K, hd)
+    v = lin.dense(x, params["wv"], params.get("bv"), path_prefix + "v").reshape(B, 1, K, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(params["q_norm"], q)
+        k = head_rmsnorm(params["k_norm"], k)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    # Write this token's K/V at its slot (per batch row). The write is an
+    # ELEMENTWISE select over the T axis (not a scatter): per-row vector
+    # scatters defeat GSPMD partitioning of a T-sharded cache (it falls back
+    # to all-to-all resharding of the whole cache every layer), while the
+    # broadcast-compare select partitions locally on every axis.
+    slot = (pos % T) if ring else pos
+    idx = slot[:, None, None, None]
+    t_iota = jnp.arange(T)[None, :, None, None]
+    write = t_iota == idx
+    cache_k = jnp.where(write, k.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(write, v.astype(cache_v.dtype), cache_v)
+
+    t_ar = jnp.arange(T)[None, :]
+    if ring:
+        # slot s holds absolute position p: p % T == s, p <= pos, p > pos - T
+        cycle = (pos[:, None] - t_ar) // T
+        abs_pos = cycle * T + t_ar
+        valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+        if cfg.sliding_window:
+            valid &= (pos[:, None] - abs_pos) < cfg.sliding_window
+    else:
+        valid = (t_ar <= pos[:, None])                            # [B,T]
+        if cfg.sliding_window:
+            valid &= (pos[:, None] - t_ar) < cfg.sliding_window
+
+    # Grouped GQA einsum (NOT kv-replicated): with the cache sharded on T,
+    # scores stay T-local and only the softmax max/sum and the T-contraction
+    # psum cross chips (flash-decode style). Repeating KV to H here would
+    # make GSPMD reshard the whole repeated cache (all-to-all) every layer.
+    qg = q.reshape(B, 1, K, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, cache_k).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, cache_v).reshape(B, 1, H * hd)
+    out = lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+    return out, cache_k, cache_v
+
+
+def cross_decode(params, cfg, x, enc_k, enc_v, lin: LinearFns, *, path_prefix: str = "xattn_"):
+    """Cross-attention decode against a fixed encoder cache. x [B,1,d]."""
+    B = x.shape[0]
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
+    G = H // K
+    q = lin.dense(x, params["wq"], params.get("bq"), path_prefix + "q").reshape(B, 1, K, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", q, enc_k).astype(jnp.float32) / math.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1).astype(enc_v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, enc_v).reshape(B, 1, H * hd)
+    return lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, dtype, d_ff=None, gelu=False, bias=False):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if gelu:
+        p = {"fc1": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+             "fc2": dense_init(ks[1], d_ff, cfg.d_model, dtype)}
+        if bias:
+            p["b1"] = jnp.zeros((d_ff,), dtype)
+            p["b2"] = jnp.zeros((cfg.d_model,), dtype)
+        return p
+    return {"gate": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+            "up": dense_init(ks[1], cfg.d_model, d_ff, dtype),
+            "down": dense_init(ks[2], d_ff, cfg.d_model, dtype)}
+
+
+def mlp_forward(params, x, lin: LinearFns, *, path_prefix: str = ""):
+    if "fc1" in params:  # GELU MLP (whisper-style)
+        h = lin.dense(x, params["fc1"], params.get("b1"), path_prefix + "fc1")
+        h = jax.nn.gelu(h)
+        return lin.dense(h, params["fc2"], params.get("b2"), path_prefix + "fc2")
+    g = lin.dense(x, params["gate"], None, path_prefix + "gate")
+    u = lin.dense(x, params["up"], None, path_prefix + "up")
+    return lin.dense(jax.nn.silu(g) * u, params["down"], None, path_prefix + "down")

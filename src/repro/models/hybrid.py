@@ -1,0 +1,205 @@
+"""Jamba-style hybrid: Mamba + attention 1:7 interleave, MoE every 2nd layer.
+
+Layer pattern (period = cfg.attn_every, Jamba: 8): layers 0..6 are Mamba,
+layer 7 is attention; MoE FFN on odd layers within each period (Jamba: 16e
+top-2 every 2). The period is the scan unit: we scan over n_layers/period
+"groups", each group's 8 sublayers unrolled (static structure), params
+stacked over groups. State: per-group mamba states + one KV cache per group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks, mamba as mamba_lib, moe as moe_lib
+from repro.models.transformer import LinCtx, DEFAULT_CTX, embed_tokens, lm_head
+
+
+def _sub_is_attn(cfg, j):           # j = index within period
+    return j == cfg.attn_every - 1
+
+
+def _sub_is_moe(cfg, j):
+    return cfg.n_experts > 0 and (j % cfg.moe_every == cfg.moe_offset)
+
+
+def _group_init(key, cfg: ModelConfig, dtype):
+    period = cfg.attn_every
+    subs = []
+    ks = jax.random.split(key, period)
+    for j in range(period):
+        k1, k2 = jax.random.split(ks[j])
+        p = {"ln1": blocks.rmsnorm_init(cfg.d_model, dtype),
+             "ln2": blocks.rmsnorm_init(cfg.d_model, dtype)}
+        if _sub_is_attn(cfg, j):
+            p["attn"] = blocks.attn_init(k1, cfg, dtype)
+        else:
+            p["mamba"] = mamba_lib.mamba_init(k1, cfg, dtype)
+        if _sub_is_moe(cfg, j):
+            p["moe"] = moe_lib.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = blocks.mlp_init(k2, cfg, dtype)
+        subs.append(p)
+    return {f"sub{j}": subs[j] for j in range(period)}
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    assert cfg.n_layers % cfg.attn_every == 0
+    n_groups = cfg.n_layers // cfg.attn_every
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": blocks.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": blocks.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": blocks.dense_init(ks[1], cfg.d_model, cfg.vocab, dtype),
+        "groups": jax.vmap(lambda k: _group_init(k, cfg, dtype))(
+            jax.random.split(ks[2], n_groups)),
+    }
+
+
+def _zero_group_state(cfg: ModelConfig, B: int, T_kv: int, dtype):
+    ed = cfg.mamba_expand * cfg.d_model
+    st = {}
+    for j in range(cfg.attn_every):
+        if _sub_is_attn(cfg, j):
+            st[f"sub{j}"] = {
+                "k": jnp.zeros((B, T_kv, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((B, T_kv, cfg.n_kv_heads, cfg.hd), dtype),
+            }
+        else:
+            st[f"sub{j}"] = {
+                "h": jnp.zeros((B, ed, cfg.d_state), jnp.float32),
+                "conv": jnp.zeros((B, cfg.d_conv - 1, ed), jnp.float32),
+            }
+    return st
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_groups = cfg.n_layers // cfg.attn_every
+    one = _zero_group_state(cfg, batch_size, max_seq, dtype)
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+    return {"groups": stacked, "pos": jnp.zeros((batch_size,), jnp.int32)}
+
+
+def _group_forward(gp, cfg, x, positions, lin, state, *, capture_kv: bool):
+    """Run one period of sublayers. state: group state dict (or None for
+    training). Returns (x, aux, new_state)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_state = {}
+    B, S, _ = x.shape
+    for j in range(cfg.attn_every):
+        p = gp[f"sub{j}"]
+        st = state[f"sub{j}"] if state is not None else None
+        h = blocks.rmsnorm(p["ln1"], x)
+        if "attn" in p:
+            y = blocks.mha_forward(p["attn"], cfg, h, positions, lin)
+            if capture_kv:
+                hd, K = cfg.hd, cfg.n_kv_heads
+                k = lin.dense(h, p["attn"]["wk"], None, "k").reshape(B, S, K, hd)
+                v = lin.dense(h, p["attn"]["wv"], None, "v").reshape(B, S, K, hd)
+                k = blocks.apply_rope(k, positions, cfg.rope_theta)
+                ck = jax.lax.dynamic_update_slice(st["k"], k.astype(st["k"].dtype), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(st["v"], v.astype(st["v"].dtype), (0, 0, 0, 0))
+                new_state[f"sub{j}"] = {"k": ck, "v": cv}
+            elif st is not None:
+                new_state[f"sub{j}"] = st
+        else:
+            mamba_state = st if (st is not None and "h" in st) else None
+            y, mst = mamba_lib.mamba_forward(p["mamba"], cfg, h, lin, mamba_state)
+            new_state[f"sub{j}"] = mst if st is not None else None
+        x = x + y
+        h = blocks.rmsnorm(p["ln2"], x)
+        if "moe" in p:
+            y, aux = moe_lib.moe_forward(p["moe"], cfg, h, lin)
+            aux_total += aux
+        else:
+            y = blocks.mlp_forward(p["mlp"], h, lin)
+        x = x + y
+    return x, aux_total, (new_state if state is not None else None)
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
+            adapter=None, *, remat: bool = True, moe_dispatch: str = "scatter",
+            capacity_factor: float = 1.25):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens, ctx.top)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    scan_adapters = adapter.get("groups") if adapter else None
+
+    def body(carry, grp_in):
+        x, aux_acc = carry
+        gp, ad = grp_in
+        x, aux, _ = _group_forward(gp, cfg, x, positions, ctx.for_layer(ad), None,
+                                   capture_kv=False)
+        return (x, aux_acc + aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (params["groups"], scan_adapters))
+    x = blocks.rmsnorm(params["final_norm"], x)
+    return lm_head(cfg, params, x, ctx.top), aux
+
+
+def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
+            adapter=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens, ctx.top)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    scan_adapters = adapter.get("groups") if adapter else None
+
+    def body(x, grp_in):
+        gp, st, ad = grp_in
+        x, _, new_st = _group_forward(gp, cfg, x, positions, ctx.for_layer(ad), st,
+                                      capture_kv=True)
+        return x, new_st
+
+    x, new_groups = jax.lax.scan(jax.checkpoint(body), x,
+                                 (params["groups"], cache["groups"], scan_adapters))
+    x = blocks.rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
+    return logits, {"groups": new_groups, "pos": jnp.full((B,), S, jnp.int32)}
+
+
+def _group_decode(gp, cfg, x, state, pos, lin):
+    new_state = {}
+    for j in range(cfg.attn_every):
+        p = gp[f"sub{j}"]
+        st = state[f"sub{j}"]
+        h = blocks.rmsnorm(p["ln1"], x)
+        if "attn" in p:
+            y, ck, cv = blocks.mha_decode(p["attn"], cfg, h, st["k"], st["v"], pos, lin)
+            new_state[f"sub{j}"] = {"k": ck, "v": cv}
+        else:
+            y, mst = mamba_lib.mamba_forward(p["mamba"], cfg, h, lin, st)
+            new_state[f"sub{j}"] = mst
+        x = x + y
+        h = blocks.rmsnorm(p["ln2"], x)
+        if "moe" in p:
+            y, _ = moe_lib.moe_forward(p["moe"], cfg, h, lin)
+        else:
+            y = blocks.mlp_forward(p["mlp"], h, lin)
+        x = x + y
+    return x, new_state
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,
+                adapter=None):
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = embed_tokens(cfg, params, token[:, None], ctx.top)
+    scan_adapters = adapter.get("groups") if adapter else None
+
+    def body(x, grp_in):
+        gp, st, ad = grp_in
+        x, new_st = _group_decode(gp, cfg, x, st, pos, ctx.for_layer(ad))
+        return x, new_st
+
+    x, new_groups = jax.lax.scan(body, x, (params["groups"], cache["groups"], scan_adapters))
+    x = blocks.rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params, x, ctx.top)[:, 0]
+    return logits, {"groups": new_groups, "pos": pos + 1}

@@ -1,0 +1,19 @@
+"""Loss functions."""
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits, labels, mask=None, aux=0.0, aux_weight: float = 0.01):
+    """Next-token cross entropy. logits [B,S,V] (S may exceed labels' S when a
+    multimodal prefix was prepended — the prefix positions are ignored)."""
+    B, S_lab = labels.shape
+    S = logits.shape[1]
+    if S != S_lab:  # strip multimodal prefix
+        logits = logits[:, S - S_lab:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux

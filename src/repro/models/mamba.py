@@ -1,0 +1,125 @@
+"""Mamba (S6) block for the Jamba hybrid — TPU-adapted selective scan.
+
+TPU adaptation (DESIGN.md §2): the reference implementation is a fused CUDA
+selective-scan kernel streaming (dA, dBx) through SRAM. There is no TPU
+analogue of that kernel's warp-level pipelining; the TPU-idiomatic equivalent
+is a *chunked associative scan*: split time into chunks, materialize the
+per-step transition (a_t, b_t) only chunk-by-chunk, run an intra-chunk
+``associative_scan`` (parallel, MXU/VPU friendly) and carry the [B, ED, N]
+state across chunks with ``lax.scan``. The chunk body is checkpointed so
+training memory is O(S/chunk * state) instead of O(S * state).
+
+Base/client split: in_proj, x_proj, dt_proj, out_proj are frozen base linears
+(LinearFns); the depthwise conv, A/D parameters and the scan itself are
+client-side stateful ops (paper §3.2 rule).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import LinearFns, dense_init
+
+
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    ed = cfg.mamba_expand * d
+    N = cfg.d_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (ed, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * ed, dtype),          # -> x, z
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, ed), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((ed,), dtype),
+        "x_proj": dense_init(ks[2], ed, dt_rank + 2 * N, dtype), # -> dt, B, C
+        "dt_proj": dense_init(ks[3], dt_rank, ed, dtype),
+        "dt_bias": jnp.zeros((ed,), jnp.float32),
+        "A_log": jnp.log(A),                                     # [ED,N] f32
+        "D": jnp.ones((ed,), jnp.float32),
+        "out_proj": dense_init(ks[4], ed, d, dtype),
+    }
+
+
+def selective_scan(x, dt, Bc, Cc, A, D, h0, chunk: int = 256):
+    """Selective SSM.
+
+    x [B,S,ED]; dt [B,S,ED] (softplus'd); Bc, Cc [B,S,N]; A [ED,N] (negative);
+    D [ED]; h0 [B,ED,N]. Returns (y [B,S,ED], h_final).
+
+    Discretization (ZOH): a_t = exp(dt_t * A);  b_t = dt_t * B_t * x_t.
+    """
+    B, S, ED = x.shape
+    N = A.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} % chunk {chunk} != 0"
+    n = S // chunk
+
+    def chunk_body(h, inp):
+        xc, dtc, Bcc, Ccc = inp                                  # [chunk,B,...] f32
+        a = jnp.exp(dtc[..., None] * A)                          # [c,B,ED,N]
+        b = dtc[..., None] * Bcc[:, :, None, :] * xc[..., None]  # [c,B,ED,N]
+
+        # intra-chunk parallel scan of the linear recurrence
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, b), axis=0)
+        hs = a_sc * h[None] + b_sc                               # [c,B,ED,N]
+        y = jnp.einsum("cbdn,cbn->cbd", hs, Ccc)
+        return hs[-1], y
+
+    seq = lambda t: t.astype(jnp.float32).reshape(t.shape[0], n, chunk, *t.shape[2:]) \
+                     .transpose(1, 2, 0, *range(3, t.ndim + 1))
+    h, y = jax.lax.scan(jax.checkpoint(chunk_body), h0.astype(jnp.float32),
+                        (seq(x), seq(dt), seq(Bc), seq(Cc)))
+    y = y.reshape(n * chunk, B, ED).transpose(1, 0, 2)
+    y = y + x.astype(jnp.float32) * D
+    return y, h
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x [B,S,ED]; w [K,ED]; conv_state [B,K-1,ED] or None."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                       # [B,S+K-1,ED]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out + b, new_state
+
+
+def mamba_forward(p, cfg, x, lin: LinearFns, state, *, path_prefix="", chunk: int = 256):
+    """x [B,S,d]; state = dict(h [B,ED,N] f32, conv [B,K-1,ED]) or None (zeros).
+
+    Returns (y [B,S,d], new_state).
+    """
+    Bsz, S, d = x.shape
+    ed = cfg.mamba_expand * d
+    N = cfg.d_state
+    dt_rank = max(1, d // 16)
+    if state is None:
+        state = {
+            "h": jnp.zeros((Bsz, ed, N), jnp.float32),
+            "conv": jnp.zeros((Bsz, cfg.d_conv - 1, ed), jnp.float32),
+        }
+
+    xz = lin.dense(x, p["in_proj"], None, path_prefix + "in_proj")
+    xi, z = jnp.split(xz, 2, axis=-1)                            # [B,S,ED] each
+    xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], state["conv"])
+    xi = jax.nn.silu(xi)
+
+    dbc = lin.dense(xi, p["x_proj"], None, path_prefix + "x_proj")
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = lin.dense(dt, p["dt_proj"], None, path_prefix + "dt_proj")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    A = -jnp.exp(p["A_log"])                                     # [ED,N], negative
+    y, h = selective_scan(xi, dt, Bc, Cc, A, p["D"], state["h"], chunk=chunk)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = lin.dense(y, p["out_proj"], None, path_prefix + "out_proj")
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (TPU-idiomatic).
+
+Supports DeepSeek-MoE fine-grained experts (shared + routed top-k) and
+Arctic's dense-residual-in-parallel-with-MoE. Expert weights are frozen base
+parameters (expert-parallel over the `model` mesh axis); the router is a
+client-tunable layer when targeted by an adapter.
+
+Two dispatch strategies:
+  * ``scatter`` (default): scatter-add tokens into per-expert capacity
+    buffers, gather-combine back. Intermediates are O(E*cap*d) — feasible at
+    1M-token global batches. The GPU all-to-all of expert parallelism becomes
+    the collective XLA inserts at the (expert-sharded buffer) boundary.
+  * ``einsum``: classic one-hot dispatch/combine einsums. O(T*k*E*cap)
+    intermediate — only viable for small shapes; kept as the reference oracle
+    (tests assert both paths agree).
+
+Expert matmuls go through ``LinearFns.expert`` so the Symbiosis base executor
+intercepts them like any other frozen base layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.blocks import LinearFns, dense_init
+
+
+def moe_init(key, cfg, dtype):
+    E, d, fe = cfg.n_experts, cfg.d_model, cfg.ffn_hidden
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),  # router kept f32 for stable softmax
+        "experts": {
+            "gate": jax.vmap(lambda k: dense_init(k, d, fe, dtype))(jax.random.split(ks[1], E)),
+            "up": jax.vmap(lambda k: dense_init(k, d, fe, dtype))(jax.random.split(ks[2], E)),
+            "down": jax.vmap(lambda k: dense_init(k, fe, d, dtype))(jax.random.split(ks[3], E)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = blocks.mlp_init(ks[4], cfg, dtype, d_ff=fe * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(n_tokens: int, E: int, k: int, factor: float) -> int:
+    cap = int(n_tokens * k / E * factor)
+    return max(8, ((cap + 7) // 8) * 8)  # pad to 8 for clean tiling
+
+
+def _route(params, cfg, xt, lin, path_prefix):
+    """Router: returns (gate_vals [T,k], idx [T,k], aux scalar)."""
+    T = xt.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    logits = lin.dense(xt.astype(jnp.float32), params["router"], None,
+                       path_prefix + "router")                       # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                         # [T,k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    # Load-balance auxiliary loss (Switch-style).
+    me = probs.mean(0)                                               # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return gate_vals, idx, aux
+
+
+def _slot_positions(idx, E: int, cap: int):
+    """Per-(token,slot) position within its expert's capacity buffer."""
+    T, k = idx.shape
+    onehot = jax.nn.one_hot(idx.reshape(T * k), E, dtype=jnp.int32)  # [T*k,E]
+    pos = (jnp.cumsum(onehot, axis=0) - 1)                           # running count per expert
+    pos_in_e = (pos * onehot).sum(-1).reshape(T, k)                  # [T,k]
+    keep = pos_in_e < cap
+    return pos_in_e, keep
+
+
+def _expert_ffn(params, xe, lin, path_prefix):
+    g = lin.expert(xe, params["experts"]["gate"], path_prefix + "experts_gate")
+    u = lin.expert(xe, params["experts"]["up"], path_prefix + "experts_up")
+    return lin.expert(jax.nn.silu(g) * u, params["experts"]["down"],
+                      path_prefix + "experts_down")                  # [E,cap,d]
+
+
+def moe_forward(params, cfg, x, lin: LinearFns, *, path_prefix: str = "",
+                capacity_factor: float = 1.25, dispatch: str = "scatter"):
+    """x [B,S,d] -> ([B,S,d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    cap = _capacity(T, E, k, capacity_factor)
+
+    gate_vals, idx, aux = _route(params, cfg, xt, lin, path_prefix)
+    pos_in_e, keep = _slot_positions(idx, E, cap)
+
+    if dispatch == "scatter":
+        dest = idx * cap + pos_in_e                                  # [T,k] in [0, E*cap)
+        dest = jnp.where(keep, dest, E * cap)                        # dropped -> OOB (ignored)
+        src = jnp.repeat(xt, k, axis=0)                              # [T*k,d]
+        xe = jnp.zeros((E * cap, d), x.dtype).at[dest.reshape(-1)].add(
+            src, mode="drop")
+        ye = _expert_ffn(params, xe.reshape(E, cap, d), lin, path_prefix)
+        ye_flat = ye.reshape(E * cap, d)
+        gathered = ye_flat.at[dest.reshape(-1)].get(mode="fill", fill_value=0.0)
+        yt = (gathered.reshape(T, k, d)
+              * (gate_vals * keep).astype(x.dtype)[..., None]).sum(axis=1)
+    elif dispatch == "einsum":
+        disp = (jax.nn.one_hot(idx, E, dtype=x.dtype)[..., :, None]
+                * jax.nn.one_hot(pos_in_e, cap, dtype=x.dtype)[..., None, :]
+                * keep[..., None, None].astype(x.dtype))             # [T,k,E,cap]
+        xe = jnp.einsum("td,tkec->ecd", xt, disp)
+        ye = _expert_ffn(params, xe, lin, path_prefix)
+        combine = disp * gate_vals[..., None, None].astype(x.dtype)
+        yt = jnp.einsum("ecd,tkec->td", ye, combine)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch}")
+
+    if "shared" in params:
+        yt = yt + blocks.mlp_forward(params["shared"], xt, lin,
+                                     path_prefix=path_prefix + "shared_").astype(yt.dtype)
+    return yt.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,36 @@
+"""Model registry: uniform interface over all architecture families."""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.config import ModelConfig, DENSE, MOE, RWKV, HYBRID, ENCDEC, VLM
+from repro.models import transformer, hybrid, rwkv_model, encdec
+
+
+_FAMILY = {
+    DENSE: transformer,
+    MOE: transformer,
+    VLM: transformer,
+    HYBRID: hybrid,
+    RWKV: rwkv_model,
+    ENCDEC: encdec,
+}
+
+
+def get_model(cfg: ModelConfig):
+    """Returns a namespace with init_params / forward / init_cache / prefill /
+    decode_step, all taking cfg as first arg pre-bound."""
+    mod = _FAMILY[cfg.arch]
+
+    def bind(fn_name):
+        fn = getattr(mod, fn_name)
+        return lambda *a, **kw: fn(cfg, *a, **kw)
+
+    return SimpleNamespace(
+        cfg=cfg,
+        init_params=bind("init_params"),
+        forward=bind("forward"),
+        init_cache=bind("init_cache"),
+        prefill=bind("prefill"),
+        decode_step=bind("decode_step"),
+    )

@@ -1,0 +1,145 @@
+"""RWKV6 ("Finch") blocks — attention-free, data-dependent decay linear attention.
+
+TPU adaptation (DESIGN.md §2): the reference CUDA wkv6 kernel is a per-token
+recurrence over a [H, dk, dv] state. We implement it as a *chunked* scan:
+``lax.scan`` over time-chunks carrying the state matrix, with the per-chunk
+recurrence unrolled via an inner scan. The chunk size bounds the live
+activation set (VMEM-friendly) while keeping the sequential dependency exact.
+The baseline uses chunk=1 semantics (plain scan); the perf-optimized variant
+(§Perf hillclimb) uses the intra-chunk parallel form.
+
+Base/client split (paper §3.2 rule): all projections (r,k,v,g,o and the
+channel-mix linears) are frozen base layers routed through LinearFns; the
+token-shift interpolation, data-dependent decay computation (small LoRA-style
+``ddlerp`` params) and the stateful wkv recurrence are client-side ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import LinearFns, dense_init
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    hd = cfg.hd
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    tm = {
+        # token-shift mix coefficients (client-side, tiny)
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        # data-dependent decay: w_t = exp(-exp(decay + tanh(x W1) W2))
+        "decay": jnp.zeros((d,), jnp.float32),
+        "w1": dense_init(ks[0], d, 64, dtype), "w2": dense_init(ks[1], 64, d, dtype),
+        "bonus": jnp.zeros((H, hd), jnp.float32),   # `u` term for current token
+        # frozen base projections
+        "wr": dense_init(ks[2], d, d, dtype), "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype), "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "ln_x": jnp.ones((d,), dtype),
+    }
+    cm = {
+        "mix_k": jnp.full((d,), 0.5, dtype), "mix_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[7], d, cfg.d_ff, dtype),
+        "wv": dense_init(ks[8], cfg.d_ff, d, dtype),
+        "wr": dense_init(ks[9], d, d, dtype),
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def _shift(x, last):
+    """Token shift: prepend `last` [B,1,d] (or zeros) and drop final step."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, m):
+    return x * m + xs * (1.0 - m)
+
+
+def wkv6_scan(r, k, v, w, bonus, state, chunk: int = 128):
+    """The wkv6 recurrence, chunked.
+
+    r,k [B,S,H,dk]; v [B,S,H,dv]; w [B,S,H,dk] (decay in (0,1)); bonus [H,dk];
+    state [B,H,dk,dv]. Returns (out [B,S,H,dv], state').
+
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+      o_t = r_t (S_{t-1} + diag(bonus) k_t^T v_t)
+    """
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} % chunk {chunk} != 0"
+    n = S // chunk
+
+    def outer(carry, inp):
+        st = carry                                           # [B,H,dk,dv] f32
+        # cast INSIDE the chunk body: rematted/scanned tensors stay bf16 in
+        # HBM (and in any cross-chip resharding) — §Perf it10
+        rc, kc, vc, wc = (t.astype(jnp.float32) for t in inp)
+
+        def inner(st, t_inp):
+            rt, kt, vt, wt = t_inp                           # [B,H,dk]/[B,H,dv]
+            kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)         # [B,H,dk,dv]
+            out = jnp.einsum("bhk,bhkv->bhv", rt, st + bonus[None, :, :, None] * kv)
+            st = wt[..., None] * st + kv
+            return st, out
+
+        st, out = jax.lax.scan(inner, st, (rc, kc, vc, wc))
+        return st, out                                       # out [chunk,B,H,dv]
+
+    seq = lambda x: x.reshape(B, n, chunk, *x.shape[2:]).transpose(1, 2, 0, *range(3, x.ndim + 1))
+    rs, ks, vs, ws = (seq(t) for t in (r, k, v, w.astype(r.dtype)))
+    # checkpoint the chunk body: state is only materialized at chunk
+    # boundaries; the intra-chunk recurrence is recomputed in the backward.
+    state, out = jax.lax.scan(jax.checkpoint(outer), state.astype(jnp.float32),
+                              (rs, ks, vs, ws))
+    out = out.reshape(n * chunk, B, H, dv).transpose(1, 0, 2, 3)     # [B,S,H,dv]
+    return out, state
+
+
+def time_mix(p, cfg, x, lin: LinearFns, state, last_x, *, path_prefix=""):
+    """RWKV6 time-mix. x [B,S,d]; state [B,H,dk,dv] f32; last_x [B,1,d] or None."""
+    B, S, d = x.shape
+    hd = cfg.hd
+    H = d // hd
+    xs = _shift(x, last_x)
+    xr, xk, xv, xg, xw = (_mix(x, xs, p[m]) for m in ("mix_r", "mix_k", "mix_v", "mix_g", "mix_w"))
+
+    from repro.common.constrain import constrain
+    HP = (None, None, "model", None)             # [B,S,H,hd]: heads sharded
+    r = constrain(lin.dense(xr, p["wr"], None, path_prefix + "r").reshape(B, S, H, hd), *HP)
+    k = constrain(lin.dense(xk, p["wk"], None, path_prefix + "k").reshape(B, S, H, hd), *HP)
+    v = constrain(lin.dense(xv, p["wv"], None, path_prefix + "v").reshape(B, S, H, hd), *HP)
+    g = lin.dense(xg, p["wg"], None, path_prefix + "g")
+
+    # Data-dependent decay (client-side: tiny LoRA-style projection).
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["w1"].astype(jnp.float32)) @ p["w2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["decay"] + dd)).reshape(B, S, H, hd)      # in (0,1)
+    w = constrain(w, *HP)   # keep the wkv scan head-sharded end-to-end
+
+    out, state = wkv6_scan(r, k, v, w, p["bonus"], state)
+    out = out.reshape(B, S, d)
+    # group norm over heads (approximated by rmsnorm scale ln_x) + gating
+    dt = x.dtype
+    o32 = out.reshape(B, S, H, hd)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, axis=-1, keepdims=True) + 1e-6)
+    out = (o32.reshape(B, S, d) * p["ln_x"].astype(jnp.float32)).astype(dt)
+    out = out * jax.nn.silu(g)
+    out = lin.dense(out, p["wo"], None, path_prefix + "o")
+    return out, state, x[:, -1:]
+
+
+def channel_mix(p, x, lin: LinearFns, last_x, *, path_prefix=""):
+    xs = _shift(x, last_x)
+    xk = _mix(x, xs, p["mix_k"])
+    xr = _mix(x, xs, p["mix_r"])
+    k = lin.dense(xk, p["wk"], None, path_prefix + "cm_k")
+    k = jnp.square(jax.nn.relu(k))
+    kv = lin.dense(k, p["wv"], None, path_prefix + "cm_v")
+    r = jax.nn.sigmoid(lin.dense(xr, p["wr"], None, path_prefix + "cm_r"))
+    return r * kv, x[:, -1:]

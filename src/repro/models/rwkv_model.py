@@ -1,0 +1,113 @@
+"""RWKV6 full model assembly (attention-free; O(1) decode state)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks, rwkv
+from repro.models.transformer import LinCtx, DEFAULT_CTX, embed_tokens, lm_head
+
+
+def _layer_init(key, cfg, dtype):
+    k1, = jax.random.split(key, 1)
+    p = rwkv.rwkv_init(k1, cfg, dtype)
+    p["ln1"] = blocks.rmsnorm_init(cfg.d_model, dtype)
+    p["ln2"] = blocks.rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": blocks.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": blocks.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": blocks.dense_init(ks[1], cfg.d_model, cfg.vocab, dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg, dtype))(
+            jax.random.split(ks[2], cfg.n_layers)),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int = 0, dtype=None):
+    """RWKV decode state: per-layer wkv state + token-shift tails. max_seq is
+    ignored — the state is O(1) in sequence length (the long_500k story)."""
+    H = cfg.d_model // cfg.hd
+    L, d = cfg.n_layers, cfg.d_model
+    return {
+        "wkv": jnp.zeros((L, batch_size, H, cfg.hd, cfg.hd), jnp.float32),
+        "tm_x": jnp.zeros((L, batch_size, 1, d), jnp.dtype(cfg.dtype)),
+        "cm_x": jnp.zeros((L, batch_size, 1, d), jnp.dtype(cfg.dtype)),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def _layer(p, cfg, x, lin, state):
+    """One RWKV layer. state: (wkv, tm_x, cm_x) or None (training, zeros)."""
+    wkv_st, tm_x, cm_x = state if state is not None else (None, None, None)
+    B = x.shape[0]
+    H = cfg.d_model // cfg.hd
+    if wkv_st is None:
+        wkv_st = jnp.zeros((B, H, cfg.hd, cfg.hd), jnp.float32)
+    h = blocks.rmsnorm(p["ln1"], x)
+    y, wkv_st, tm_tail = rwkv.time_mix(p["time_mix"], cfg, h, lin, wkv_st, tm_x)
+    x = x + y
+    h = blocks.rmsnorm(p["ln2"], x)
+    y, cm_tail = rwkv.channel_mix(p["channel_mix"], h, lin, cm_x)
+    x = x + y
+    return x, (wkv_st, tm_tail, cm_tail)
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
+            adapter=None, *, remat: bool = True, moe_dispatch: str = "scatter",
+            capacity_factor: float = 1.25):
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens, ctx.top)
+    scan_adapters = adapter.get("layers") if adapter else None
+
+    def body(x, layer_in):
+        p, ad = layer_in
+        x, _ = _layer(p, cfg, x, ctx.for_layer(ad), None)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["layers"], scan_adapters))
+    x = blocks.rmsnorm(params["final_norm"], x)
+    return lm_head(cfg, params, x, ctx.top), jnp.zeros((), jnp.float32)
+
+
+def _run_with_state(cfg, params, x, cache, ctx, adapter, remat=False):
+    scan_adapters = adapter.get("layers") if adapter else None
+
+    def body(x, layer_in):
+        p, wkv_st, tm_x, cm_x, ad = layer_in
+        x, (wkv_st, tm_x, cm_x) = _layer(p, cfg, x, ctx.for_layer(ad), (wkv_st, tm_x, cm_x))
+        return x, (wkv_st, tm_x, cm_x)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (wkv, tm_x, cm_x) = jax.lax.scan(
+        body, x, (params["layers"], cache["wkv"], cache["tm_x"], cache["cm_x"], scan_adapters))
+    return x, wkv, tm_x, cm_x
+
+
+def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
+            adapter=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens, ctx.top)
+    x, wkv, tm_x, cm_x = _run_with_state(cfg, params, x, cache, ctx, adapter, remat=True)
+    x = blocks.rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
+    return logits, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x,
+                    "pos": cache["pos"] + S}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,
+                adapter=None):
+    x = embed_tokens(cfg, params, token[:, None], ctx.top)
+    x, wkv, tm_x, cm_x = _run_with_state(cfg, params, x, cache, ctx, adapter)
+    x = blocks.rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params, x, ctx.top)[:, 0]
+    return logits, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x, "pos": cache["pos"] + 1}

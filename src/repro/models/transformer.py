@@ -1,0 +1,340 @@
+"""Decoder-only transformer (dense, MoE, VLM backbones).
+
+Uniform layers are stacked along a leading [L] axis and executed with
+``lax.scan`` (keeps the HLO one-layer-sized for the 40-layer × 512-device
+dry-runs). Heterogeneous prefixes (DeepSeek-MoE's first dense layer) are
+unrolled before the scan.
+
+The ``LinCtx`` hook threads Symbiosis split execution through every frozen
+matmul; ``adapter`` is a per-client PEFT tree whose per-layer leaves are
+sliced inside the scan (so adapters ride along with their layer).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, VLM
+from repro.models import blocks, moe as moe_lib
+from repro.models.blocks import DEFAULT_LIN, LinearFns
+
+
+class LinCtx(NamedTuple):
+    """Linear-hook context. `top` serves embed/lm_head; `for_layer` binds a
+    per-layer adapter slice into a LinearFns."""
+    top: LinearFns
+    for_layer: Callable[[Any], LinearFns]
+
+
+DEFAULT_CTX = LinCtx(top=DEFAULT_LIN, for_layer=lambda adapter_slice: DEFAULT_LIN)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, layer_idx: int, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": blocks.rmsnorm_init(cfg.d_model, dtype),
+        "ln2": blocks.rmsnorm_init(cfg.d_model, dtype),
+        "attn": blocks.attn_init(ks[0], cfg, dtype),
+    }
+    if cfg.is_moe_layer(layer_idx) and layer_idx >= cfg.first_dense_layers:
+        p["moe"] = moe_lib.moe_init(ks[1], cfg, dtype)
+        if cfg.dense_residual:
+            p["mlp"] = blocks.mlp_init(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = blocks.mlp_init(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    n_pre = cfg.first_dense_layers
+    n_scan = cfg.n_layers - n_pre
+    params = {
+        "embed": blocks.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": blocks.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = blocks.dense_init(ks[1], cfg.d_model, cfg.vocab, dtype)
+    if n_pre:
+        params["pre_layers"] = [
+            _layer_init(k, cfg, i, dtype)
+            for i, k in enumerate(jax.random.split(ks[2], n_pre))
+        ]
+    params["layers"] = jax.vmap(
+        lambda k: _layer_init(k, cfg, n_pre, dtype)  # scan layers share structure
+    )(jax.random.split(ks[3], n_scan))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+def _prefix_kv(adapter_slice):
+    if isinstance(adapter_slice, dict) and "prefix_k" in adapter_slice:
+        return adapter_slice["prefix_k"], adapter_slice["prefix_v"]
+    return None
+
+
+def _layer_forward(p, cfg: ModelConfig, x, positions, lin: LinearFns, adapter_slice,
+                   *, moe_dispatch: str = "scatter", capacity_factor: float = 1.25):
+    h = blocks.rmsnorm(p["ln1"], x)
+    attn = blocks.mha_forward(p["attn"], cfg, h, positions, lin)
+    pk = _prefix_kv(adapter_slice)
+    if pk is not None:
+        attn = attn + _prefix_attend(p["attn"], cfg, h, pk, lin)
+    x = x + attn
+    h = blocks.rmsnorm(p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        y, aux = moe_lib.moe_forward(p["moe"], cfg, h, lin, dispatch=moe_dispatch,
+                                     capacity_factor=capacity_factor)
+        if "mlp" in p:  # Arctic dense residual in parallel
+            y = y + blocks.mlp_forward(p["mlp"], h, lin)
+    else:
+        y = blocks.mlp_forward(p["mlp"], h, lin)
+    return x + y, aux
+
+
+def _prefix_attend(attn_p, cfg, h, prefix_kv, lin: LinearFns):
+    """Prefix-tuning: queries additionally attend to learned virtual KV pairs.
+
+    Added as a separate softmax branch (an additive approximation that keeps
+    the base attention untouched — the client-side op of paper §3.2).
+    prefix_k/v: [n_prefix, K, hd].
+    """
+    import math
+    B, S, _ = h.shape
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.n_heads
+    G = H // K
+    pk, pv = prefix_kv
+    q = lin.dense(h, attn_p["wq"], None, "q").reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgh,pkh->bkgsp", q, pk.astype(h.dtype)).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1).astype(h.dtype)
+    out = jnp.einsum("bkgsp,pkh->bskgh", p, pv.astype(h.dtype)).reshape(B, S, H * hd)
+    return lin.dense(out, attn_p["wo"], None, "o") * 0.1
+
+
+def _layer_decode(p, cfg: ModelConfig, x, cache, pos, lin: LinearFns, adapter_slice,
+                  *, ring: bool = False):
+    h = blocks.rmsnorm(p["ln1"], x)
+    if "k_s" in cache:   # int8-quantized cache (beyond-paper decode variant)
+        attn, ck, cks, cv, cvs = blocks.mha_decode_quant(
+            p["attn"], cfg, h, cache["k"], cache["k_s"], cache["v"],
+            cache["v_s"], pos, lin, ring=ring)
+        new_cache = {"k": ck, "k_s": cks, "v": cv, "v_s": cvs}
+        pk = _prefix_kv(adapter_slice)
+        if pk is not None:
+            attn = attn + _prefix_attend(p["attn"], cfg, h, pk, lin)
+        x = x + attn
+        h = blocks.rmsnorm(p["ln2"], x)
+        if "moe" in p:
+            y, _ = moe_lib.moe_forward(p["moe"], cfg, h, lin)
+            if "mlp" in p:
+                y = y + blocks.mlp_forward(p["mlp"], h, lin)
+        else:
+            y = blocks.mlp_forward(p["mlp"], h, lin)
+        return x + y, new_cache
+    attn, ck, cv = blocks.mha_decode(p["attn"], cfg, h, cache["k"], cache["v"], pos, lin,
+                                     ring=ring)
+    pk = _prefix_kv(adapter_slice)
+    if pk is not None:
+        attn = attn + _prefix_attend(p["attn"], cfg, h, pk, lin)
+    x = x + attn
+    h = blocks.rmsnorm(p["ln2"], x)
+    if "moe" in p:
+        y, _ = moe_lib.moe_forward(p["moe"], cfg, h, lin)
+        if "mlp" in p:
+            y = y + blocks.mlp_forward(p["mlp"], h, lin)
+    else:
+        y = blocks.mlp_forward(p["mlp"], h, lin)
+    return x + y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+def _adapter_layers(adapter, cfg):
+    """Split an adapter tree into (scan-stacked part, pre-layer list part)."""
+    if adapter is None:
+        return None, None
+    lay = adapter.get("layers") if isinstance(adapter, dict) else None
+    pre = adapter.get("pre_layers") if isinstance(adapter, dict) else None
+    return lay, pre
+
+
+def embed_tokens(cfg, params, tokens, lin: LinearFns):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return x
+
+
+def lm_head(cfg, params, x, lin: LinearFns):
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    return lin.dense(x, w, None, "lm_head")
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
+            adapter=None, *, remat: bool = True, moe_dispatch: str = "scatter",
+            capacity_factor: float = 1.25):
+    """Training / scoring forward. batch: tokens [B,S] (+ 'img_embed' [B,Ti,d]
+    for VLM). Returns (logits [B,S_total,V], aux_loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens, ctx.top)
+    if cfg.arch == VLM and "img_embed" in batch:
+        img = batch["img_embed"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)            # image prefix, then text
+    S_total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_total)[None, :], (B, S_total))
+
+    scan_adapters, pre_adapters = _adapter_layers(adapter, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, p in enumerate(params.get("pre_layers", [])):
+        ad = pre_adapters[i] if pre_adapters is not None else None
+        x, aux = _layer_forward(p, cfg, x, positions, ctx.for_layer(ad), ad,
+                                moe_dispatch=moe_dispatch,
+                                capacity_factor=capacity_factor)
+        aux_total += aux
+
+    def body(carry, layer_in):
+        x, aux_acc = carry
+        p, ad = layer_in
+        x, aux = _layer_forward(p, cfg, x, positions, ctx.for_layer(ad), ad,
+                                moe_dispatch=moe_dispatch,
+                                capacity_factor=capacity_factor)
+        return (x, aux_acc + aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                     (params["layers"], scan_adapters))
+    x = blocks.rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params, x, ctx.top)
+    return logits, aux_total
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None,
+               *, window: int = 0, quant: bool = False):
+    """window > 0 -> ring-buffer cache of that depth (sliding-window archs can
+    decode contexts far beyond the cache size; use decode_step(ring=True)).
+    quant=True -> int8 KV entries + per-head f32 scales (halves the HBM
+    bytes of the decode cache read)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_pre = cfg.first_dense_layers
+    n_scan = cfg.n_layers - n_pre
+    T = min(window, max_seq) if window else max_seq
+    K, hd = cfg.n_kv_heads, cfg.hd
+    if quant:
+        def layer_kv(lead=()):
+            return {"k": jnp.zeros(lead + (batch_size, T, K, hd), jnp.int8),
+                    "k_s": jnp.zeros(lead + (batch_size, T, K, 1), jnp.float32),
+                    "v": jnp.zeros(lead + (batch_size, T, K, hd), jnp.int8),
+                    "v_s": jnp.zeros(lead + (batch_size, T, K, 1), jnp.float32)}
+    else:
+        def layer_kv(lead=()):
+            return {"k": jnp.zeros(lead + (batch_size, T, K, hd), dtype),
+                    "v": jnp.zeros(lead + (batch_size, T, K, hd), dtype)}
+    cache = {
+        "layers": layer_kv((n_scan,)),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+    if n_pre:
+        cache["pre_layers"] = [layer_kv() for _ in range(n_pre)]
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,
+                adapter=None, *, ring: bool = False):
+    """One decode step. token [B] int32. Returns (logits [B,V], new_cache).
+    ring=True: the KV cache is a ring buffer (see init_cache(window=...))."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = embed_tokens(cfg, params, token[:, None], ctx.top)
+
+    scan_adapters, pre_adapters = _adapter_layers(adapter, cfg)
+    new_pre = []
+    for i, p in enumerate(params.get("pre_layers", [])):
+        ad = pre_adapters[i] if pre_adapters is not None else None
+        x, c = _layer_decode(p, cfg, x, cache["pre_layers"][i], pos, ctx.for_layer(ad), ad,
+                             ring=ring)
+        new_pre.append(c)
+
+    def body(x, layer_in):
+        p, c, ad = layer_in
+        x, c = _layer_decode(p, cfg, x, c, pos, ctx.for_layer(ad), ad, ring=ring)
+        return x, c
+
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"], scan_adapters))
+    x = blocks.rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params, x, ctx.top)[:, 0]
+    new_cache = {"layers": new_layers, "pos": pos + 1}
+    if new_pre:
+        new_cache["pre_layers"] = new_pre
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
+            adapter=None):
+    """Prefill: forward over the prompt, filling the KV cache.
+
+    Implemented as forward + bulk cache write (projections recomputed per
+    layer would double base-linear work; instead we run the layer bodies and
+    capture K/V via the same decode-path projections).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens, ctx.top)
+    if cfg.arch == VLM and "img_embed" in batch:
+        x = jnp.concatenate([batch["img_embed"].astype(x.dtype), x], axis=1)
+    S_total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_total)[None, :], (B, S_total))
+    scan_adapters, pre_adapters = _adapter_layers(adapter, cfg)
+
+    def capture_layer(p, x, lin, ad):
+        """Run one layer, also returning its K/V for the cache."""
+        h = blocks.rmsnorm(p["ln1"], x)
+        hd, K = cfg.hd, cfg.n_kv_heads
+        k = lin.dense(h, p["attn"]["wk"], p["attn"].get("bk"), "k").reshape(B, S_total, K, hd)
+        v = lin.dense(h, p["attn"]["wv"], p["attn"].get("bv"), "v").reshape(B, S_total, K, hd)
+        if cfg.qk_norm:
+            k = blocks.head_rmsnorm(p["attn"]["k_norm"], k)
+        if cfg.rope_theta > 0:
+            k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        x, _ = _layer_forward(p, cfg, x, positions, lin, ad)
+        return x, k, v
+
+    new_pre = []
+    for i, p in enumerate(params.get("pre_layers", [])):
+        ad = pre_adapters[i] if pre_adapters is not None else None
+        x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
+        c = cache["pre_layers"][i]
+        new_pre.append({"k": jax.lax.dynamic_update_slice(c["k"], k, (0, 0, 0, 0)),
+                        "v": jax.lax.dynamic_update_slice(c["v"], v, (0, 0, 0, 0))})
+
+    def body(x, layer_in):
+        p, c, ad = layer_in
+        x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
+        c = {"k": jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0)),
+             "v": jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))}
+        return x, c
+
+    x, new_layers = jax.lax.scan(jax.checkpoint(body), x,
+                                 (params["layers"], cache["layers"], scan_adapters))
+    x = blocks.rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
+    new_cache = {"layers": new_layers, "pos": jnp.full((B,), S_total, jnp.int32)}
+    if new_pre:
+        new_cache["pre_layers"] = new_pre
+    return logits, new_cache

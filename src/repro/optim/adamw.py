@@ -1,0 +1,62 @@
+"""AdamW in pure JAX (the fine-tuning client's optimizer).
+
+Per the Symbiosis design, optimizer state is *client-side* runtime state: in
+multi-client banks every state leaf carries a leading client axis and the
+update is vmapped (core.symbiosis), so each client tunes independently while
+sharing the frozen base.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params), v=zeros(params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state: AdamWState, lr, *, b1=0.9, b2=0.999,
+                 eps=1e-8, weight_decay=0.0, max_grad_norm=0.0):
+    if max_grad_norm:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        _, gnorm = clip_by_global_norm(grads, 1e30)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm

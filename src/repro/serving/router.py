@@ -1,0 +1,107 @@
+"""Placement router: the service provider's admission + placement logic
+(paper §3.3/§3.4).
+
+Given a request (context length, batch, latency sensitivity) and the fleet
+(accelerator slots with free HBM, CPU hosts), choose the §3.4 placement:
+
+  * ``gpu``          — client co-located with the base executor (fastest,
+                       needs cache + runtime state to fit free HBM)
+  * ``gpu_offload``  — cache on host, compute on accelerator (mid contexts)
+  * ``hetero``       — client on CPU (huge contexts; constant PCIe traffic)
+
+and an accelerator slot, using the analytic cost model in
+``serving.kvcache``. This is the piece the paper assigns to the provider:
+"they only need to provision the base executor resources ... the per-token
+resource requirement remains constant irrespective of the client-side
+configurations" — client placement is decided per request here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.config import ModelConfig
+from repro.common.hardware import V5E, Chip
+from repro.serving.kvcache import cache_bytes, decode_token_cost
+
+
+@dataclasses.dataclass
+class Slot:
+    """One accelerator's client-side capacity (base executor excluded)."""
+    slot_id: int
+    free_hbm: float
+    chip: Chip = V5E
+
+    def fits(self, nbytes: float) -> bool:
+        return nbytes <= self.free_hbm
+
+
+@dataclasses.dataclass
+class Placement:
+    slot_id: Optional[int]        # None -> CPU host
+    mode: str                     # gpu | gpu_offload | hetero
+    est_s_per_token: float
+    cache_bytes: int
+
+
+class PlacementRouter:
+    """Routes client sessions onto a fleet of accelerator slots + CPU hosts."""
+
+    def __init__(self, cfg: ModelConfig, slots: List[Slot],
+                 *, host_free_bytes: float = 400e9):
+        self.cfg = cfg
+        self.slots = {s.slot_id: s for s in slots}
+        self.host_free = host_free_bytes
+
+    def route(self, context_len: int, batch: int = 1,
+              *, latency_sensitive: bool = True) -> Placement:
+        """Pick the cheapest placement that fits; latency-sensitive requests
+        refuse the CPU unless nothing else fits."""
+        need = cache_bytes(self.cfg, context_len, batch)
+        candidates = []
+
+        gpu = decode_token_cost(self.cfg, context_len, placement="gpu")
+        off = decode_token_cost(self.cfg, context_len, placement="gpu_offload")
+        het = decode_token_cost(self.cfg, context_len, placement="hetero")
+
+        for s in self.slots.values():
+            if gpu.total != float("inf") and s.fits(need * batch):
+                candidates.append(Placement(s.slot_id, "gpu",
+                                            gpu.total * batch, need))
+            # offload only needs working-set HBM (~1 layer of cache)
+            if self.host_free >= need and s.fits(need / self.cfg.n_layers):
+                candidates.append(Placement(s.slot_id, "gpu_offload",
+                                            off.total * batch, need))
+        if self.host_free >= need:
+            pen = 1.0 if not latency_sensitive else 1.5   # soft CPU aversion
+            candidates.append(Placement(None, "hetero",
+                                        het.total * batch * pen, need))
+        if not candidates:
+            raise RuntimeError(
+                f"no placement fits {need/1e9:.1f} GB cache "
+                f"(context {context_len} × batch {batch})")
+        best = min(candidates, key=lambda p: p.est_s_per_token)
+        self.commit(best)
+        # undo the latency penalty in the reported estimate
+        if best.mode == "hetero" and latency_sensitive:
+            best = dataclasses.replace(best,
+                                       est_s_per_token=best.est_s_per_token / 1.5)
+        return best
+
+    def commit(self, p: Placement):
+        if p.slot_id is not None and p.mode == "gpu":
+            self.slots[p.slot_id].free_hbm -= p.cache_bytes
+        elif p.slot_id is not None:
+            self.slots[p.slot_id].free_hbm -= p.cache_bytes / self.cfg.n_layers
+            self.host_free -= p.cache_bytes
+        else:
+            self.host_free -= p.cache_bytes
+
+    def release(self, p: Placement):
+        if p.slot_id is not None and p.mode == "gpu":
+            self.slots[p.slot_id].free_hbm += p.cache_bytes
+        elif p.slot_id is not None:
+            self.slots[p.slot_id].free_hbm += p.cache_bytes / self.cfg.n_layers
+            self.host_free += p.cache_bytes
+        else:
+            self.host_free += p.cache_bytes

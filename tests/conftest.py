@@ -1,0 +1,43 @@
+"""Shared fixtures: tiny configs per architecture family.
+
+NOTE: no XLA_FLAGS here — tests run on the single real CPU device; only the
+dry-run (repro.launch.dryrun) forces 512 placeholder devices.
+"""
+import jax
+import pytest
+
+from repro.config import (ModelConfig, AdapterConfig, DENSE, MOE, RWKV, HYBRID,
+                          ENCDEC, VLM)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tiny(arch=DENSE, **kw):
+    base = dict(name=f"tiny-{arch}", arch=arch, n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                dtype="float32", param_dtype="float32")
+    if arch == MOE:
+        base.update(n_experts=4, top_k=2, n_shared_experts=1, d_expert=32,
+                    first_dense_layers=1, n_layers=3)
+    if arch == RWKV:
+        base.update(n_heads=4, n_kv_heads=4, head_dim=16)
+    if arch == HYBRID:
+        base.update(n_layers=4, attn_every=2, n_experts=4, top_k=2,
+                    moe_every=2, moe_offset=1, d_state=8, d_conv=4)
+    if arch == ENCDEC:
+        base.update(n_enc_layers=2, n_frontend_tokens=8, rope_theta=0.0,
+                    n_kv_heads=4)
+    if arch == VLM:
+        base.update(n_frontend_tokens=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def lora_cfg():
+    return AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))

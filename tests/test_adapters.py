@@ -1,0 +1,100 @@
+"""PEFT adapter bank semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AdapterConfig, DENSE, RWKV
+from repro.core import adapters as ad_lib
+from repro.core.virtlayer import make_client_ctx
+from repro.models import get_model
+from conftest import tiny
+
+
+class TestLoRA:
+    def test_starts_as_identity(self, key):
+        """B == 0 at init => adapter output == base output exactly."""
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="lora", rank=4, targets=("q", "v"))
+        model = get_model(cfg)
+        base = model.init_params(key)
+        adapter = ad_lib.init_adapter(cfg, acfg, jax.random.PRNGKey(1))
+        ctx = make_client_ctx(cfg, acfg)
+        batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab)}
+        with_ad, _ = model.forward(base, batch, ctx, adapter)
+        without, _ = model.forward(base, batch, make_client_ctx(cfg, None), None)
+        np.testing.assert_allclose(np.asarray(with_ad), np.asarray(without),
+                                   rtol=1e-6)
+
+    def test_nonzero_b_changes_output(self, key):
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="lora", rank=4, targets=("q", "v"))
+        model = get_model(cfg)
+        base = model.init_params(key)
+        adapter = ad_lib.init_adapter(cfg, acfg, jax.random.PRNGKey(1))
+        adapter = jax.tree.map(lambda x: x + 0.05, adapter)
+        ctx = make_client_ctx(cfg, acfg)
+        batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab)}
+        with_ad, _ = model.forward(base, batch, ctx, adapter)
+        without, _ = model.forward(base, batch, make_client_ctx(cfg, None), None)
+        assert float(jnp.abs(with_ad - without).max()) > 1e-4
+
+    def test_rank_padding_zero_rows_noop(self, key):
+        """Mixed-rank banks pad A/B with zeros — padded rows are exact no-ops
+        in the LoRA delta (DESIGN.md §5)."""
+        x = jax.random.normal(key, (5, 16))
+        A = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+        B = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+        A_pad = jnp.concatenate([A, jnp.zeros((16, 4))], axis=1)
+        B_pad = jnp.concatenate([B, jnp.zeros((4, 8))], axis=0)
+        np.testing.assert_allclose(x @ A @ B, x @ A_pad @ B_pad, rtol=1e-5)
+
+    def test_bank_stacking(self, key):
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="lora", rank=4, targets=("q",))
+        bank = ad_lib.init_client_bank(cfg, acfg, 3, key)
+        leaves = jax.tree.leaves(bank)
+        assert all(l.shape[0] == 3 for l in leaves)
+        # clients differ (independent init)
+        a = np.asarray(leaves[0])
+        assert not np.allclose(a[0], a[1])
+
+
+class TestRWKVAliases:
+    def test_q_maps_to_r(self):
+        cfg = tiny(RWKV)
+        acfg = AdapterConfig(method="lora", rank=4, targets=("q", "v"))
+        targets = dict(ad_lib.resolve_targets(cfg, acfg))
+        assert "r" in targets and "v" in targets
+        assert targets["r"] == (cfg.d_model, cfg.d_model)
+
+
+class TestIA3:
+    def test_identity_at_ones(self, key):
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="ia3", targets=("k", "v", "down"))
+        model = get_model(cfg)
+        base = model.init_params(key)
+        adapter = ad_lib.init_adapter(cfg, acfg, jax.random.PRNGKey(1))
+        ctx = make_client_ctx(cfg, acfg)
+        batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab)}
+        with_ad, _ = model.forward(base, batch, ctx, adapter)
+        without, _ = model.forward(base, batch, make_client_ctx(cfg, None), None)
+        np.testing.assert_allclose(np.asarray(with_ad), np.asarray(without),
+                                   rtol=1e-6)
+
+
+class TestPrefix:
+    def test_prefix_shapes_and_effect(self, key):
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="prefix", n_prefix=4)
+        adapter = ad_lib.init_adapter(cfg, acfg, key)
+        pk = adapter["layers"]["prefix_k"]
+        assert pk.shape == (cfg.n_layers, 4, cfg.n_kv_heads, cfg.hd)
+        model = get_model(cfg)
+        base = model.init_params(jax.random.PRNGKey(1))
+        ctx = make_client_ctx(cfg, acfg)
+        batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab)}
+        with_ad, _ = model.forward(base, batch, ctx, adapter)
+        without, _ = model.forward(base, batch, make_client_ctx(cfg, None), None)
+        assert float(jnp.abs(with_ad - without).max()) > 1e-6

@@ -1,0 +1,80 @@
+"""Prefill/decode vs full forward consistency — the cache math is exact.
+
+For each family: forward(prompt + generated) logits at the last position
+must match prefill(prompt) -> decode(token)* stepwise logits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DENSE, MOE, RWKV, HYBRID, VLM
+from repro.models import get_model
+from conftest import tiny
+
+FAMS = [DENSE, RWKV, HYBRID, VLM]
+# MoE excluded from exactness: capacity-based dispatch depends on the token
+# count in flight (prefill batch vs single token), so logits match only when
+# no token is dropped — covered separately below.
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = tiny(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    base = model.init_params(key)
+    B, S, n_new = 2, 8, 3
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    extra = {}
+    if arch == VLM:
+        extra["img_embed"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+
+    max_seq = S + n_new + 1 + (cfg.n_frontend_tokens if arch == VLM else 0)
+    cache = model.init_cache(B, max_seq)
+    logits_p, cache = model.prefill(base, {"tokens": prompt, **extra}, cache)
+
+    toks = [jnp.argmax(logits_p, -1).astype(jnp.int32)]
+    dec_logits = [logits_p]
+    for _ in range(n_new):
+        lg, cache = model.decode_step(base, cache, toks[-1])
+        dec_logits.append(lg)
+        toks.append(jnp.argmax(lg, -1).astype(jnp.int32))
+
+    seq = jnp.concatenate([prompt] + [t[:, None] for t in toks[:-1]], axis=1)
+    logits_f, _ = model.forward(base, {"tokens": seq, **extra}, remat=False)
+    prefix = cfg.n_frontend_tokens if arch == VLM else 0  # image tokens lead
+    for i in range(n_new + 1):
+        pos = prefix + S - 1 + i
+        np.testing.assert_allclose(
+            np.asarray(dec_logits[i]), np.asarray(logits_f[:, pos]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch}: decode step {i} diverges from forward")
+
+
+def test_moe_decode_runs_finite():
+    cfg = tiny(MOE)
+    model = get_model(cfg)
+    base = model.init_params(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 16)
+    logits, cache = model.prefill(base, {"tokens": jnp.ones((2, 8), jnp.int32)}, cache)
+    logits2, _ = model.decode_step(base, cache, jnp.argmax(logits, -1).astype(jnp.int32))
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+def test_ring_cache_matches_full_cache():
+    """Sliding-window ring decode == full-depth decode (beyond-paper)."""
+    cfg = tiny(DENSE, sliding_window=8)
+    model = get_model(cfg)
+    base = model.init_params(jax.random.PRNGKey(0))
+    B = 2
+    full = model.init_cache(B, 64)
+    ring = model.init_cache(B, 64, window=16)
+    tok = jnp.ones((B,), jnp.int32)
+    for i in range(40):
+        lf, full = model.decode_step(base, full, tok)
+        lr, ring = model.decode_step(base, ring, tok, ring=True)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                                   rtol=1e-4, atol=1e-4)
+        tok = jnp.argmax(lf, -1).astype(jnp.int32)

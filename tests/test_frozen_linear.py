@@ -1,0 +1,72 @@
+"""Memory-optimized frozen backward (paper §3.6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.frozen_linear import frozen_dense, frozen_expert
+
+
+def _plain(x, w, b=None):
+    y = x @ w
+    return y + b if b is not None else y
+
+
+class TestFrozenDense:
+    def test_forward_matches(self, key):
+        x = jax.random.normal(key, (8, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 24))
+        b = jax.random.normal(jax.random.PRNGKey(2), (24,))
+        np.testing.assert_allclose(frozen_dense(x, w), _plain(x, w), rtol=1e-6)
+        np.testing.assert_allclose(frozen_dense(x, w, b), _plain(x, w, b), rtol=1e-6)
+
+    def test_dx_matches_autodiff(self, key):
+        x = jax.random.normal(key, (8, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 24))
+        g = lambda f: jax.grad(lambda x_: f(x_, w).sum())(x)
+        np.testing.assert_allclose(g(frozen_dense), g(_plain), rtol=1e-5)
+
+    def test_dw_is_zero(self, key):
+        """The base weight is frozen: its cotangent is structurally zero
+        (paper: no parameter update at the base executor)."""
+        x = jax.random.normal(key, (8, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 24))
+        dw = jax.grad(lambda w_: frozen_dense(x, w_).sum())(w)
+        assert float(jnp.abs(dw).max()) == 0.0
+
+    def test_no_activation_residuals(self, key):
+        """§3.6's memory claim, structurally: the VJP closure must not
+        capture any tensor shaped like the activations — only the weight."""
+        x = jax.random.normal(key, (32, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 24))
+        _, vjp = jax.vjp(lambda x_: frozen_dense(x_, w), x)
+        leaves = jax.tree.leaves(vjp)
+        act_shaped = [l for l in leaves if hasattr(l, "shape")
+                      and l.shape[:1] == (32,)]
+        assert not act_shaped, f"residuals hold activations: {[l.shape for l in act_shaped]}"
+
+    def test_grad_through_composition(self, key):
+        """dx flows through a chain of frozen layers + nonlinearity."""
+        x = jax.random.normal(key, (4, 16))
+        w1 = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+        w2 = jax.random.normal(jax.random.PRNGKey(2), (16, 16))
+
+        def f(fn, x):
+            return fn(jax.nn.gelu(fn(x, w1)), w2).sum()
+
+        np.testing.assert_allclose(
+            jax.grad(lambda x_: f(frozen_dense, x_))(x),
+            jax.grad(lambda x_: f(_plain, x_))(x), rtol=1e-5)
+
+
+class TestFrozenExpert:
+    def test_forward_and_grad(self, key):
+        x = jax.random.normal(key, (3, 8, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 24))
+        ref = jnp.einsum("eci,eio->eco", x, w)
+        np.testing.assert_allclose(frozen_expert(x, w), ref, rtol=1e-5)
+        dx = jax.grad(lambda x_: frozen_expert(x_, w).sum())(x)
+        dx_ref = jax.grad(lambda x_: jnp.einsum("eci,eio->eco", x_, w).sum())(x)
+        np.testing.assert_allclose(dx, dx_ref, rtol=1e-5)
+        dw = jax.grad(lambda w_: frozen_expert(x, w_).sum())(w)
+        assert float(jnp.abs(dw).max()) == 0.0

@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (sgmv, sgmv_ref, ragged_linear, ragged_linear_ref,
+                           decode_attn, decode_attn_ref,
+                           flash_attn, flash_attn_ref)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+           dict(rtol=2e-4, atol=2e-4)
+
+
+class TestSGMV:
+    @given(
+        nb=st.integers(1, 4),
+        din=st.sampled_from([32, 64, 100]),
+        r=st.sampled_from([4, 8, 16]),
+        dout=st.sampled_from([48, 128, 200]),
+        n_adapters=st.integers(1, 4),
+        dt=st.sampled_from(DTYPES),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, nb, din, r, dout, n_adapters, dt, seed):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 4)
+        T = nb * 128
+        x = jax.random.normal(ks[0], (T, din), jnp.float32).astype(dt)
+        A = (jax.random.normal(ks[1], (n_adapters, din, r), jnp.float32) * 0.3).astype(dt)
+        B = (jax.random.normal(ks[2], (n_adapters, r, dout), jnp.float32) * 0.3).astype(dt)
+        ids = jax.random.randint(ks[3], (nb,), -1, n_adapters).astype(jnp.int32)
+        y = sgmv(x, A, B, ids, scale=0.5)
+        yr = sgmv_ref(x, A, B, ids, block_t=128, scale=0.5)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), **_tol(dt))
+
+    def test_dead_blocks_zero(self):
+        x = jnp.ones((256, 32))
+        A = jnp.ones((2, 32, 4))
+        B = jnp.ones((2, 4, 16))
+        y = sgmv(x, A, B, jnp.array([-1, 0], jnp.int32))
+        assert float(jnp.abs(y[:128]).max()) == 0.0
+        assert float(jnp.abs(y[128:]).max()) > 0.0
+
+
+class TestRaggedLinear:
+    @given(
+        budget=st.sampled_from([64, 200, 512]),
+        din=st.sampled_from([32, 100, 256]),
+        dout=st.sampled_from([16, 130, 384]),
+        bias=st.booleans(),
+        dt=st.sampled_from(DTYPES),
+        live_frac=st.floats(0.0, 1.0),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, budget, din, dout, bias, dt, live_frac):
+        key = jax.random.PRNGKey(0)
+        buf = jax.random.normal(key, (budget, din), jnp.float32).astype(dt)
+        w = (jax.random.normal(jax.random.PRNGKey(1), (din, dout), jnp.float32)
+             * 0.1).astype(dt)
+        b = (jax.random.normal(jax.random.PRNGKey(2), (dout,), jnp.float32)
+             .astype(dt) if bias else None)
+        n_live = int(budget * live_frac)
+        y = ragged_linear(buf, w, b, n_live)
+        yr = ragged_linear_ref(buf, w, b, n_live)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), **_tol(dt))
+
+
+class TestDecodeAttn:
+    @given(
+        B=st.integers(1, 3),
+        K=st.sampled_from([1, 2, 4]),
+        G=st.sampled_from([1, 2, 4]),
+        hd=st.sampled_from([32, 64]),
+        T=st.sampled_from([128, 300, 1024]),
+        window=st.sampled_from([0, 64]),
+        dt=st.sampled_from(DTYPES),
+        seed=st.integers(0, 50),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, B, K, G, hd, T, window, dt, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(ks[0], (B, K, G, hd), jnp.float32).astype(dt)
+        k = jax.random.normal(ks[1], (B, T, K, hd), jnp.float32).astype(dt)
+        v = jax.random.normal(ks[2], (B, T, K, hd), jnp.float32).astype(dt)
+        pos = jax.random.randint(ks[3], (B,), 0, T)
+        y = decode_attn(q, k, v, pos, window=window, block_kv=128)
+        yr = decode_attn_ref(q, k, v, pos, window=window)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), **_tol(dt))
+
+    def test_pos_zero_single_entry(self):
+        """Numerical edge: only one valid cache entry."""
+        q = jnp.ones((1, 1, 2, 32))
+        k = jnp.ones((1, 256, 1, 32))
+        v = jnp.full((1, 256, 1, 32), 2.0)
+        y = decode_attn(q, k, v, jnp.zeros((1,), jnp.int32))
+        np.testing.assert_allclose(np.asarray(y), 2.0, rtol=1e-5)
+
+
+class TestFlashAttn:
+    @given(
+        B=st.integers(1, 2),
+        S=st.sampled_from([128, 300, 512]),
+        K=st.sampled_from([1, 2, 4]),
+        G=st.sampled_from([1, 2, 4]),
+        hd=st.sampled_from([32, 64]),
+        window=st.sampled_from([0, 64]),
+        dt=st.sampled_from(DTYPES),
+        seed=st.integers(0, 30),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_causal_matches_ref(self, B, S, K, G, hd, window, dt, seed):
+        H = K * G
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32).astype(dt)
+        k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32).astype(dt)
+        v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32).astype(dt)
+        y = flash_attn(q, k, v, window=window, block_q=128, block_kv=128)
+        yr = flash_attn_ref(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), **_tol(dt))
+
+    def test_noncausal_cross(self):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 4, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 32))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 32))
+        y = flash_attn(q, k, v, causal=False, block_q=128, block_kv=128)
+        yr = flash_attn_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,48 @@
+"""Placement router (§3.4 provider-side decisions)."""
+import pytest
+
+from repro.configs import get_config
+from repro.serving.router import PlacementRouter, Slot
+
+
+@pytest.fixture
+def router():
+    cfg = get_config("symbiosis-llama2-13b")
+    return PlacementRouter(cfg, [Slot(0, free_hbm=10e9), Slot(1, free_hbm=10e9)])
+
+
+class TestRouting:
+    def test_short_context_goes_gpu(self, router):
+        p = router.route(context_len=2_000)
+        assert p.mode == "gpu" and p.slot_id is not None
+
+    def test_long_context_goes_hetero(self, router):
+        p = router.route(context_len=262_144)
+        assert p.mode == "hetero" and p.slot_id is None
+
+    def test_mid_context_offloads(self, router):
+        # 32k cache ~26 GB: too big for a 10 GB slot, too fast for CPU-only?
+        p = router.route(context_len=32_768, latency_sensitive=False)
+        assert p.mode in ("gpu_offload", "hetero")
+
+    def test_hbm_accounting(self, router):
+        p1 = router.route(context_len=4_000)
+        assert p1.mode == "gpu"
+        free_after = router.slots[p1.slot_id].free_hbm
+        assert free_after < 10e9
+        router.release(p1)
+        assert router.slots[p1.slot_id].free_hbm == pytest.approx(10e9)
+
+    def test_fleet_fills_then_spills(self, router):
+        placements = [router.route(context_len=8_000) for _ in range(4)]
+        modes = [p.mode for p in placements]
+        assert modes[0] == "gpu"
+        # eventually the 10 GB slots fill (8k cache ~6.5 GB each) and
+        # requests spill to offload/CPU
+        assert any(m != "gpu" for m in modes)
+
+    def test_oom_raises(self):
+        cfg = get_config("symbiosis-llama2-13b")
+        r = PlacementRouter(cfg, [Slot(0, free_hbm=1e9)], host_free_bytes=1e9)
+        with pytest.raises(RuntimeError):
+            r.route(context_len=500_000)

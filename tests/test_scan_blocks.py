@@ -1,0 +1,99 @@
+"""Recurrent blocks: chunked scans match sequential references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rwkv import wkv6_scan
+from repro.models.mamba import selective_scan, _causal_conv
+
+
+class TestWKV6:
+    @given(chunk=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 20))
+    @settings(max_examples=12, deadline=None)
+    def test_chunked_equals_stepwise(self, chunk, seed):
+        B, S, H, dk, dv = 2, 8, 2, 4, 4
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        r = jax.random.normal(ks[0], (B, S, H, dk))
+        k = jax.random.normal(ks[1], (B, S, H, dk))
+        v = jax.random.normal(ks[2], (B, S, H, dv))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, dk)))  # decay in (0,1)
+        bonus = jax.random.normal(ks[4], (H, dk)) * 0.1
+        s0 = jnp.zeros((B, H, dk, dv))
+        out_c, st_c = wkv6_scan(r, k, v, w, bonus, s0, chunk=chunk)
+
+        # sequential reference
+        s = np.zeros((B, H, dk, dv), np.float32)
+        outs = []
+        rn, kn, vn, wn = (np.asarray(t, np.float32) for t in (r, k, v, w))
+        bn = np.asarray(bonus, np.float32)
+        for t in range(S):
+            kv = np.einsum("bhk,bhv->bhkv", kn[:, t], vn[:, t])
+            outs.append(np.einsum("bhk,bhkv->bhv", rn[:, t],
+                                  s + bn[None, :, :, None] * kv))
+            s = wn[:, t][..., None] * s + kv
+        ref = np.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(out_c), ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st_c), s, rtol=2e-4, atol=2e-4)
+
+    def test_state_carries_across_calls(self):
+        """prefill+decode chunking: scanning halves == scanning whole."""
+        B, S, H, dk = 1, 8, 2, 4
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        r, k, w = (jax.random.normal(ks[i], (B, S, H, dk)) for i in range(3))
+        v = jax.random.normal(ks[3], (B, S, H, dk))
+        w = jax.nn.sigmoid(w)
+        bonus = jnp.zeros((H, dk))
+        s0 = jnp.zeros((B, H, dk, dk))
+        full, st_full = wkv6_scan(r, k, v, w, bonus, s0, chunk=4)
+        h1, st1 = wkv6_scan(r[:, :4], k[:, :4], v[:, :4], w[:, :4], bonus, s0, chunk=4)
+        h2, st2 = wkv6_scan(r[:, 4:], k[:, 4:], v[:, 4:], w[:, 4:], bonus, st1, chunk=4)
+        np.testing.assert_allclose(np.asarray(full),
+                                   np.asarray(jnp.concatenate([h1, h2], 1)),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestSelectiveScan:
+    @given(chunk=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 20))
+    @settings(max_examples=12, deadline=None)
+    def test_chunked_equals_stepwise(self, chunk, seed):
+        B, S, ED, N = 2, 8, 4, 3
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        x = jax.random.normal(ks[0], (B, S, ED))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, ED)))
+        Bc = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        Cc = jax.random.normal(ks[3], (B, S, N)) * 0.5
+        A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(9), (ED, N)) * 0.3)
+        D = jnp.ones((ED,))
+        h0 = jnp.zeros((B, ED, N))
+        y_c, h_c = selective_scan(x, dt, Bc, Cc, A, D, h0, chunk=chunk)
+
+        xn, dtn, Bn, Cn, An, Dn = (np.asarray(t, np.float32)
+                                   for t in (x, dt, Bc, Cc, A, D))
+        h = np.zeros((B, ED, N), np.float32)
+        ys = []
+        for t in range(S):
+            a = np.exp(dtn[:, t][..., None] * An)
+            b = dtn[:, t][..., None] * Bn[:, t][:, None, :] * xn[:, t][..., None]
+            h = a * h + b
+            ys.append(np.einsum("bdn,bn->bd", h, Cn[:, t]))
+        ref = np.stack(ys, 1) + xn * Dn
+        np.testing.assert_allclose(np.asarray(y_c), ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_c), h, rtol=2e-4, atol=2e-4)
+
+
+class TestCausalConv:
+    def test_state_continuation(self):
+        B, S, ED, K = 1, 8, 3, 4
+        x = jax.random.normal(jax.random.PRNGKey(0), (B, S, ED))
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, ED))
+        b = jnp.zeros((ED,))
+        full, _ = _causal_conv(x, w, b, None)
+        h1, st = _causal_conv(x[:, :5], w, b, None)
+        h2, _ = _causal_conv(x[:, 5:], w, b, st)
+        np.testing.assert_allclose(np.asarray(full),
+                                   np.asarray(jnp.concatenate([h1, h2], 1)),
+                                   rtol=1e-5, atol=1e-6)

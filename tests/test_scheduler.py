@@ -1,0 +1,83 @@
+"""Opportunistic batching policies (paper §3.7, Tables 4/5)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import ClientSpec, simulate
+
+N_LAYERS = 8
+EXEC_OVERHEAD = 1e-4
+PER_TOKEN = 1e-6
+
+
+def uniform_clients(n, tokens=64, cs_time=5e-5, iters=3):
+    return [ClientSpec(client_id=i, n_tokens=tokens, client_side_time=cs_time,
+                       n_iterations=iters) for i in range(n)]
+
+
+def hetero_clients():
+    """The Table 5 setting: batch sizes 2..256, different adapters => very
+    different client-side times."""
+    specs = []
+    for i, (tok, cs) in enumerate([(2, 2e-5), (16, 6e-5), (64, 2e-4), (256, 8e-4)]):
+        specs.append(ClientSpec(client_id=i, n_tokens=tok, client_side_time=cs,
+                                n_iterations=4, latency_sensitive=(tok <= 2)))
+    return specs
+
+
+class TestPolicies:
+    def test_lockstep_batches_everyone(self):
+        r = simulate(uniform_clients(4), N_LAYERS, "lockstep",
+                     EXEC_OVERHEAD, PER_TOKEN)
+        assert r.avg_batch_size == pytest.approx(4.0, abs=0.5)
+
+    def test_nolockstep_batch_of_one(self):
+        r = simulate(uniform_clients(4), N_LAYERS, "nolockstep",
+                     EXEC_OVERHEAD, PER_TOKEN)
+        assert r.avg_batch_size == 1.0
+
+    def test_opportunistic_between(self):
+        r = simulate(uniform_clients(6), N_LAYERS, "opportunistic",
+                     EXEC_OVERHEAD, PER_TOKEN, wait_fraction=0.2)
+        assert 1.0 < r.avg_batch_size <= 6.0
+
+    def test_table5_ordering(self):
+        """Paper Table 5: opportunistic beats lockstep on latency AND beats
+        nolockstep on throughput for heterogeneous clients."""
+        lock = simulate(hetero_clients(), N_LAYERS, "lockstep",
+                        EXEC_OVERHEAD, PER_TOKEN)
+        nolock = simulate(hetero_clients(), N_LAYERS, "nolockstep",
+                          EXEC_OVERHEAD, PER_TOKEN)
+        opp = simulate(hetero_clients(), N_LAYERS, "opportunistic",
+                       EXEC_OVERHEAD, PER_TOKEN, wait_fraction=0.1)
+        mean_lat = lambda r: sum(r.per_client_latency.values()) / 4
+        assert mean_lat(opp) < mean_lat(lock), "opportunistic should cut wait"
+        assert opp.throughput >= nolock.throughput * 0.9
+
+    def test_lockstep_small_waits_for_large(self):
+        """Table 4's pathology: a small request's latency is inflated by the
+        large request it is locked to."""
+        small = ClientSpec(0, n_tokens=1, client_side_time=1e-5, n_iterations=2)
+        large = ClientSpec(1, n_tokens=512, client_side_time=2e-3, n_iterations=2)
+        lock = simulate([small, large], N_LAYERS, "lockstep",
+                        EXEC_OVERHEAD, PER_TOKEN)
+        free = simulate([small, large], N_LAYERS, "opportunistic",
+                        EXEC_OVERHEAD, PER_TOKEN, wait_fraction=0.1)
+        assert free.per_client_latency[0] < lock.per_client_latency[0] * 0.7
+
+    @given(n=st.integers(1, 8), iters=st.integers(1, 4),
+           policy=st.sampled_from(["lockstep", "nolockstep", "opportunistic"]))
+    @settings(max_examples=30, deadline=None)
+    def test_conservation(self, n, iters, policy):
+        """Every client finishes every iteration under every policy."""
+        r = simulate(uniform_clients(n, iters=iters), N_LAYERS, policy,
+                     EXEC_OVERHEAD, PER_TOKEN)
+        assert r.total_tokens == n * 64 * iters
+        assert all(v > 0 for v in r.per_client_latency.values())
+        assert r.makespan > 0
+
+    def test_backward_doubles_layers(self):
+        fwd = simulate(uniform_clients(2, iters=1), N_LAYERS, "nolockstep",
+                       EXEC_OVERHEAD, PER_TOKEN)
+        fb = simulate(uniform_clients(2, iters=1), N_LAYERS, "nolockstep",
+                      EXEC_OVERHEAD, PER_TOKEN, backward=True)
+        assert fb.n_executions == 2 * fwd.n_executions

@@ -1,0 +1,153 @@
+"""Sharding plans + launch specs (1-device mesh; full meshes live in dryrun)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import SHAPES
+from repro.configs import ASSIGNED, get_config
+from repro.core import symbiosis
+from repro.launch import shardings, specs
+from repro.launch.mesh import make_host_mesh, batch_axes, batch_size, model_size
+from repro.launch.specs import DEFAULT_ADAPTER, is_applicable
+
+
+class TestMesh:
+    def test_host_mesh_axes(self):
+        mesh = make_host_mesh()
+        assert set(mesh.axis_names) == {"data", "model"}
+        assert batch_size(mesh) == 1 and model_size(mesh) == 1
+
+
+class TestSpecRules:
+    def test_base_specs_cover_tree(self):
+        mesh = make_host_mesh()
+        for arch in ("granite-3-8b", "deepseek-moe-16b", "rwkv6-7b",
+                     "jamba-v0.1-52b", "whisper-small"):
+            cfg = get_config(arch)
+            shape = jax.eval_shape(
+                lambda: symbiosis.init_system(cfg, DEFAULT_ADAPTER, 2,
+                                              jax.random.PRNGKey(0)))
+            spec = shardings.base_param_specs(cfg, mesh, shape[0])
+            leaves = jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, P))
+            assert len(leaves) == len(jax.tree.leaves(shape[0]))
+
+    def test_divisibility_fallback(self):
+        """Granite's odd vocab (49155) must not be model-sharded on the
+        vocab axis; the lm_head falls back to row-parallel."""
+        import types
+        mesh16 = types.SimpleNamespace(  # stand-in: only sizes matter
+            axis_names=("data", "model"),
+            shape={"data": 16, "model": 16})
+        cfg = get_config("granite-3-8b")
+        shape = jax.eval_shape(
+            lambda: symbiosis.init_system(cfg, DEFAULT_ADAPTER, 2,
+                                          jax.random.PRNGKey(0)))
+        spec = shardings.base_param_specs(cfg, mesh16, shape[0])
+        lm = spec["lm_head"]
+        assert lm == P("model", None)   # d_model sharded, vocab replicated
+
+    def test_kv_cache_t_axis_sharded(self):
+        import types
+        mesh16 = types.SimpleNamespace(axis_names=("data", "model"),
+                                       shape={"data": 16, "model": 16})
+        cfg = get_config("granite-3-8b")
+        cache = jax.eval_shape(
+            lambda: symbiosis.init_client_caches(cfg, 16, 2, 32768))
+        spec = shardings.client_state_specs(cfg, mesh16, cache)
+        k_spec = spec["layers"]["k"]
+        assert k_spec[0] == "data" and k_spec[3] == "model"
+
+
+class TestInputSpecs:
+    def test_all_applicable_pairs_build(self):
+        """Every (arch x shape) either builds a spec bundle on the host mesh
+        or is a documented skip — no exceptions."""
+        mesh = make_host_mesh()
+        built = skipped = 0
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                ok, note = is_applicable(arch, shape)
+                if not ok:
+                    skipped += 1
+                    continue
+                b = specs.input_specs(arch, shape, mesh)
+                assert b.n_clients * b.batch_per_client == SHAPES[shape].global_batch
+                assert callable(b.fn)
+                for leaf in jax.tree.leaves(b.args):
+                    assert hasattr(leaf, "shape")
+                built += 1
+        assert built == 33 and skipped == 7   # 3 long_500k run, 7 skip
+
+    def test_spec_is_allocation_free(self):
+        mesh = make_host_mesh()
+        b = specs.input_specs("qwen3-4b", "decode_32k", mesh)
+        for leaf in jax.tree.leaves(b.args):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+    def test_host_mesh_lowers_tiny(self):
+        """End-to-end lower+compile on the 1-device mesh with a reduced
+        config (the real meshes are exercised by repro.launch.dryrun)."""
+        mesh = make_host_mesh()
+        cfg = get_config("qwen3-4b").reduced()
+        from repro.config import TrainConfig
+        tcfg = TrainConfig(n_clients=2, remat=True)
+        fn = symbiosis.make_multi_client_train_step(cfg, DEFAULT_ADAPTER, tcfg)
+        sys_shape = jax.eval_shape(
+            lambda: symbiosis.init_system(cfg, DEFAULT_ADAPTER, 2,
+                                          jax.random.PRNGKey(0)))
+        base = shardings.attach(mesh, sys_shape[0],
+                                shardings.base_param_specs(cfg, mesh, sys_shape[0]))
+        bank = shardings.attach(mesh, sys_shape[1],
+                                shardings.client_state_specs(cfg, mesh, sys_shape[1]))
+        opt = shardings.attach(mesh, sys_shape[2],
+                               shardings.client_state_specs(cfg, mesh, sys_shape[2]))
+        batch = {"tokens": jax.ShapeDtypeStruct((2, 2, 32), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((2, 2, 32), jnp.int32)}
+        compiled = jax.jit(fn).lower(base, bank, opt, batch, 0).compile()
+        assert compiled.cost_analysis() is not None
+
+
+class TestHloAnalysis:
+    def test_collective_parser_on_synthetic(self):
+        from repro.launch.hlo_analysis import collective_bytes
+        hlo = """
+HloModule m
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %ar = f32[8]{0} all-reduce(%p), replica_groups={}
+}
+"""
+        out = collective_bytes(hlo)
+        assert out["all-reduce"] == 32
+        assert out["total"] == 32
+
+    def test_loop_multiplication(self):
+        from repro.launch.hlo_analysis import collective_bytes
+        hlo = """
+HloModule m
+
+%cond (t: (s32[], f32[4])) -> pred[] {
+  %t = (s32[], f32[4]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %c = s32[] constant(10)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body (t: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %t = (s32[], f32[4]{0}) parameter(0)
+  %x = f32[4]{0} get-tuple-element(%t), index=1
+  %ag = f32[4]{0} all-reduce(%x), replica_groups={}
+  %i = s32[] get-tuple-element(%t), index=0
+  ROOT %r = (s32[], f32[4]{0}) tuple(%i, %ag)
+}
+
+ENTRY %main (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]{0}) parameter(0)
+  ROOT %w = (s32[], f32[4]{0}) while(%p), condition=%cond, body=%body
+}
+"""
+        out = collective_bytes(hlo)
+        assert out["all-reduce"] == 16 * 10, out
