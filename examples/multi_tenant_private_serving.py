@@ -58,3 +58,36 @@ print(f"correlation(executor-observed, true activations) = {corr:.3f} "
 # executor's observed input is x+n, so the recovered 'adapter effect' is
 # polluted by n's projection, and variant rotation prevents averaging it out.
 print("privacy demo OK")
+
+# ---------------------------------------------------------------------------
+# Multi-tenant continuous-batching service (§3.7): three tenants' adapters in
+# one bank, requests arriving staggered; the engine opportunistically batches
+# whoever is ready each tick. The exactness contract extends to the serving
+# layer: every tenant's stream is byte-identical to being served alone.
+# ---------------------------------------------------------------------------
+from repro.config import ServeConfig
+from repro.core import symbiosis
+from repro.serving.engine import ServingEngine, Request
+
+n_tenants = 3
+scfg = ServeConfig(n_clients=n_tenants, max_seq=64)
+_, bank, _ = symbiosis.init_system(cfg, acfg, n_tenants, jax.random.PRNGKey(7))
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, (1, 8 + 4 * t)).astype(np.int32)
+           for t in range(n_tenants)]
+
+eng = ServingEngine(cfg, acfg, scfg, base, bank, max_batch_per_client=2)
+for t in range(n_tenants):
+    eng.submit(Request(client_id=t, prompt=prompts[t], max_new_tokens=8,
+                       arrive_tick=3 * t))     # tenants join mid-stream
+served = {r.client_id: r.generated for r in eng.run()}
+
+for t in range(n_tenants):
+    solo_eng = ServingEngine(cfg, acfg, scfg, base, bank, max_batch_per_client=2)
+    solo_eng.submit(Request(client_id=t, prompt=prompts[t], max_new_tokens=8))
+    (solo,) = solo_eng.run()
+    assert np.array_equal(served[t], solo.generated), f"tenant {t} diverged"
+
+print(f"continuous-batching service OK: {n_tenants} tenants, "
+      f"stats={eng.stats} — outputs byte-identical to solo serving")

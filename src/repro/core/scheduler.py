@@ -25,6 +25,49 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 
+class TickPolicy:
+    """Projection of the simulation policies onto the REAL engine tick loop
+    (serving.engine). The simulation decides *when a layer batch may wait*;
+    the live engine quantizes time into decode ticks, so the same three
+    policies become rules for admission timing and tick membership:
+
+    * ``lockstep``      — vLLM-style static co-batching: new requests may
+                          join only when the in-flight batch has fully
+                          drained; every tick batches all active clients.
+    * ``nolockstep``    — no cross-client batching: each tick serves one
+                          ready client (round-robin), batch of 1.
+    * ``opportunistic`` — continuous batching: requests join and leave
+                          mid-stream and every tick batches exactly the
+                          clients that are ready.
+
+    Outputs are policy-invariant (the paper's exact-output property): the
+    policy only chooses WHICH ready clients execute a given tick, never the
+    math of any sequence's own token stream — a property the engine tests
+    assert byte-for-byte."""
+
+    NAMES = ("lockstep", "nolockstep", "opportunistic")
+
+    def __init__(self, name: str):
+        if name not in self.NAMES:
+            raise ValueError(f"unknown policy {name!r}; pick from {self.NAMES}")
+        self.name = name
+        self._rr = 0
+
+    def admit_now(self, n_inflight: int) -> bool:
+        """May new requests be admitted while others are in flight?"""
+        return n_inflight == 0 if self.name == "lockstep" else True
+
+    def serving_set(self, ready: List[int]) -> List[int]:
+        """Which of the ready clients join this decode tick."""
+        if not ready:
+            return []
+        if self.name == "nolockstep":
+            pick = sorted(ready)[self._rr % len(ready)]
+            self._rr += 1
+            return [pick]
+        return sorted(ready)
+
+
 @dataclass
 class ClientSpec:
     client_id: int

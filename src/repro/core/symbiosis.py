@@ -170,6 +170,127 @@ def make_multi_client_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig
     return decode
 
 
+def cache_slot_axes(cfg: ModelConfig, max_seq: int, **cache_kw):
+    """Per-leaf *slot axis* map for one client's decode cache.
+
+    Cache trees are family-specific (KV tensors carry the sequence-slot
+    [batch] axis at axis 1 under a leading layer/group axis, ``pos`` carries
+    it at axis 0, pre-layer KV at axis 0, ...). The engine needs to merge /
+    zero individual slots without knowing the family, so we derive the axis
+    structurally: build the cache at batch 1 and batch 2 and record, per
+    leaf, the axis where the shapes differ. Returns a pytree of ints with
+    the cache's structure. Shapes only — ``eval_shape`` never allocates the
+    (potentially huge) caches."""
+    model = get_model(cfg)
+    a = jax.eval_shape(lambda: model.init_cache(1, max_seq, **cache_kw))
+    b = jax.eval_shape(lambda: model.init_cache(2, max_seq, **cache_kw))
+
+    def axis(x, y):
+        for i, (m, n) in enumerate(zip(x.shape, y.shape)):
+            if m != n:
+                return i
+        raise ValueError(f"cache leaf {x.shape} has no batch/slot axis")
+
+    return jax.tree.map(axis, a, b)
+
+
+def _slot_mask(mask, ax, ndim):
+    """Reshape a [n_slots] mask so it broadcasts along slot axis ``ax`` of an
+    ``ndim``-rank cache leaf."""
+    shape = [1] * ndim
+    shape[ax] = mask.shape[-1]
+    return mask.reshape(shape)
+
+
+def make_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
+                        scfg: ServeConfig, **ctx_kw):
+    """Masked single-client prefill — the engine's admission fast path.
+
+    Unlike ``make_multi_client_prefill`` (which runs the whole bank and
+    wastes C× base compute per admitted request), this runs the model ONCE
+    for the admitted client and scatters the result into the bank caches:
+
+      fn(base, bank, caches, c, tokens, lengths, slot_mask)
+        -> (logits [max_b, V], new bank caches)
+
+    * ``c``         — traced client index (one compile serves every client).
+    * ``tokens``    — [max_b, S_pad]; rows being admitted carry the prompt
+                      (right-padded to the engine's jit bucket), other rows
+                      are dummies.
+    * ``lengths``   — [max_b] true prompt lengths; logits are gathered at
+                      each row's last *real* position and cache ``pos``
+                      starts there. Right-padding is exact for attention
+                      families (causal masking + decode's write-before-read
+                      overwrites stale pad K/V); recurrent families (hybrid,
+                      RWKV) must be called with S_pad == S because pads
+                      would pollute the carried state.
+    * ``slot_mask`` — [max_b] bool; True rows are (re-)initialized: their
+                      state is zeroed before the prefill (so a finished
+                      sequence's stale recurrent state never leaks into the
+                      slot's next occupant) and only their cache entries are
+                      written back — other slots' in-flight state is
+                      untouched, which is what makes mid-stream join work.
+    """
+    model = get_model(cfg)
+    ctx = make_client_ctx(cfg, acfg, **ctx_kw)
+    slot_axes = cache_slot_axes(cfg, scfg.max_seq)
+
+    def prefill_one(base, bank, caches, c, tokens, lengths, slot_mask):
+        adapter = jax.tree.map(lambda x: x[c], bank) if bank is not None else None
+        old = jax.tree.map(lambda x: x[c], caches)
+
+        def zero_slots(x, ax):
+            return jnp.where(_slot_mask(slot_mask, ax, x.ndim),
+                             jnp.zeros((), x.dtype), x)
+
+        cleared = jax.tree.map(zero_slots, old, slot_axes)
+        logits, new = model.prefill(base, {"tokens": tokens}, cleared, ctx,
+                                    adapter, lengths=lengths)
+
+        def merge(o, n, ax):
+            return jnp.where(_slot_mask(slot_mask, ax, o.ndim), n, o)
+
+        merged = jax.tree.map(merge, old, new, slot_axes)
+        new_caches = jax.tree.map(lambda full, one: full.at[c].set(one),
+                                  caches, merged)
+        return logits, new_caches
+
+    return prefill_one
+
+
+def make_masked_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
+                            scfg: ServeConfig, *, ring: bool = False, **ctx_kw):
+    """Bank-wide decode tick with per-slot advance control.
+
+    fn(base, bank, caches, tokens, active) -> (logits [C, B, V], new caches)
+
+    ``active`` [C, B] bool marks the sequence slots that are decoding this
+    tick; every other slot's cache (including its position counter) is left
+    exactly as it was, so clients can run at different rates and sequences
+    can join/leave mid-stream. The merge happens inside the jitted step —
+    one dispatch per tick instead of a host-side tree traversal."""
+    model = get_model(cfg)
+    ctx = make_client_ctx(cfg, acfg, **ctx_kw)
+    kw = {"ring": True} if ring else {}
+    slot_axes = cache_slot_axes(cfg, scfg.max_seq)
+
+    def decode(base, bank, caches, tokens, active):
+        def one(adapter, cache, tok):
+            return model.decode_step(base, cache, tok, ctx, adapter, **kw)
+
+        logits, new_caches = jax.vmap(one, in_axes=(0, 0, 0))(bank, caches, tokens)
+
+        def merge(o, n, ax):
+            shape = [1] * o.ndim
+            shape[0] = active.shape[0]
+            shape[ax + 1] = active.shape[1]
+            return jnp.where(active.reshape(shape), n, o)
+
+        return logits, jax.tree.map(merge, caches, new_caches, slot_axes)
+
+    return decode
+
+
 def init_client_caches(cfg: ModelConfig, n_clients: int, batch: int, max_seq: int,
                        dtype=None, *, window: int = 0, quant: bool = False):
     model = get_model(cfg)

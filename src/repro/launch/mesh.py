@@ -10,19 +10,25 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions: ``axis_types`` (and the
+    ``AxisType`` enum itself) only exist in newer releases; older ones
+    default every axis to Auto, which is exactly what we want."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-chip mesh with the production axis names (CPU smoke tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -32,6 +32,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--policy", default="opportunistic",
                     choices=("lockstep", "nolockstep", "opportunistic"))
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="ticks between request arrivals (mid-stream joins)")
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--privacy", action="store_true")
     args = ap.parse_args(argv)
@@ -51,7 +53,8 @@ def main(argv=None):
     reqs = [Request(client_id=i % args.clients,
                     prompt=rng.integers(0, cfg.vocab,
                                         (args.batch, args.prompt_len)).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    arrive_tick=i * args.stagger)
             for i in range(args.requests)]
     for r in reqs:
         eng.submit(r)

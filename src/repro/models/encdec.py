@@ -92,7 +92,7 @@ def _dec_layer(p, cfg, x, positions, enc, lin):
 
 def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
             adapter=None, *, remat: bool = True, moe_dispatch: str = "scatter",
-            capacity_factor: float = 1.25):
+            capacity_factor=None):
     """Training forward: encoder over frames + teacher-forced decoder."""
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -129,8 +129,13 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
 
 
 def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
-            adapter=None):
-    """Encode frames, fill cross-attn caches, then prefill decoder prompt."""
+            adapter=None, *, lengths=None):
+    """Encode frames, fill cross-attn caches, then prefill decoder prompt.
+
+    ``lengths`` gathers logits at each row's last real decoder position and
+    starts ``pos`` there (right-padded decoder prompts are safe: decoder
+    self-attention is causal and decode overwrites a pad slot before first
+    reading it)."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     enc = encode(cfg, params, batch["frames"], ctx, adapter)
@@ -160,9 +165,15 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         jax.checkpoint(body), x,
         (params["dec_layers"], cache["self_k"], cache["self_v"], scan_ad))
     x = blocks.rmsnorm(params["final_norm"], x)
-    logits = ctx.top.dense(x[:, -1:], params["lm_head"], None, "lm_head")[:, 0]
+    if lengths is None:
+        logits = ctx.top.dense(x[:, -1:], params["lm_head"], None, "lm_head")[:, 0]
+        pos = jnp.full((B,), S, jnp.int32)
+    else:
+        pos = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+        xg = jnp.take_along_axis(x, (pos - 1)[:, None, None], axis=1)
+        logits = ctx.top.dense(xg, params["lm_head"], None, "lm_head")[:, 0]
     return logits, {"self_k": sk, "self_v": sv, "cross_k": xk, "cross_v": xv,
-                    "pos": jnp.full((B,), S, jnp.int32)}
+                    "pos": pos}
 
 
 def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,

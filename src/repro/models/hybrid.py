@@ -83,9 +83,12 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
     return {"groups": stacked, "pos": jnp.zeros((batch_size,), jnp.int32)}
 
 
-def _group_forward(gp, cfg, x, positions, lin, state, *, capture_kv: bool):
+def _group_forward(gp, cfg, x, positions, lin, state, *, capture_kv: bool,
+                   moe_dispatch: str = "scatter", capacity_factor=None):
     """Run one period of sublayers. state: group state dict (or None for
-    training). Returns (x, aux, new_state)."""
+    training). Returns (x, aux, new_state). capacity_factor=None keeps the
+    MoE sublayers drop-free — required for prefill/decode exactness (drops
+    depend on tokens-in-flight, which differ between the two paths)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_state = {}
     B, S, _ = x.shape
@@ -112,7 +115,9 @@ def _group_forward(gp, cfg, x, positions, lin, state, *, capture_kv: bool):
         x = x + y
         h = blocks.rmsnorm(p["ln2"], x)
         if "moe" in p:
-            y, aux = moe_lib.moe_forward(p["moe"], cfg, h, lin)
+            y, aux = moe_lib.moe_forward(p["moe"], cfg, h, lin,
+                                         dispatch=moe_dispatch,
+                                         capacity_factor=capacity_factor)
             aux_total += aux
         else:
             y = blocks.mlp_forward(p["mlp"], h, lin)
@@ -122,7 +127,7 @@ def _group_forward(gp, cfg, x, positions, lin, state, *, capture_kv: bool):
 
 def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
             adapter=None, *, remat: bool = True, moe_dispatch: str = "scatter",
-            capacity_factor: float = 1.25):
+            capacity_factor=None):
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = embed_tokens(cfg, params, tokens, ctx.top)
@@ -133,7 +138,8 @@ def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
         x, aux_acc = carry
         gp, ad = grp_in
         x, aux, _ = _group_forward(gp, cfg, x, positions, ctx.for_layer(ad), None,
-                                   capture_kv=False)
+                                   capture_kv=False, moe_dispatch=moe_dispatch,
+                                   capacity_factor=capacity_factor)
         return (x, aux_acc + aux), None
 
     if remat:
@@ -145,7 +151,11 @@ def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
 
 
 def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
-            adapter=None):
+            adapter=None, *, lengths=None):
+    """``lengths`` gathers logits at each row's last real position and starts
+    ``pos`` there. NOTE: unlike pure-attention families, the Mamba sublayers
+    carry recurrent state through padded positions — callers must pass
+    prompts at their true length (no right-padding) for exact decode."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = embed_tokens(cfg, params, tokens, ctx.top)
@@ -161,8 +171,14 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     x, new_groups = jax.lax.scan(jax.checkpoint(body), x,
                                  (params["groups"], cache["groups"], scan_adapters))
     x = blocks.rmsnorm(params["final_norm"], x)
-    logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
-    return logits, {"groups": new_groups, "pos": jnp.full((B,), S, jnp.int32)}
+    if lengths is None:
+        logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
+        pos = jnp.full((B,), S, jnp.int32)
+    else:
+        pos = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+        xg = jnp.take_along_axis(x, (pos - 1)[:, None, None], axis=1)
+        logits = lm_head(cfg, params, xg, ctx.top)[:, 0]
+    return logits, {"groups": new_groups, "pos": pos}
 
 
 def _group_decode(gp, cfg, x, state, pos, lin):

@@ -42,8 +42,13 @@ def moe_init(key, cfg, dtype):
     return p
 
 
-def _capacity(n_tokens: int, E: int, k: int, factor: float) -> int:
-    cap = int(n_tokens * k / E * factor)
+def _capacity(n_tokens: int, E: int, k: int, factor) -> int:
+    """factor=None -> drop-free: top-k indices are distinct, so one expert
+    receives at most one slot per token; cap = n_tokens never drops. This is
+    the *exact* mode inference paths rely on (prefill/decode token counts
+    differ, so any capacity tied to tokens-in-flight breaks the paper's
+    exact-output property). A float factor is the lossy training knob."""
+    cap = n_tokens if factor is None else int(n_tokens * k / E * factor)
     return max(8, ((cap + 7) // 8) * 8)  # pad to 8 for clean tiling
 
 
@@ -81,8 +86,11 @@ def _expert_ffn(params, xe, lin, path_prefix):
 
 
 def moe_forward(params, cfg, x, lin: LinearFns, *, path_prefix: str = "",
-                capacity_factor: float = 1.25, dispatch: str = "scatter"):
-    """x [B,S,d] -> ([B,S,d], aux_loss scalar)."""
+                capacity_factor=None, dispatch: str = "scatter"):
+    """x [B,S,d] -> ([B,S,d], aux_loss scalar).
+
+    capacity_factor=None (default) is drop-free/exact; pass a float to cap
+    expert buffers at factor * T * k / E (tokens beyond it are dropped)."""
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
     T = B * S

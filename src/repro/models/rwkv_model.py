@@ -60,7 +60,7 @@ def _layer(p, cfg, x, lin, state):
 
 def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
             adapter=None, *, remat: bool = True, moe_dispatch: str = "scatter",
-            capacity_factor: float = 1.25):
+            capacity_factor=None):
     tokens = batch["tokens"]
     x = embed_tokens(cfg, params, tokens, ctx.top)
     scan_adapters = adapter.get("layers") if adapter else None
@@ -93,15 +93,24 @@ def _run_with_state(cfg, params, x, cache, ctx, adapter, remat=False):
 
 
 def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
-            adapter=None):
+            adapter=None, *, lengths=None):
+    """``lengths`` gathers logits at each row's last real position. NOTE:
+    the RWKV state is recurrent — callers must pass prompts at their true
+    length (no right-padding) for exact decode."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = embed_tokens(cfg, params, tokens, ctx.top)
     x, wkv, tm_x, cm_x = _run_with_state(cfg, params, x, cache, ctx, adapter, remat=True)
     x = blocks.rmsnorm(params["final_norm"], x)
-    logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
-    return logits, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x,
-                    "pos": cache["pos"] + S}
+    if lengths is None:
+        logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
+        new_pos = cache["pos"] + S
+    else:
+        lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+        xg = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+        logits = lm_head(cfg, params, xg, ctx.top)[:, 0]
+        new_pos = cache["pos"] + lengths
+    return logits, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x, "pos": new_pos}
 
 
 def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,

@@ -84,7 +84,7 @@ def _prefix_kv(adapter_slice):
 
 
 def _layer_forward(p, cfg: ModelConfig, x, positions, lin: LinearFns, adapter_slice,
-                   *, moe_dispatch: str = "scatter", capacity_factor: float = 1.25):
+                   *, moe_dispatch: str = "scatter", capacity_factor=None):
     h = blocks.rmsnorm(p["ln1"], x)
     attn = blocks.mha_forward(p["attn"], cfg, h, positions, lin)
     pk = _prefix_kv(adapter_slice)
@@ -186,9 +186,12 @@ def lm_head(cfg, params, x, lin: LinearFns):
 
 def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
             adapter=None, *, remat: bool = True, moe_dispatch: str = "scatter",
-            capacity_factor: float = 1.25):
+            capacity_factor=None):
     """Training / scoring forward. batch: tokens [B,S] (+ 'img_embed' [B,Ti,d]
-    for VLM). Returns (logits [B,S_total,V], aux_loss)."""
+    for VLM). Returns (logits [B,S_total,V], aux_loss).
+
+    capacity_factor=None keeps MoE dispatch drop-free (exact); training
+    callers pass a float to trade exactness for bounded expert buffers."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = embed_tokens(cfg, params, tokens, ctx.top)
@@ -286,12 +289,18 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
 
 
 def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
-            adapter=None):
+            adapter=None, *, lengths=None):
     """Prefill: forward over the prompt, filling the KV cache.
 
     Implemented as forward + bulk cache write (projections recomputed per
     layer would double base-linear work; instead we run the layer bodies and
     capture K/V via the same decode-path projections).
+
+    ``lengths`` ([B] int32 or scalar, optional) supports right-padded
+    prompts: logits are gathered at each row's last real position and the
+    returned ``pos`` starts decode there. Stale pad K/V beyond a row's
+    length is safe — decode writes slot ``pos`` before attending to it, so
+    a pad slot is overwritten in the step that would first read it.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -333,8 +342,17 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     x, new_layers = jax.lax.scan(jax.checkpoint(body), x,
                                  (params["layers"], cache["layers"], scan_adapters))
     x = blocks.rmsnorm(params["final_norm"], x)
-    logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
-    new_cache = {"layers": new_layers, "pos": jnp.full((B,), S_total, jnp.int32)}
+    if lengths is None:
+        logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
+        pos = jnp.full((B,), S_total, jnp.int32)
+    else:
+        prefix = S_total - S                      # leading image tokens (VLM)
+        lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+        idx = prefix + lengths - 1
+        xg = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = lm_head(cfg, params, xg, ctx.top)[:, 0]
+        pos = prefix + lengths
+    new_cache = {"layers": new_layers, "pos": pos}
     if new_pre:
         new_cache["pre_layers"] = new_pre
     return logits, new_cache

@@ -1,3 +1,3 @@
 from repro.serving.kvcache import cache_bytes, CacheSpec, make_cache_spec
-from repro.serving.engine import ServingEngine, Request
+from repro.serving.engine import ServingEngine, Request, SamplingParams
 from repro.serving.router import PlacementRouter, Slot, Placement

@@ -1,40 +1,102 @@
-"""Multi-client serving engine (paper §3.7 / §4.4-style deployment).
+"""Continuous-batching multi-client serving engine (paper §3.7 / §4.4).
 
 Drives real model execution for a bank of inference clients that share one
-frozen base. Each client owns its adapter + KV cache (client-side state);
-decode steps are *opportunistically batched*: at every engine tick, the
-clients that have work ready are batched into one multi-client decode call.
-Clients can run at different rates (a client whose request finished or whose
-per-step budget is exhausted simply sits out a tick) — the JAX analogue of
-"requests batched at the first layer need not batch at later layers".
+frozen base. The engine realizes the paper's opportunistic-batching claim —
+"requests batched at the first layer need not batch at later layers" — as a
+live system rather than an offline simulation:
+
+Architecture
+------------
+* **Slots.** Each client owns ``max_batch_per_client`` sequence slots backed
+  by its rows of the bank KV/state cache. A request occupies one slot per
+  prompt row for its lifetime; slots free the moment their request finishes
+  and are re-admitted from the queue on the next tick — not after the whole
+  bank drains (mid-stream join/leave).
+* **Admission.** A per-engine FIFO queue. A request is admitted when (a) its
+  client has enough free slots, (b) its context fits the cache depth, and
+  (c) the optional ``PlacementRouter`` finds it a §3.4 placement (capacity
+  is released on finish). Admission triggers the *masked single-client
+  prefill* (``symbiosis.make_client_prefill``): one model execution for the
+  admitted client, scattered into the bank cache under a slot mask — the
+  seed engine instead ran a bank-wide prefill, paying C× base compute per
+  admitted request.
+* **Tick loop.** Every tick the scheduler policy (``core.scheduler.
+  TickPolicy`` — lockstep / nolockstep / opportunistic) picks which *ready*
+  clients join the batched decode (``symbiosis.make_masked_decode_step``);
+  slots outside the tick keep their cache and position untouched inside the
+  jitted step.
+* **Sampling.** Greedy, temperature and top-k sampling, seeded per request
+  (np.random.Generator keyed on the request's sampling seed + client id),
+  so draws depend only on the request's own token stream.
+* **Policy-invariance contract.** The policy (and any interleaving of other
+  clients) only changes WHICH ready clients execute a given tick, never the
+  math of a sequence's own stream — outputs are byte-identical across
+  policies and to serving each request alone (paper: "the output with
+  Symbiosis is exactly identical to that of the baseline"); asserted in
+  tests/test_serving_engine.py.
 
 For latency realism the engine also reports a scheduler-simulated timeline
-(core.scheduler) calibrated with measured per-op costs; the *outputs* are
-produced by the real batched execution and are invariant to the policy, a
-property asserted in tests (paper: "the output with Symbiosis is exactly
-identical to that of the baseline").
+(``simulate_policy``) calibrated with measured per-op costs.
+
+Seed-engine ablation knobs: ``bank_prefill=True`` restores the bank-wide
+prefill path and ``max_inflight_per_client=1`` the one-request-per-client
+admission rule — used by benchmarks/bench_multiclient.py to quantify what
+continuous batching buys over the seed behaviour.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import AdapterConfig, ModelConfig, ServeConfig
+from repro.config import AdapterConfig, ModelConfig, ServeConfig, DENSE, MOE, VLM
 from repro.core import symbiosis
-from repro.core.scheduler import ClientSpec, simulate
+from repro.core.scheduler import ClientSpec, TickPolicy, simulate
+
+
+# Jitted step builders are memoized on the (frozen, hashable) configs so
+# every engine instance over the same model shares one compile cache —
+# constructing an engine is cheap and benchmarks don't re-pay compilation.
+@functools.lru_cache(maxsize=None)
+def _jit_client_prefill(cfg, acfg, scfg):
+    return jax.jit(symbiosis.make_client_prefill(cfg, acfg, scfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_masked_decode(cfg, acfg, scfg):
+    return jax.jit(symbiosis.make_masked_decode_step(cfg, acfg, scfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_bank_prefill(cfg, acfg, scfg):
+    return jax.jit(symbiosis.make_multi_client_prefill(cfg, acfg, scfg))
 
 
 @dataclasses.dataclass
+class SamplingParams:
+    """Per-request sampling config. ``seed`` keys the request's private RNG:
+    draws are consumed in token order of the request's own stream, so
+    sampled outputs (not just greedy) are schedule/policy-invariant."""
+    method: str = "greedy"            # greedy | temperature | top_k
+    temperature: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass(eq=False)       # identity eq: queues hold np arrays
 class Request:
     client_id: int
-    prompt: np.ndarray                      # [B, S] int32
+    prompt: np.ndarray                      # [B, S] int32 (B sequence slots)
     max_new_tokens: int = 16
     latency_sensitive: bool = True
+    sampling: Optional[SamplingParams] = None   # None -> greedy
+    arrive_tick: int = 0                    # earliest tick admission may see it
     # filled by the engine:
     generated: Optional[np.ndarray] = None  # [B, max_new_tokens]
     submit_t: float = 0.0
@@ -42,109 +104,240 @@ class Request:
 
 
 class ServingEngine:
-    """One base model serving a bank of adapter clients."""
+    """One base model continuously serving a bank of adapter clients."""
 
     def __init__(self, cfg: ModelConfig, acfg: AdapterConfig, scfg: ServeConfig,
-                 base_params, client_bank, *, max_batch_per_client: int = 4):
+                 base_params, client_bank, *, max_batch_per_client: int = 4,
+                 router=None, policy: Optional[str] = None,
+                 bank_prefill: bool = False,
+                 max_inflight_per_client: Optional[int] = None):
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
         self.base = base_params
         self.bank = client_bank
         self.n_clients = jax.tree.leaves(client_bank)[0].shape[0]
         self.max_b = max_batch_per_client
+        self.router = router
+        self.policy = TickPolicy(policy or scfg.policy)
+        self.bank_prefill = bank_prefill
+        if bank_prefill and max_inflight_per_client not in (None, 1):
+            raise ValueError("bank_prefill replaces the whole client cache "
+                             "slice; it requires max_inflight_per_client=1")
+        self.max_inflight = 1 if bank_prefill else max_inflight_per_client
         self.caches = symbiosis.init_client_caches(
             cfg, self.n_clients, max_batch_per_client, scfg.max_seq)
-        self._prefill = jax.jit(symbiosis.make_multi_client_prefill(cfg, acfg, scfg))
-        self._decode = jax.jit(symbiosis.make_multi_client_decode_step(cfg, acfg, scfg))
+        self._prefill_one = _jit_client_prefill(cfg, acfg, scfg)
+        self._prefill_bank = _jit_bank_prefill(cfg, acfg, scfg) if bank_prefill else None
+        self._decode = _jit_masked_decode(cfg, acfg, scfg)
         self._queue: List[Request] = []
-        self.stats = {"ticks": 0, "decode_tokens": 0, "batched_clients": 0}
+        # slot tables + per-request bookkeeping (keyed by id(req); requests
+        # stay alive in the done list for the whole run)
+        self._slot_owner = [[None] * self.max_b for _ in range(self.n_clients)]
+        self._last_tok = np.zeros((self.n_clients, self.max_b), np.int32)
+        self._left: Dict[int, int] = {}
+        self._slots_of: Dict[int, List[int]] = {}
+        self._rng: Dict[int, np.random.Generator] = {}
+        self._placement: Dict[int, object] = {}
+        self.stats = {"ticks": 0, "decode_tokens": 0, "prefill_tokens": 0,
+                      "batched_clients": 0, "admitted": 0, "prefill_calls": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         assert 0 <= req.client_id < self.n_clients
-        assert req.prompt.shape[0] <= self.max_b
+        B, S = req.prompt.shape
+        assert B <= self.max_b, f"request rows {B} > {self.max_b} slots"
+        assert req.max_new_tokens >= 1
+        assert S + req.max_new_tokens <= self.scfg.max_seq, (
+            f"context {S}+{req.max_new_tokens} exceeds cache depth "
+            f"{self.scfg.max_seq}")
+        if req.sampling is not None and req.sampling.method not in (
+                "greedy", "temperature", "top_k"):
+            raise ValueError(f"unknown sampling method {req.sampling.method!r}")
         req.submit_t = time.perf_counter()
         self._queue.append(req)
 
     def run(self) -> List[Request]:
         """Serve all queued requests to completion; returns finished list."""
-        active: Dict[int, Request] = {}
-        done: List[Request] = []
-        pending = list(self._queue)
+        waiting = deque(sorted(self._queue, key=lambda r: r.arrive_tick))
         self._queue.clear()
-        tokens_left: Dict[int, int] = {}
-        last_tok: Dict[int, np.ndarray] = {}
+        inflight: List[Request] = []
+        done: List[Request] = []
+        tick = 0
+        while waiting or inflight:
+            # -- admission (continuous except under lockstep's batch barrier)
+            admitted_any = False
+            attempted = [r for r in waiting if r.arrive_tick <= tick]
+            if self.policy.admit_now(len(inflight)):
+                for req in attempted:
+                    if self._try_admit(req):
+                        waiting.remove(req)
+                        inflight.append(req)
+                        admitted_any = True
 
-        while pending or active:
-            # Admit: one request per client at a time (client independence —
-            # a client's own requests serialize; different clients don't).
-            for req in list(pending):
-                if req.client_id not in active:
-                    pending.remove(req)
-                    active[req.client_id] = req
-                    self._do_prefill(req, last_tok, tokens_left)
+            # -- decode tick over the policy-chosen subset of ready clients
+            ready = sorted({r.client_id for r in inflight if self._left[id(r)] > 0})
+            serve = self.policy.serving_set(ready)
+            if serve:
+                self._decode_tick(set(serve), inflight)
 
-            # Batched decode tick over clients with work ready.
-            ready = [c for c in active if tokens_left[c] > 0]
-            if ready:
-                self._decode_tick(ready, last_tok, tokens_left, active)
-
-            for c in list(active):
-                if tokens_left[c] == 0:
-                    req = active.pop(c)
-                    req.finish_t = time.perf_counter()
+            # -- retire finished sequences; their slots free immediately
+            for req in list(inflight):
+                if self._left[id(req)] == 0:
+                    self._retire(req)
+                    inflight.remove(req)
                     done.append(req)
+
+            if not inflight and attempted and not admitted_any and not serve:
+                # nothing in flight to ever free capacity, and admission of
+                # every due request just failed -> stuck forever
+                raise RuntimeError(
+                    f"{len(attempted)} request(s) can never be admitted "
+                    f"(no free capacity and nothing in flight)")
+            tick += 1
+            if not inflight and waiting and all(r.arrive_tick > tick for r in waiting):
+                tick = min(r.arrive_tick for r in waiting)       # idle skip
         return done
 
     # ------------------------------------------------------------------
-    def _do_prefill(self, req: Request, last_tok, tokens_left):
-        """Prefill a single client (padded into the bank-wide call)."""
+    # admission + prefill
+    # ------------------------------------------------------------------
+    def _try_admit(self, req: Request) -> bool:
+        c = req.client_id
+        B, S = req.prompt.shape
+        if self.max_inflight is not None:
+            owners = {id(o) for o in self._slot_owner[c] if o is not None}
+            if len(owners) >= self.max_inflight:
+                return False
+        free = [s for s in range(self.max_b) if self._slot_owner[c][s] is None]
+        if len(free) < B:
+            return False
+        placement = None
+        if self.router is not None:
+            try:
+                placement = self.router.route(S + req.max_new_tokens, B,
+                                              latency_sensitive=req.latency_sensitive)
+            except RuntimeError:
+                return False                      # stays queued until capacity frees
+        slots = free[:B]
+        first_logits = self._prefill_request(req, slots)
+
+        sp = req.sampling or SamplingParams()
+        self._rng[id(req)] = np.random.default_rng([sp.seed, c])
+        first = self._sample(first_logits, req)
+        req.generated = np.zeros((B, req.max_new_tokens), np.int32)
+        req.generated[:, 0] = first
+        self._last_tok[c, slots] = first
+        self._left[id(req)] = req.max_new_tokens - 1
+        self._slots_of[id(req)] = slots
+        self._placement[id(req)] = placement
+        for s in slots:
+            self._slot_owner[c][s] = req
+        self.stats["admitted"] += 1
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += B * S
+        return True
+
+    def _bucket(self, S: int) -> int:
+        """Jit-bucketed prompt length. Attention families tolerate right-
+        padding exactly (see model.prefill); recurrent families (hybrid,
+        RWKV) must prefill at true length or pads pollute the state."""
+        if self.cfg.arch not in (DENSE, MOE, VLM):
+            return S
+        b = 8
+        while b < S:
+            b *= 2
+        return min(b, self.scfg.max_seq)
+
+    def _prefill_request(self, req: Request, slots: List[int]) -> np.ndarray:
+        """Masked single-client prefill into the assigned slots.
+
+        Returns the [B, V] logits of the prompt's last position per row."""
+        c = req.client_id
+        B, S = req.prompt.shape
+        if self.bank_prefill:
+            return self._prefill_request_bankwide(req, slots)
+        S_pad = self._bucket(S)
+        toks = np.zeros((self.max_b, S_pad), np.int32)
+        toks[slots, :S] = req.prompt
+        mask = np.zeros((self.max_b,), bool)
+        mask[slots] = True
+        lengths = np.full((self.max_b,), S, np.int32)
+        logits, self.caches = self._prefill_one(
+            self.base, self.bank, self.caches, np.int32(c),
+            jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
+        return np.asarray(logits)[slots]
+
+    def _prefill_request_bankwide(self, req: Request, slots: List[int]) -> np.ndarray:
+        """Seed-engine ablation: pad the request into a bank-wide [C, max_b,
+        S] prefill (C× the base compute of the masked path) and replace the
+        whole client cache slice."""
         c = req.client_id
         B, S = req.prompt.shape
         toks = np.zeros((self.n_clients, self.max_b, S), np.int32)
-        toks[c, :B] = req.prompt
-        logits, new_caches = self._prefill(self.base, self.bank, self.caches,
-                                           {"tokens": jnp.asarray(toks)})
-        # Only client c's cache entries advance.
-        self.caches = jax.tree.map(
-            lambda old, new: new.at[jnp.arange(self.n_clients) != c].set(
-                old[jnp.arange(self.n_clients) != c])
-            if old.ndim > 0 and old.shape[0] == self.n_clients else new,
-            self.caches, new_caches)
-        first = np.asarray(jnp.argmax(logits[c], axis=-1), np.int32)  # [max_b]
-        req.generated = np.zeros((B, req.max_new_tokens), np.int32)
-        req.generated[:, 0] = first[:B]
-        last_tok[c] = first
-        tokens_left[c] = req.max_new_tokens - 1
-        if tokens_left[c] == 0:
-            tokens_left[c] = 0
-
-    def _decode_tick(self, ready: List[int], last_tok, tokens_left, active):
-        toks = np.zeros((self.n_clients, self.max_b), np.int32)
-        for c in ready:
-            toks[c] = last_tok[c]
-        logits, new_caches = self._decode(self.base, self.bank, self.caches,
-                                          jnp.asarray(toks))
-        ready_arr = np.zeros((self.n_clients,), bool)
-        ready_arr[ready] = True
-        sel = jnp.asarray(ready_arr)
+        toks[c, slots] = req.prompt
+        logits, new_caches = self._prefill_bank(self.base, self.bank, self.caches,
+                                               {"tokens": jnp.asarray(toks)})
+        sel = np.zeros((self.n_clients,), bool)
+        sel[c] = True
+        sel = jnp.asarray(sel)
 
         def merge(old, new):
-            if old.ndim > 0 and old.shape[0] == self.n_clients:
-                shape = (self.n_clients,) + (1,) * (old.ndim - 1)
-                return jnp.where(sel.reshape(shape), new, old)
-            return new
+            return jnp.where(sel.reshape((self.n_clients,) + (1,) * (old.ndim - 1)),
+                             new, old)
 
         self.caches = jax.tree.map(merge, self.caches, new_caches)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # [C, max_b]
-        for c in ready:
-            req = active[c]
-            pos = req.max_new_tokens - tokens_left[c]
-            req.generated[:, pos] = nxt[c, :req.generated.shape[0]]
-            last_tok[c] = nxt[c]
-            tokens_left[c] -= 1
+        return np.asarray(logits)[c, slots]
+
+    # ------------------------------------------------------------------
+    # decode + sampling
+    # ------------------------------------------------------------------
+    def _decode_tick(self, serve: set, inflight: List[Request]):
+        active = np.zeros((self.n_clients, self.max_b), bool)
+        stepping = [r for r in inflight
+                    if r.client_id in serve and self._left[id(r)] > 0]
+        for req in stepping:
+            active[req.client_id, self._slots_of[id(req)]] = True
+        logits, self.caches = self._decode(
+            self.base, self.bank, self.caches,
+            jnp.asarray(self._last_tok), jnp.asarray(active))
+        lg = np.asarray(logits)
+        for req in stepping:
+            c, slots = req.client_id, self._slots_of[id(req)]
+            nxt = self._sample(lg[c, slots], req)
+            pos = req.max_new_tokens - self._left[id(req)]
+            req.generated[:, pos] = nxt
+            self._last_tok[c, slots] = nxt
+            self._left[id(req)] -= 1
+            self.stats["decode_tokens"] += len(slots)
         self.stats["ticks"] += 1
-        self.stats["decode_tokens"] += len(ready)
-        self.stats["batched_clients"] += len(ready)
+        self.stats["batched_clients"] += len(serve)
+
+    def _sample(self, logits: np.ndarray, req: Request) -> np.ndarray:
+        """logits [rows, V] -> next token per row, via the request's RNG."""
+        sp = req.sampling
+        if sp is None or sp.method == "greedy":
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        if sp.method not in ("temperature", "top_k"):
+            raise ValueError(f"unknown sampling method {sp.method!r}")
+        z = logits.astype(np.float64) / max(sp.temperature, 1e-6)
+        k = min(sp.top_k, z.shape[-1])          # top_k > vocab = no truncation
+        if sp.method == "top_k" and k > 0:
+            kth = np.partition(z, -k, axis=-1)[:, -k][:, None]
+            z = np.where(z < kth, -np.inf, z)
+        z = z - z.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=-1, keepdims=True)
+        rng = self._rng[id(req)]
+        return np.array([rng.choice(p.shape[-1], p=row) for row in p], np.int32)
+
+    def _retire(self, req: Request):
+        req.finish_t = time.perf_counter()
+        for s in self._slots_of.pop(id(req)):
+            self._slot_owner[req.client_id][s] = None
+        del self._left[id(req)]
+        self._rng.pop(id(req), None)
+        placement = self._placement.pop(id(req), None)
+        if placement is not None:
+            self.router.release(placement)
 
     # ------------------------------------------------------------------
     def simulate_policy(self, requests: List[Request], *, policy: str = None,
@@ -152,7 +345,7 @@ class ServingEngine:
                         client_side_time: float = 5e-5):
         """Scheduler-simulated timeline for these requests under a policy
         (Tables 4/5 reproduction; real outputs are policy-invariant)."""
-        policy = policy or self.scfg.policy
+        policy = policy or self.policy.name
         clients = [ClientSpec(client_id=r.client_id,
                               n_tokens=int(r.prompt.shape[0]),
                               client_side_time=client_side_time,

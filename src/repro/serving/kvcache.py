@@ -7,6 +7,10 @@ stateless"). This module provides:
 * ``CacheSpec`` / ``cache_bytes`` — sizing logic used by the engine's
   admission control and by the heterogeneous-placement cost model (§3.4):
   whether a client's cache fits on-device or must be host-offloaded.
+  ``serving.engine`` admits a request only if its full context
+  (prompt + max_new_tokens) fits the slot depth, and the optional
+  ``PlacementRouter`` charges ``cache_bytes`` against fleet HBM for the
+  request's lifetime (released when its slots free).
 * sliding-window ring-buffer cache ops (the beyond-paper long-context
   variant for dense archs).
 * host-offload accounting: on real TPU hardware the cache is placed with

@@ -14,6 +14,11 @@ and an accelerator slot, using the analytic cost model in
 "they only need to provision the base executor resources ... the per-token
 resource requirement remains constant irrespective of the client-side
 configurations" — client placement is decided per request here.
+
+``serving.engine`` uses this as admission control: a request is admitted
+only when ``route()`` finds (and commits) a placement; the engine calls
+``release()`` when the request's slots free, so queued requests take the
+capacity the moment it returns (continuous-batching backpressure).
 """
 from __future__ import annotations
 
@@ -57,6 +62,8 @@ class PlacementRouter:
               *, latency_sensitive: bool = True) -> Placement:
         """Pick the cheapest placement that fits; latency-sensitive requests
         refuse the CPU unless nothing else fits."""
+        # cache_bytes already multiplies by `batch` — `need` is the whole
+        # session's footprint, and is what commit()/release() account with.
         need = cache_bytes(self.cfg, context_len, batch)
         candidates = []
 
@@ -65,7 +72,7 @@ class PlacementRouter:
         het = decode_token_cost(self.cfg, context_len, placement="hetero")
 
         for s in self.slots.values():
-            if gpu.total != float("inf") and s.fits(need * batch):
+            if gpu.total != float("inf") and s.fits(need):
                 candidates.append(Placement(s.slot_id, "gpu",
                                             gpu.total * batch, need))
             # offload only needs working-set HBM (~1 layer of cache)

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property sweeps are optional-dep gated
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import (sgmv, sgmv_ref, ragged_linear, ragged_linear_ref,

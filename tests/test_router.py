@@ -41,6 +41,35 @@ class TestRouting:
         # requests spill to offload/CPU
         assert any(m != "gpu" for m in modes)
 
+    def test_batch_not_double_counted(self, router):
+        """Regression: route() used to check fits(need * batch) while
+        cache_bytes(…, batch) already includes the batch factor, then
+        commit() deducted only `need` — over-rejecting by batch× and
+        desynchronizing the accounting."""
+        cfg = get_config("symbiosis-llama2-13b")
+        from repro.serving.kvcache import cache_bytes
+        need = cache_bytes(cfg, 4_000, batch=4)
+        # a slot that fits the true batch-4 footprint but not 4x it
+        r = PlacementRouter(cfg, [Slot(0, free_hbm=need * 1.5)],
+                            host_free_bytes=0)
+        p = r.route(context_len=4_000, batch=4)
+        assert p.mode == "gpu" and p.cache_bytes == need
+
+    def test_commit_release_round_trip(self, router):
+        """commit() and release() must be exact inverses across all modes."""
+        snapshot = ({sid: s.free_hbm for sid, s in router.slots.items()},
+                    router.host_free)
+        placements = [router.route(context_len=cl, batch=b,
+                                   latency_sensitive=ls)
+                      for cl, b, ls in [(2_000, 1, True), (4_000, 4, True),
+                                        (32_768, 2, False), (262_144, 1, False)]]
+        assert {p.mode for p in placements} >= {"gpu", "hetero"}
+        for p in placements:
+            router.release(p)
+        assert router.host_free == pytest.approx(snapshot[1])
+        for sid, s in router.slots.items():
+            assert s.free_hbm == pytest.approx(snapshot[0][sid])
+
     def test_oom_raises(self):
         cfg = get_config("symbiosis-llama2-13b")
         r = PlacementRouter(cfg, [Slot(0, free_hbm=1e9)], host_free_bytes=1e9)

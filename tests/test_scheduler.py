@@ -1,5 +1,6 @@
 """Opportunistic batching policies (paper §3.7, Tables 4/5)."""
 import pytest
+pytest.importorskip("hypothesis")  # property sweeps are optional-dep gated
 from hypothesis import given, settings, strategies as st
 
 from repro.core.scheduler import ClientSpec, simulate
