@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scheduler import simulate
-from benchmarks.common import emit, residual_bytes, timeit
+from benchmarks.common import emit, timeit
 from benchmarks.bench_batching import _clients, N_LAYERS, EXEC_OVERHEAD_13B, PER_TOKEN_13B
 
 

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.hardware import V5E
-from repro.kernels import (sgmv, sgmv_ref, ragged_linear, ragged_linear_ref,
+from repro.kernels import (sgmv, sgmv_ref, ragged_linear,
                            decode_attn, decode_attn_ref)
 from benchmarks.common import emit
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.config import AdapterConfig, TrainConfig
+from repro.config import AdapterConfig
 from repro.configs import get_config
 from repro.core import symbiosis
 from repro.core.virtlayer import make_client_ctx

@@ -15,6 +15,7 @@ byte-identical (exactness), throughput is not.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -24,7 +25,9 @@ from repro.config import AdapterConfig, ServeConfig, TrainConfig
 from repro.configs import get_config
 from repro.core import symbiosis
 from repro.data import make_client_batches
+from repro.serving import kvcache
 from repro.serving.engine import ServingEngine, Request
+from repro.serving.router import PlacementRouter, Slot
 from benchmarks.common import timeit, emit
 
 ACFG = AdapterConfig(method="lora", rank=8, targets=("q", "k", "v", "o"))
@@ -49,13 +52,13 @@ def run_serving(quick: bool = False):
     scfg = ServeConfig(n_clients=C, max_seq=prompt_len + max_new + 8)
     base, bank, _ = symbiosis.init_system(cfg, ACFG, C, jax.random.PRNGKey(0))
 
-    def measure(**engine_kw):
-        eng = ServingEngine(cfg, ACFG, scfg, base, bank,
+    def measure(sc=scfg, **engine_kw):
+        eng = ServingEngine(cfg, ACFG, sc, base, bank,
                             max_batch_per_client=max_b, **engine_kw)
         for r in _serving_workload(cfg, C, max_b, n_req, prompt_len, max_new):
             eng.submit(r)
         eng.run()                              # warm compile caches
-        eng2 = ServingEngine(cfg, ACFG, scfg, base, bank,
+        eng2 = ServingEngine(cfg, ACFG, sc, base, bank,
                              max_batch_per_client=max_b, **engine_kw)
         reqs = _serving_workload(cfg, C, max_b, n_req, prompt_len, max_new)
         for r in reqs:
@@ -69,16 +72,76 @@ def run_serving(quick: bool = False):
     seed_tok_s, seed_stats, seed_done = measure(bank_prefill=True,
                                                 max_inflight_per_client=1)
     cont_tok_s, cont_stats, cont_done = measure()
+    paged_tok_s, paged_stats, paged_done = measure(
+        dataclasses.replace(scfg, page_block=16))
+
+    # exactness: the paged layout changes memory management, never outputs
+    key = lambda r: (r.client_id, r.prompt.tobytes())
+    assert ({key(r): r.generated.tobytes() for r in cont_done}
+            == {key(r): r.generated.tobytes() for r in paged_done}), \
+        "paged outputs diverged from dense"
 
     rows = [
         {"engine": "seed_style", "tok_s": round(seed_tok_s),
          "ticks": seed_stats["ticks"], "prefill_tokens": seed_stats["prefill_tokens"]},
         {"engine": "continuous", "tok_s": round(cont_tok_s),
          "ticks": cont_stats["ticks"], "prefill_tokens": cont_stats["prefill_tokens"]},
+        {"engine": "continuous_paged", "tok_s": round(paged_tok_s),
+         "ticks": paged_stats["ticks"], "prefill_tokens": paged_stats["prefill_tokens"]},
         {"engine": "speedup", "tok_s": round(cont_tok_s / max(seed_tok_s, 1e-9), 2),
          "ticks": "-", "prefill_tokens": "-"},
     ]
     return emit("sec37_serving_continuous_batching", rows)
+
+
+def run_paged_admission(quick: bool = False):
+    """ISSUE 2 acceptance: concurrently admitted clients at a FIXED fleet
+    HBM budget — dense max_seq-deep slot rows vs paged (16-token pages) +
+    int8 KV. The router charges what each layout pins, so the dense engine
+    serializes on HBM while the paged engine packs many short requests into
+    the same budget."""
+    cfg = get_config("symbiosis-llama2-13b").reduced(
+        n_layers=2, d_model=256 if quick else 512)
+    C, max_b = (4, 2) if quick else (8, 4)
+    prompt_len, max_new = 12, 12
+    max_seq = 512 if quick else 1024
+    n_req = C * max_b
+    scfg_dense = ServeConfig(n_clients=C, max_seq=max_seq)
+    scfg_paged = dataclasses.replace(scfg_dense, page_block=16, kv_quant=True)
+    # budget fits ~2 (quick) / ~4 dense sessions — the dense ceiling
+    dense_row = kvcache.cache_bytes(cfg, max_seq, 1)
+    budget = dense_row * (2.5 if quick else 4.5)
+    base, bank, _ = symbiosis.init_system(cfg, ACFG, C, jax.random.PRNGKey(0))
+
+    def peak_admitted(sc):
+        router = PlacementRouter(cfg, [Slot(0, free_hbm=budget)],
+                                 host_free_bytes=0)
+        eng = ServingEngine(cfg, ACFG, sc, base, bank,
+                            max_batch_per_client=max_b, router=router)
+        rng = np.random.default_rng(0)
+        for i in range(n_req):                 # all due at tick 0
+            eng.submit(Request(client_id=i % C,
+                               prompt=rng.integers(0, cfg.vocab,
+                                                   (1, prompt_len)).astype(np.int32),
+                               max_new_tokens=max_new))
+        done = eng.run()
+        assert len(done) == n_req
+        return eng.stats["peak_inflight"]
+
+    dense_peak = peak_admitted(scfg_dense)
+    paged_peak = peak_admitted(scfg_paged)
+    ratio = paged_peak / max(dense_peak, 1)
+    rows = [
+        {"layout": "dense_rows", "peak_admitted": dense_peak,
+         "hbm_budget_mb": round(budget / 1e6, 1)},
+        {"layout": "paged16_int8", "peak_admitted": paged_peak,
+         "hbm_budget_mb": round(budget / 1e6, 1)},
+        {"layout": "ratio", "peak_admitted": round(ratio, 2),
+         "hbm_budget_mb": "check>=1.5:" + str(ratio >= 1.5)},
+    ]
+    assert ratio >= 1.5, (
+        f"paged+int8 admitted only {ratio:.2f}x the dense clients")
+    return emit("paged_admission_fixed_hbm", rows)
 
 
 def run(quick: bool = False):
@@ -127,7 +190,14 @@ def run(quick: bool = False):
                  "baseline_iter_s": "-", "symbiosis_tok_s": "-",
                  "baseline_tok_s": "-"})
     out = emit("fig11_12_multiclient", rows)
-    return out + run_serving(quick)
+    return out + run_serving(quick) + run_paged_admission(quick)
+
+
+def run_smoke():
+    """CI bench-smoke entry: a few real engine ticks on tiny configs —
+    the serving comparison (incl. the paged engine) and the paged-admission
+    section."""
+    return run_serving(quick=True) + run_paged_admission(quick=True)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,13 @@
 """Benchmark driver: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--smoke]
 
 Emits CSV lines (bench,key=value,...) and writes experiments/bench/*.json.
+
+``--smoke`` is the CI guard against benchmark rot: it imports EVERY bench
+module (so stale imports/APIs fail loudly) and runs a few real ticks of
+bench_multiclient on tiny configs — the serving comparison plus the
+paged-admission-at-fixed-HBM section.
 """
 from __future__ import annotations
 
@@ -29,9 +34,22 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="smaller models / fewer points")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: import every bench, run bench_multiclient "
+                         "serving + paged-admission sections on tiny configs")
     args = ap.parse_args()
 
     import importlib
+    if args.smoke:
+        for name, modname in BENCHES:
+            importlib.import_module(modname)       # rot check: must import
+        print(f"imported {len(BENCHES)} bench modules OK")
+        mod = importlib.import_module("benchmarks.bench_multiclient")
+        t0 = time.time()
+        mod.run_smoke()
+        print(f"bench smoke complete in {time.time() - t0:.1f}s")
+        return
+
     failures = []
     for name, modname in BENCHES:
         if args.only and args.only not in name:

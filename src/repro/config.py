@@ -6,10 +6,9 @@ Reduced variants for CPU smoke tests come from ``ModelConfig.reduced()``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Sequence
 
-import jax.numpy as jnp
 
 # Architecture families.
 DENSE = "dense"
@@ -172,10 +171,31 @@ class TrainConfig:
 
 @dataclass(frozen=True)
 class ServeConfig:
+    """Serving-engine configuration.
+
+    KV layout knobs (beyond-paper; see serving/kvcache.py):
+
+    * ``page_block`` — 0 keeps the dense fixed-depth (``max_seq``) cache
+      rows; > 0 pages the KV cache: each client owns a shared pool of
+      ``page_block``-token pages and each sequence slot maps its logical
+      positions through a block table, so a slot only holds pages for
+      tokens it has actually produced. Attention-bearing families only
+      (dense/MoE/VLM/hybrid/enc-dec); recurrent families have O(1) state
+      and ignore it.
+    * ``pool_pages`` — pages per client pool; 0 sizes the pool for full
+      provisioning (``max_batch_per_client * ceil(max_seq/page_block)``).
+      Smaller pools trade admission backpressure for HBM.
+    * ``kv_quant`` — int8 KV entries + per-head f32 scales (≈0.5× cache
+      bytes). Composes with paging. Dense/MoE/VLM families only; ignored
+      for architectures without a pure-KV decode cache.
+    """
     n_clients: int = 8
     max_seq: int = 2048
     token_budget: int = 4096          # packed base-executor buffer capacity (paper §3.7)
     policy: str = "opportunistic"     # lockstep | nolockstep | opportunistic
     wait_fraction: float = 0.1        # opportunistic wait deadline as a fraction of request cost
     privacy: bool = False             # paper §3.8 activation noise
+    page_block: int = 0               # 0 = dense max_seq rows; >0 = paged KV (tokens/page)
+    pool_pages: int = 0               # pages per client pool (0 = full provisioning)
+    kv_quant: bool = False            # int8 KV cache entries + f32 per-head scales
     seed: int = 0

@@ -21,8 +21,8 @@ packed matmuls to validate that batching preserves outputs.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List
 
 
 class TickPolicy:

@@ -20,13 +20,13 @@ base copy, saving activations) is available via
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import AdapterConfig, ModelConfig, TrainConfig, ServeConfig
+from repro.config import (AdapterConfig, ModelConfig, TrainConfig, ServeConfig,
+                          DENSE, MOE, VLM, HYBRID, ENCDEC)
 from repro.core import adapters as adapters_lib
 from repro.core.virtlayer import make_client_ctx
 from repro.models import get_model
@@ -170,6 +170,27 @@ def make_multi_client_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig
     return decode
 
 
+def serve_cache_kwargs(cfg: ModelConfig, scfg: ServeConfig, *,
+                       pool_pages: Optional[int] = None):
+    """Cache-construction kwargs implied by a ServeConfig for this family.
+
+    Paging applies to the attention-bearing families only (recurrent
+    families carry O(1) state — nothing to page); int8 KV quantization to
+    the pure-KV families (dense/MoE/VLM). ``pool_pages`` overrides the
+    pool sizing (the engine passes its allocator's pool size; slot-axis
+    derivation passes 1 so pool shapes don't scale with the probe batch)."""
+    kw = {}
+    if scfg.page_block and cfg.arch in (DENSE, MOE, VLM, HYBRID, ENCDEC):
+        kw["page_block"] = scfg.page_block
+        if pool_pages is not None:
+            kw["pool_pages"] = pool_pages
+        elif scfg.pool_pages:
+            kw["pool_pages"] = scfg.pool_pages
+    if scfg.kv_quant and cfg.arch in (DENSE, MOE, VLM):
+        kw["quant"] = True
+    return kw
+
+
 def cache_slot_axes(cfg: ModelConfig, max_seq: int, **cache_kw):
     """Per-leaf *slot axis* map for one client's decode cache.
 
@@ -178,10 +199,20 @@ def cache_slot_axes(cfg: ModelConfig, max_seq: int, **cache_kw):
     it at axis 0, pre-layer KV at axis 0, ...). The engine needs to merge /
     zero individual slots without knowing the family, so we derive the axis
     structurally: build the cache at batch 1 and batch 2 and record, per
-    leaf, the axis where the shapes differ. Returns a pytree of ints with
-    the cache's structure. Shapes only — ``eval_shape`` never allocates the
+    leaf, the axis where the shapes differ. Leaves whose shape does NOT
+    depend on the batch — the paged layout's shared page pools — map to
+    ``None``: they have no slot axis, are never zeroed per slot, and a
+    masked step's pool writes are already gated by the active mask inside
+    the model, so merges take the new value wholesale. ``block_tbl`` is
+    likewise ``None``: it is engine-managed state that models pass through
+    untouched. Returns a pytree of Optional[int] with the cache's
+    structure. Shapes only — ``eval_shape`` never allocates the
     (potentially huge) caches."""
     model = get_model(cfg)
+    if cache_kw.get("page_block"):
+        # pin the pool size so it can't scale with the probe batch (auto
+        # sizing is batch * n_blocks, which would masquerade as a slot axis)
+        cache_kw = dict(cache_kw, pool_pages=cache_kw.get("pool_pages") or 1)
     a = jax.eval_shape(lambda: model.init_cache(1, max_seq, **cache_kw))
     b = jax.eval_shape(lambda: model.init_cache(2, max_seq, **cache_kw))
 
@@ -189,9 +220,12 @@ def cache_slot_axes(cfg: ModelConfig, max_seq: int, **cache_kw):
         for i, (m, n) in enumerate(zip(x.shape, y.shape)):
             if m != n:
                 return i
-        raise ValueError(f"cache leaf {x.shape} has no batch/slot axis")
+        return None                      # batch-independent leaf (page pool)
 
-    return jax.tree.map(axis, a, b)
+    axes = jax.tree.map(axis, a, b)
+    if isinstance(axes, dict) and "block_tbl" in axes:
+        axes["block_tbl"] = None
+    return axes
 
 
 def _slot_mask(mask, ax, ndim):
@@ -233,13 +267,16 @@ def make_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     """
     model = get_model(cfg)
     ctx = make_client_ctx(cfg, acfg, **ctx_kw)
-    slot_axes = cache_slot_axes(cfg, scfg.max_seq)
+    slot_axes = cache_slot_axes(cfg, scfg.max_seq,
+                                **serve_cache_kwargs(cfg, scfg, pool_pages=1))
 
     def prefill_one(base, bank, caches, c, tokens, lengths, slot_mask):
         adapter = jax.tree.map(lambda x: x[c], bank) if bank is not None else None
         old = jax.tree.map(lambda x: x[c], caches)
 
         def zero_slots(x, ax):
+            if ax is None:    # shared page pool / block table: no slot rows
+                return x      # to zero — stale pages are masked by position
             return jnp.where(_slot_mask(slot_mask, ax, x.ndim),
                              jnp.zeros((), x.dtype), x)
 
@@ -248,6 +285,8 @@ def make_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
                                     adapter, lengths=lengths)
 
         def merge(o, n, ax):
+            if ax is None:    # pool writes were already bounded by lengths
+                return n
             return jnp.where(_slot_mask(slot_mask, ax, o.ndim), n, o)
 
         merged = jax.tree.map(merge, old, new, slot_axes)
@@ -268,19 +307,35 @@ def make_masked_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     tick; every other slot's cache (including its position counter) is left
     exactly as it was, so clients can run at different rates and sequences
     can join/leave mid-stream. The merge happens inside the jitted step —
-    one dispatch per tick instead of a host-side tree traversal."""
+    one dispatch per tick instead of a host-side tree traversal.
+
+    Paged caches (scfg.page_block > 0) can't express the merge as a
+    per-slot select — the page pool is shared across a client's slots — so
+    the active rows are threaded INTO the model step instead: inactive
+    slots' pool writes are dropped at the scatter (blocks.paged_token_write)
+    and the merge takes pool leaves wholesale."""
     model = get_model(cfg)
     ctx = make_client_ctx(cfg, acfg, **ctx_kw)
     kw = {"ring": True} if ring else {}
-    slot_axes = cache_slot_axes(cfg, scfg.max_seq)
+    cache_kw = serve_cache_kwargs(cfg, scfg, pool_pages=1)
+    paged = "page_block" in cache_kw
+    slot_axes = cache_slot_axes(cfg, scfg.max_seq, **cache_kw)
 
     def decode(base, bank, caches, tokens, active):
-        def one(adapter, cache, tok):
-            return model.decode_step(base, cache, tok, ctx, adapter, **kw)
-
-        logits, new_caches = jax.vmap(one, in_axes=(0, 0, 0))(bank, caches, tokens)
+        if paged:
+            def one(adapter, cache, tok, act):
+                return model.decode_step(base, cache, tok, ctx, adapter,
+                                         active=act, **kw)
+            logits, new_caches = jax.vmap(one, in_axes=(0, 0, 0, 0))(
+                bank, caches, tokens, active)
+        else:
+            def one(adapter, cache, tok):
+                return model.decode_step(base, cache, tok, ctx, adapter, **kw)
+            logits, new_caches = jax.vmap(one, in_axes=(0, 0, 0))(bank, caches, tokens)
 
         def merge(o, n, ax):
+            if ax is None:    # pool writes already active-gated in the model
+                return n
             shape = [1] * o.ndim
             shape[0] = active.shape[0]
             shape[ax + 1] = active.shape[1]
@@ -292,13 +347,18 @@ def make_masked_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
 
 
 def init_client_caches(cfg: ModelConfig, n_clients: int, batch: int, max_seq: int,
-                       dtype=None, *, window: int = 0, quant: bool = False):
+                       dtype=None, *, window: int = 0, quant: bool = False,
+                       page_block: int = 0, pool_pages: int = 0):
     model = get_model(cfg)
     kw = {}
     if window:
         kw["window"] = window
     if quant:
         kw["quant"] = True
+    if page_block:
+        kw["page_block"] = page_block
+        if pool_pages:
+            kw["pool_pages"] = pool_pages
     one = model.init_cache(batch, max_seq, dtype, **kw)
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape)
                         .copy(), one)

@@ -11,7 +11,7 @@ data-parallel mesh axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

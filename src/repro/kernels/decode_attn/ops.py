@@ -7,15 +7,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attn.decode_attn import decode_attn_pallas
-from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.decode_attn.ref import decode_attn_ref, gather_paged_kv
 
 
 @functools.partial(jax.jit, static_argnames=("block_kv", "window",
                                              "use_kernel", "interpret"))
 def decode_attn(q, k, v, pos, *, block_kv: int = 512, window: int = 0,
-                use_kernel: bool = True, interpret: bool = True):
+                use_kernel: bool = True, interpret: bool = True,
+                block_tbl=None):
     """Single-token GQA decode attention. q [B,K,G,hd]; k/v [B,T,K,hd];
-    pos [B] int32 last-valid index. Optional sliding window."""
+    pos [B] int32 last-valid index. Optional sliding window.
+
+    ``block_tbl`` [B, n_blocks] switches to the paged layout: k/v are page
+    pools [P, page_block, K, hd] and each row's cache view is gathered
+    through its table row before the blocked kernel runs (the gather is the
+    reference strategy; a table-aware index_map inside the kernel is the
+    on-TPU follow-up)."""
+    if block_tbl is not None:
+        k, v = gather_paged_kv(k, v, block_tbl)
     if not use_kernel:
         return decode_attn_ref(q, k, v, pos, window=window)
     T = k.shape[1]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for blocked GQA decode attention."""
+"""Pure-jnp oracle for blocked GQA decode attention (dense or paged cache)."""
 from __future__ import annotations
 
 import math
@@ -7,12 +7,37 @@ import jax
 import jax.numpy as jnp
 
 
-def decode_attn_ref(q, k, v, pos, *, window: int = 0):
+def paged_view(pool, tbl):
+    """Gather a dense per-slot cache view from a page pool — the canonical
+    block-table gather (``models.blocks`` re-uses it for the model-side
+    paged decode, so the engine and kernel paths can never diverge).
+
+    pool [P, block, ...]; tbl [B, n_blocks] int32 page ids.
+    Returns [B, n_blocks * block, ...]. Lanes reached through unallocated
+    table entries hold unrelated (but finite) data — callers must mask by
+    position validity, exactly as with an uninitialized dense cache."""
+    P, blk = pool.shape[:2]
+    B, n_blocks = tbl.shape
+    v = pool[jnp.clip(tbl, 0, P - 1)]
+    return v.reshape(B, n_blocks * blk, *pool.shape[2:])
+
+
+def gather_paged_kv(k, v, block_tbl):
+    """Materialize dense per-row K and V views from paged pools."""
+    return paged_view(k, block_tbl), paged_view(v, block_tbl)
+
+
+def decode_attn_ref(q, k, v, pos, *, window: int = 0, block_tbl=None):
     """Single-token GQA attention against a KV cache.
 
     q [B, K, G, hd]; k/v [B, T, K, hd]; pos [B] int32 (last valid index).
-    Optional sliding window. Returns out [B, K, G, hd].
+    Optional sliding window. With ``block_tbl`` [B, n_blocks], k/v are
+    instead page pools [P, block, K, hd] and each row's cache is addressed
+    through its block-table row (paged KV layout; see serving/kvcache.py).
+    Returns out [B, K, G, hd].
     """
+    if block_tbl is not None:
+        k, v = gather_paged_kv(k, v, block_tbl)
     hd = q.shape[-1]
     T = k.shape[1]
     s = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),

@@ -36,6 +36,13 @@ def main(argv=None):
                     help="ticks between request arrivals (mid-stream joins)")
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--privacy", action="store_true")
+    ap.add_argument("--page-block", type=int, default=0,
+                    help="page the KV cache in blocks of this many tokens "
+                         "(0 = dense max_seq-deep slot rows)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="pages per client pool (0 = full provisioning)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache entries + per-head f32 scales")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -43,7 +50,9 @@ def main(argv=None):
         cfg = cfg.reduced()
     acfg = AdapterConfig(method="lora", rank=8, targets=("q", "v"))
     scfg = ServeConfig(n_clients=args.clients, policy=args.policy,
-                       max_seq=args.prompt_len + args.max_new + 8)
+                       max_seq=args.prompt_len + args.max_new + 8,
+                       page_block=args.page_block, pool_pages=args.pool_pages,
+                       kv_quant=args.kv_quant)
 
     key = jax.random.PRNGKey(scfg.seed)
     base, bank, _ = symbiosis.init_system(cfg, acfg, args.clients, key)
@@ -59,8 +68,15 @@ def main(argv=None):
     for r in reqs:
         eng.submit(r)
 
+    # report from engine state, not the raw args: serve_cache_kwargs drops
+    # knobs a family can't honor (no KV to page on rwkv, no pure-KV cache
+    # to quantize on hybrid/encdec)
+    layout = (f"paged(block={scfg.page_block}, pool={eng._pool_pages})"
+              if eng._paged else "dense")
+    if eng._quant:
+        layout += "+int8"
     print(f"[serve] {cfg.name} | {args.clients} clients | {args.requests} requests "
-          f"| policy={args.policy}")
+          f"| policy={args.policy} | kv={layout}")
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0

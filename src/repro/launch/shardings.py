@@ -15,7 +15,6 @@ total over any architecture in the registry.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

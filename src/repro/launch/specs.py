@@ -16,7 +16,7 @@ Shape kinds map to steps (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,7 @@ from repro.config import (AdapterConfig, ModelConfig, ServeConfig, ShapeConfig,
 from repro.configs import get_config
 from repro.core import symbiosis
 from repro.launch import shardings
-from repro.launch.mesh import batch_axes, batch_size
+from repro.launch.mesh import batch_size
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 # Paper Table 2 "LoRA 3": rank 8 on [q,k,v,o] — the adapter used throughout

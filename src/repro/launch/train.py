@@ -12,11 +12,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import AdapterConfig, TrainConfig
 from repro.configs import ARCHS, get_config

@@ -15,6 +15,10 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+# the canonical block-table gather lives beside the decode kernel's oracle
+# (kernels never import models); the model-side paged decode re-uses it
+from repro.kernels.decode_attn.ref import paged_view
+
 
 class LinearFns(NamedTuple):
     """Hook for base-model linear layers.
@@ -251,20 +255,15 @@ def quantize_head(x):
     return q, scale
 
 
-def mha_decode_quant(params, cfg, x, cache_k, cache_ks, cache_v, cache_vs,
-                     pos, lin: LinearFns, *, path_prefix: str = "",
-                     ring: bool = False):
-    """Decode against an int8-quantized KV cache (beyond-paper §Perf
-    optimization: halves the HBM bytes of the cache read, the dominant
-    roofline term of decode shapes).
+# ---------------------------------------------------------------------------
+# Decode attention internals (shared by the dense, quantized and paged paths)
+# ---------------------------------------------------------------------------
 
-    cache_k/v int8 [B,T,K,hd]; cache_ks/vs f32 [B,T,K,1] per-head scales.
-    Returns (out, new_k, new_ks, new_v, new_vs)."""
+def _decode_qkv(params, cfg, x, pos, lin: LinearFns, path_prefix: str):
+    """Single-token q/k/v projections + qk-norm + RoPE. x [B,1,d]; pos [B].
+    Returns q [B,1,H,hd], k/v [B,1,K,hd]."""
     B = x.shape[0]
     hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
-    G = H // K
-    T = cache_k.shape[1]
-
     q = lin.dense(x, params["wq"], params.get("bq"), path_prefix + "q").reshape(B, 1, H, hd)
     k = lin.dense(x, params["wk"], params.get("bk"), path_prefix + "k").reshape(B, 1, K, hd)
     v = lin.dense(x, params["wv"], params.get("bv"), path_prefix + "v").reshape(B, 1, K, hd)
@@ -274,20 +273,14 @@ def mha_decode_quant(params, cfg, x, cache_k, cache_ks, cache_v, cache_vs,
     if cfg.rope_theta > 0:
         q = apply_rope(q, pos[:, None], cfg.rope_theta)
         k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    return q, k, v
 
-    kq, ks = quantize_head(k)
-    vq, vs = quantize_head(v)
-    slot = (pos % T) if ring else pos
-    idx = slot[:, None, None, None]
-    t_iota = jnp.arange(T)[None, :, None, None]
-    write = t_iota == idx
-    cache_k = jnp.where(write, kq, cache_k)
-    cache_ks = jnp.where(write, ks, cache_ks)
-    cache_v = jnp.where(write, vq, cache_v)
-    cache_vs = jnp.where(write, vs, cache_vs)
 
+def _decode_valid(cfg, pos, T: int, ring: bool):
+    """[B,T] validity of cache lanes for a query at position pos."""
     t_ar = jnp.arange(T)[None, :]
     if ring:
+        # slot s holds absolute position p: p % T == s, p <= pos, p > pos - T
         cycle = (pos[:, None] - t_ar) // T
         abs_pos = cycle * T + t_ar
         valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
@@ -297,7 +290,36 @@ def mha_decode_quant(params, cfg, x, cache_k, cache_ks, cache_v, cache_vs,
         valid = (t_ar <= pos[:, None])
         if cfg.sliding_window:
             valid &= (pos[:, None] - t_ar) < cfg.sliding_window
+    return valid
 
+
+def _decode_attend(params, cfg, q, cache_k, cache_v, valid, lin: LinearFns,
+                   path_prefix: str):
+    """Attention of one query token against a dense [B,T,K,hd] cache view.
+
+    Grouped GQA einsum (NOT kv-replicated): with the cache sharded on T,
+    scores stay T-local and only the softmax max/sum and the T-contraction
+    psum cross chips (flash-decode style). Repeating KV to H here would
+    make GSPMD reshard the whole repeated cache (all-to-all) every layer."""
+    B = q.shape[0]
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
+    G = H // K
+    qg = q.reshape(B, 1, K, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, cache_k).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, cache_v).reshape(B, 1, H * hd)
+    return lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+
+
+def _decode_attend_quant(params, cfg, q, cache_k, cache_ks, cache_v, cache_vs,
+                         valid, lin: LinearFns, path_prefix: str, out_dtype):
+    """Attention of one query token against an int8 [B,T,K,hd] cache view
+    with per-entry f32 scales [B,T,K,1]."""
+    B = q.shape[0]
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
+    G = H // K
     qg = q.reshape(B, 1, K, G, hd)
     scale = 1.0 / math.sqrt(hd)
     # int8 scores with per-entry rescale: q·(kq*ks) == (q·kq)*ks
@@ -308,9 +330,80 @@ def mha_decode_quant(params, cfg, x, cache_k, cache_ks, cache_v, cache_vs,
     p = jax.nn.softmax(s, axis=-1)
     pv = p * cache_vs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
     out = jnp.einsum("bkgst,btkh->bskgh", pv,
-                     cache_v.astype(jnp.float32)).astype(x.dtype)
+                     cache_v.astype(jnp.float32)).astype(out_dtype)
     out = out.reshape(B, 1, H * hd)
-    out = lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+    return lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+
+
+# ---------------------------------------------------------------------------
+# Paged KV primitives (vLLM-style block pool + per-slot block tables)
+# ---------------------------------------------------------------------------
+#
+# A paged cache stores K/V in a *pool* of fixed-size pages shared by all
+# sequence slots of one client: pool [P, block, ...]. Each slot maps its
+# logical token positions through a block table row tbl[b]: position t lives
+# at pool[tbl[b, t // block], t % block]. A slot therefore only occupies
+# pages for tokens it has actually produced; freeing a sequence returns its
+# pages to the pool. Unallocated table entries may alias live pages of other
+# slots — reads through them are always masked by position validity, and all
+# writes are either bounded by true lengths (prefill) or dropped for
+# inactive slots (decode), so cross-slot corruption is impossible.
+
+def paged_token_write(pool, tbl, pos, x, active=None):
+    """Write one token's row x [B, ...] at logical position pos [B] through
+    the block table. Rows with active == False are dropped (their target
+    page index is pushed out of bounds), which is what lets a bank-wide
+    masked decode share one pool: inactive slots never touch it."""
+    P, blk = pool.shape[:2]
+    B = tbl.shape[0]
+    page = jnp.take_along_axis(tbl, (pos // blk)[:, None], axis=1)[:, 0]
+    if active is not None:
+        page = jnp.where(active, page, P)            # P is out of bounds
+    return pool.at[page, pos % blk].set(x.astype(pool.dtype), mode="drop")
+
+
+def paged_prefill_write(pool, tbl, x, lengths=None):
+    """Scatter prefill rows x [B, S, ...] into the pool through the block
+    table, writing ONLY positions < lengths — right-pad positions never
+    touch the pool (pages beyond a row's true length stay unallocated,
+    unlike the dense path which writes stale pad K/V to be overwritten
+    later). lengths None writes all S positions."""
+    P, blk = pool.shape[:2]
+    B, S = x.shape[:2]
+    t = jnp.arange(S)
+    page = jnp.take(tbl, t // blk, axis=1)           # [B, S]
+    if lengths is not None:
+        valid = t[None, :] < jnp.broadcast_to(jnp.asarray(lengths, jnp.int32),
+                                              (B,))[:, None]
+        page = jnp.where(valid, page, P)             # P is out of bounds
+    off = jnp.broadcast_to((t % blk)[None, :], (B, S))
+    return pool.at[page, off].set(x.astype(pool.dtype), mode="drop")
+
+
+def mha_decode_quant(params, cfg, x, cache_k, cache_ks, cache_v, cache_vs,
+                     pos, lin: LinearFns, *, path_prefix: str = "",
+                     ring: bool = False):
+    """Decode against an int8-quantized KV cache (beyond-paper §Perf
+    optimization: halves the HBM bytes of the cache read, the dominant
+    roofline term of decode shapes).
+
+    cache_k/v int8 [B,T,K,hd]; cache_ks/vs f32 [B,T,K,1] per-head scales.
+    Returns (out, new_k, new_ks, new_v, new_vs)."""
+    T = cache_k.shape[1]
+    q, k, v = _decode_qkv(params, cfg, x, pos, lin, path_prefix)
+    kq, ks = quantize_head(k)
+    vq, vs = quantize_head(v)
+    slot = (pos % T) if ring else pos
+    idx = slot[:, None, None, None]
+    t_iota = jnp.arange(T)[None, :, None, None]
+    write = t_iota == idx
+    cache_k = jnp.where(write, kq, cache_k)
+    cache_ks = jnp.where(write, ks, cache_ks)
+    cache_v = jnp.where(write, vq, cache_v)
+    cache_vs = jnp.where(write, vs, cache_vs)
+    valid = _decode_valid(cfg, pos, T, ring)
+    out = _decode_attend_quant(params, cfg, q, cache_k, cache_ks, cache_v,
+                               cache_vs, valid, lin, path_prefix, x.dtype)
     return out, cache_k, cache_ks, cache_v, cache_vs
 
 
@@ -324,20 +417,8 @@ def mha_decode(params, cfg, x, cache_k, cache_v, pos, lin: LinearFns,
 
     Returns (out [B,1,d], new_k, new_v).
     """
-    B = x.shape[0]
-    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
-    G = H // K
     T = cache_k.shape[1]
-
-    q = lin.dense(x, params["wq"], params.get("bq"), path_prefix + "q").reshape(B, 1, H, hd)
-    k = lin.dense(x, params["wk"], params.get("bk"), path_prefix + "k").reshape(B, 1, K, hd)
-    v = lin.dense(x, params["wv"], params.get("bv"), path_prefix + "v").reshape(B, 1, K, hd)
-    if cfg.qk_norm:
-        q = head_rmsnorm(params["q_norm"], q)
-        k = head_rmsnorm(params["k_norm"], k)
-    if cfg.rope_theta > 0:
-        q = apply_rope(q, pos[:, None], cfg.rope_theta)
-        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    q, k, v = _decode_qkv(params, cfg, x, pos, lin, path_prefix)
 
     # Write this token's K/V at its slot (per batch row). The write is an
     # ELEMENTWISE select over the T axis (not a scatter): per-row vector
@@ -351,31 +432,53 @@ def mha_decode(params, cfg, x, cache_k, cache_v, pos, lin: LinearFns,
     cache_k = jnp.where(write, k.astype(cache_k.dtype), cache_k)
     cache_v = jnp.where(write, v.astype(cache_v.dtype), cache_v)
 
-    t_ar = jnp.arange(T)[None, :]
-    if ring:
-        # slot s holds absolute position p: p % T == s, p <= pos, p > pos - T
-        cycle = (pos[:, None] - t_ar) // T
-        abs_pos = cycle * T + t_ar
-        valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
-        if cfg.sliding_window:
-            valid &= (pos[:, None] - abs_pos) < cfg.sliding_window
-    else:
-        valid = (t_ar <= pos[:, None])                            # [B,T]
-        if cfg.sliding_window:
-            valid &= (pos[:, None] - t_ar) < cfg.sliding_window
-
-    # Grouped GQA einsum (NOT kv-replicated): with the cache sharded on T,
-    # scores stay T-local and only the softmax max/sum and the T-contraction
-    # psum cross chips (flash-decode style). Repeating KV to H here would
-    # make GSPMD reshard the whole repeated cache (all-to-all) every layer.
-    qg = q.reshape(B, 1, K, G, hd)
-    scale = 1.0 / math.sqrt(hd)
-    s = jnp.einsum("bskgh,btkh->bkgst", qg, cache_k).astype(jnp.float32) * scale
-    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
-    out = jnp.einsum("bkgst,btkh->bskgh", p, cache_v).reshape(B, 1, H * hd)
-    out = lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
+    valid = _decode_valid(cfg, pos, T, ring)
+    out = _decode_attend(params, cfg, q, cache_k, cache_v, valid, lin, path_prefix)
     return out, cache_k, cache_v
+
+
+def mha_decode_paged(params, cfg, x, pool_k, pool_v, tbl, pos, lin: LinearFns,
+                     *, active=None, path_prefix: str = ""):
+    """Single-token decode against a paged KV cache.
+
+    pool_k/v [P, block, K, hd] page pools shared across the B slots;
+    tbl [B, n_blocks] block table; pos [B]; active [B] bool (None = all).
+    The new token's K/V is written through the table (dropped for inactive
+    rows), then a dense [B, n_blocks*block, K, hd] view is gathered and the
+    attention math is bit-identical to ``mha_decode`` on a dense cache of
+    the same depth. Returns (out, new_pool_k, new_pool_v)."""
+    q, k, v = _decode_qkv(params, cfg, x, pos, lin, path_prefix)
+    pool_k = paged_token_write(pool_k, tbl, pos, k[:, 0], active)
+    pool_v = paged_token_write(pool_v, tbl, pos, v[:, 0], active)
+    cache_k = paged_view(pool_k, tbl)
+    cache_v = paged_view(pool_v, tbl)
+    valid = _decode_valid(cfg, pos, cache_k.shape[1], False)
+    out = _decode_attend(params, cfg, q, cache_k, cache_v, valid, lin, path_prefix)
+    return out, pool_k, pool_v
+
+
+def mha_decode_quant_paged(params, cfg, x, pool_k, pool_ks, pool_v, pool_vs,
+                           tbl, pos, lin: LinearFns, *, active=None,
+                           path_prefix: str = ""):
+    """Paged + int8-quantized decode: pools hold int8 entries [P,block,K,hd]
+    and f32 per-head scales [P,block,K,1]. Same contract as
+    ``mha_decode_paged``; math matches ``mha_decode_quant`` bit-for-bit on
+    equal cache depth. Returns (out, k, ks, v, vs) pools."""
+    q, k, v = _decode_qkv(params, cfg, x, pos, lin, path_prefix)
+    kq, ks = quantize_head(k)
+    vq, vs = quantize_head(v)
+    pool_k = paged_token_write(pool_k, tbl, pos, kq[:, 0], active)
+    pool_ks = paged_token_write(pool_ks, tbl, pos, ks[:, 0], active)
+    pool_v = paged_token_write(pool_v, tbl, pos, vq[:, 0], active)
+    pool_vs = paged_token_write(pool_vs, tbl, pos, vs[:, 0], active)
+    cache_k = paged_view(pool_k, tbl)
+    cache_ks = paged_view(pool_ks, tbl)
+    cache_v = paged_view(pool_v, tbl)
+    cache_vs = paged_view(pool_vs, tbl)
+    valid = _decode_valid(cfg, pos, cache_k.shape[1], False)
+    out = _decode_attend_quant(params, cfg, q, cache_k, cache_ks, cache_v,
+                               cache_vs, valid, lin, path_prefix, x.dtype)
+    return out, pool_k, pool_ks, pool_v, pool_vs
 
 
 def cross_decode(params, cfg, x, enc_k, enc_v, lin: LinearFns, *, path_prefix: str = "xattn_"):

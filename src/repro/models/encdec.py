@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import blocks
-from repro.models.transformer import LinCtx, DEFAULT_CTX
+from repro.models.transformer import LinCtx, DEFAULT_CTX, default_block_table
 from repro.models.blocks import dense_init
 
 
@@ -114,18 +114,32 @@ def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
     return logits, jnp.zeros((), jnp.float32)
 
 
-def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None,
+               *, page_block: int = 0, pool_pages: int = 0):
+    """page_block > 0 pages the decoder self-attention KV (per-layer page
+    pools + a shared ``block_tbl``); the cross-attention cache has fixed
+    depth ``n_frontend_tokens`` and stays dense."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     L = cfg.n_layers
     Te = cfg.n_frontend_tokens
     kv = cfg.n_kv_heads
-    return {
-        "self_k": jnp.zeros((L, batch_size, max_seq, kv, cfg.hd), dtype),
-        "self_v": jnp.zeros((L, batch_size, max_seq, kv, cfg.hd), dtype),
+    tbl = None
+    if page_block:
+        _, P, tbl = default_block_table(batch_size, max_seq, page_block,
+                                        pool_pages)
+        self_lead = (L, P, page_block)
+    else:
+        self_lead = (L, batch_size, max_seq)
+    cache = {
+        "self_k": jnp.zeros(self_lead + (kv, cfg.hd), dtype),
+        "self_v": jnp.zeros(self_lead + (kv, cfg.hd), dtype),
         "cross_k": jnp.zeros((L, batch_size, Te, kv, cfg.hd), dtype),
         "cross_v": jnp.zeros((L, batch_size, Te, kv, cfg.hd), dtype),
         "pos": jnp.zeros((batch_size,), jnp.int32),
     }
+    if tbl is not None:
+        cache["block_tbl"] = tbl
+    return cache
 
 
 def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
@@ -145,6 +159,9 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     scan_ad = adapter.get("dec_layers") if adapter else None
     Te = enc.shape[1]
     kvh, hd = cfg.n_kv_heads, cfg.hd
+    tbl = cache.get("block_tbl")
+    wlen = None if lengths is None else jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32), (B,))
 
     def body(x, layer_in):
         p, sk, sv, ad = layer_in
@@ -154,8 +171,12 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         v = lin.dense(h, p["attn"]["wv"], p["attn"].get("bv"), "v").reshape(B, S, kvh, hd)
         if cfg.rope_theta > 0:
             k = blocks.apply_rope(k, positions, cfg.rope_theta)
-        ck = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, 0, 0, 0))
-        cv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, 0, 0, 0))
+        if tbl is not None:
+            ck = blocks.paged_prefill_write(sk, tbl, k, wlen)
+            cv = blocks.paged_prefill_write(sv, tbl, v, wlen)
+        else:
+            ck = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, 0, 0, 0))
         xk = lin.dense(enc, p["xattn"]["wk"], p["xattn"].get("bk"), "xattn_k").reshape(B, Te, kvh, hd)
         xv = lin.dense(enc, p["xattn"]["wv"], p["xattn"].get("bv"), "xattn_v").reshape(B, Te, kvh, hd)
         x = _dec_layer(p, cfg, x, positions, enc, lin)
@@ -172,14 +193,18 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         pos = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
         xg = jnp.take_along_axis(x, (pos - 1)[:, None, None], axis=1)
         logits = ctx.top.dense(xg, params["lm_head"], None, "lm_head")[:, 0]
-    return logits, {"self_k": sk, "self_v": sv, "cross_k": xk, "cross_v": xv,
-                    "pos": pos}
+    new_cache = {"self_k": sk, "self_v": sv, "cross_k": xk, "cross_v": xv,
+                 "pos": pos}
+    if tbl is not None:
+        new_cache["block_tbl"] = tbl
+    return logits, new_cache
 
 
 def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,
-                adapter=None):
+                adapter=None, *, active=None):
     B = token.shape[0]
     pos = cache["pos"]
+    tbl = cache.get("block_tbl")
     x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
     x = x + jnp.take(params["dec_pos"], jnp.clip(pos, 0, MAX_DEC_POS - 1),
                      axis=0)[:, None].astype(x.dtype)
@@ -189,7 +214,11 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
         p, sk, sv, xk, xv, ad = layer_in
         lin = ctx.for_layer(ad)
         h = blocks.rmsnorm(p["ln1"], x)
-        y, sk, sv = blocks.mha_decode(p["attn"], cfg, h, sk, sv, pos, lin)
+        if tbl is not None:
+            y, sk, sv = blocks.mha_decode_paged(p["attn"], cfg, h, sk, sv,
+                                                tbl, pos, lin, active=active)
+        else:
+            y, sk, sv = blocks.mha_decode(p["attn"], cfg, h, sk, sv, pos, lin)
         x = x + y
         h = blocks.rmsnorm(p["ln_x"], x)
         x = x + blocks.cross_decode(p["xattn"], cfg, h, xk, xv, lin)
@@ -202,5 +231,8 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
                   cache["cross_k"], cache["cross_v"], scan_ad))
     x = blocks.rmsnorm(params["final_norm"], x)
     logits = ctx.top.dense(x, params["lm_head"], None, "lm_head")[:, 0]
-    return logits, {"self_k": sk, "self_v": sv, "cross_k": cache["cross_k"],
-                    "cross_v": cache["cross_v"], "pos": pos + 1}
+    new_cache = {"self_k": sk, "self_v": sv, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"], "pos": pos + 1}
+    if tbl is not None:
+        new_cache["block_tbl"] = tbl
+    return logits, new_cache

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import blocks, mamba as mamba_lib, moe as moe_lib
-from repro.models.transformer import LinCtx, DEFAULT_CTX, embed_tokens, lm_head
+from repro.models.transformer import (LinCtx, DEFAULT_CTX, default_block_table,
+                                      embed_tokens, lm_head)
 
 
 def _sub_is_attn(cfg, j):           # j = index within period
@@ -58,14 +59,17 @@ def init_params(cfg: ModelConfig, key):
     }
 
 
-def _zero_group_state(cfg: ModelConfig, B: int, T_kv: int, dtype):
+def _zero_group_state(cfg: ModelConfig, B: int, kv_lead, dtype):
+    """kv_lead: leading dims of the attention K/V tensors — (B, T) for the
+    dense layout, (pool_pages, page_block) for the paged layout (pool shared
+    across the B slots). Mamba/conv state is per-slot either way."""
     ed = cfg.mamba_expand * cfg.d_model
     st = {}
     for j in range(cfg.attn_every):
         if _sub_is_attn(cfg, j):
             st[f"sub{j}"] = {
-                "k": jnp.zeros((B, T_kv, cfg.n_kv_heads, cfg.hd), dtype),
-                "v": jnp.zeros((B, T_kv, cfg.n_kv_heads, cfg.hd), dtype),
+                "k": jnp.zeros(kv_lead + (cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros(kv_lead + (cfg.n_kv_heads, cfg.hd), dtype),
             }
         else:
             st[f"sub{j}"] = {
@@ -75,20 +79,36 @@ def _zero_group_state(cfg: ModelConfig, B: int, T_kv: int, dtype):
     return st
 
 
-def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None,
+               *, page_block: int = 0, pool_pages: int = 0):
+    """page_block > 0 pages the attention sublayers' KV (per-group page
+    pools + one shared ``block_tbl``); Mamba state is O(1) and stays dense."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     n_groups = cfg.n_layers // cfg.attn_every
-    one = _zero_group_state(cfg, batch_size, max_seq, dtype)
+    tbl = None
+    if page_block:
+        _, P, tbl = default_block_table(batch_size, max_seq, page_block,
+                                        pool_pages)
+        kv_lead = (P, page_block)
+    else:
+        kv_lead = (batch_size, max_seq)
+    one = _zero_group_state(cfg, batch_size, kv_lead, dtype)
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
-    return {"groups": stacked, "pos": jnp.zeros((batch_size,), jnp.int32)}
+    cache = {"groups": stacked, "pos": jnp.zeros((batch_size,), jnp.int32)}
+    if tbl is not None:
+        cache["block_tbl"] = tbl
+    return cache
 
 
 def _group_forward(gp, cfg, x, positions, lin, state, *, capture_kv: bool,
-                   moe_dispatch: str = "scatter", capacity_factor=None):
+                   moe_dispatch: str = "scatter", capacity_factor=None,
+                   tbl=None, lengths=None):
     """Run one period of sublayers. state: group state dict (or None for
     training). Returns (x, aux, new_state). capacity_factor=None keeps the
     MoE sublayers drop-free — required for prefill/decode exactness (drops
-    depend on tokens-in-flight, which differ between the two paths)."""
+    depend on tokens-in-flight, which differ between the two paths).
+    ``tbl`` switches the K/V capture to the paged scatter (bounded by
+    ``lengths`` so pads / zero-length rows never touch the shared pool)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_state = {}
     B, S, _ = x.shape
@@ -103,8 +123,12 @@ def _group_forward(gp, cfg, x, positions, lin, state, *, capture_kv: bool,
                 k = lin.dense(h, p["attn"]["wk"], None, "k").reshape(B, S, K, hd)
                 v = lin.dense(h, p["attn"]["wv"], None, "v").reshape(B, S, K, hd)
                 k = blocks.apply_rope(k, positions, cfg.rope_theta)
-                ck = jax.lax.dynamic_update_slice(st["k"], k.astype(st["k"].dtype), (0, 0, 0, 0))
-                cv = jax.lax.dynamic_update_slice(st["v"], v.astype(st["v"].dtype), (0, 0, 0, 0))
+                if tbl is not None:
+                    ck = blocks.paged_prefill_write(st["k"], tbl, k, lengths)
+                    cv = blocks.paged_prefill_write(st["v"], tbl, v, lengths)
+                else:
+                    ck = jax.lax.dynamic_update_slice(st["k"], k.astype(st["k"].dtype), (0, 0, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(st["v"], v.astype(st["v"].dtype), (0, 0, 0, 0))
                 new_state[f"sub{j}"] = {"k": ck, "v": cv}
             elif st is not None:
                 new_state[f"sub{j}"] = st
@@ -161,11 +185,14 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     x = embed_tokens(cfg, params, tokens, ctx.top)
     positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
     scan_adapters = adapter.get("groups") if adapter else None
+    tbl = cache.get("block_tbl")
+    wlen = None if lengths is None else jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32), (B,))
 
     def body(x, grp_in):
         gp, st, ad = grp_in
         x, _, new_st = _group_forward(gp, cfg, x, positions, ctx.for_layer(ad), st,
-                                      capture_kv=True)
+                                      capture_kv=True, tbl=tbl, lengths=wlen)
         return x, new_st
 
     x, new_groups = jax.lax.scan(jax.checkpoint(body), x,
@@ -178,17 +205,25 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         pos = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
         xg = jnp.take_along_axis(x, (pos - 1)[:, None, None], axis=1)
         logits = lm_head(cfg, params, xg, ctx.top)[:, 0]
-    return logits, {"groups": new_groups, "pos": pos}
+    new_cache = {"groups": new_groups, "pos": pos}
+    if tbl is not None:
+        new_cache["block_tbl"] = tbl
+    return logits, new_cache
 
 
-def _group_decode(gp, cfg, x, state, pos, lin):
+def _group_decode(gp, cfg, x, state, pos, lin, tbl=None, active=None):
     new_state = {}
     for j in range(cfg.attn_every):
         p = gp[f"sub{j}"]
         st = state[f"sub{j}"]
         h = blocks.rmsnorm(p["ln1"], x)
         if "attn" in p:
-            y, ck, cv = blocks.mha_decode(p["attn"], cfg, h, st["k"], st["v"], pos, lin)
+            if tbl is not None:
+                y, ck, cv = blocks.mha_decode_paged(p["attn"], cfg, h, st["k"],
+                                                    st["v"], tbl, pos, lin,
+                                                    active=active)
+            else:
+                y, ck, cv = blocks.mha_decode(p["attn"], cfg, h, st["k"], st["v"], pos, lin)
             new_state[f"sub{j}"] = {"k": ck, "v": cv}
         else:
             y, mst = mamba_lib.mamba_forward(p["mamba"], cfg, h, lin, st)
@@ -204,18 +239,23 @@ def _group_decode(gp, cfg, x, state, pos, lin):
 
 
 def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,
-                adapter=None):
+                adapter=None, *, active=None):
     B = token.shape[0]
     pos = cache["pos"]
+    tbl = cache.get("block_tbl")
     x = embed_tokens(cfg, params, token[:, None], ctx.top)
     scan_adapters = adapter.get("groups") if adapter else None
 
     def body(x, grp_in):
         gp, st, ad = grp_in
-        x, new_st = _group_decode(gp, cfg, x, st, pos, ctx.for_layer(ad))
+        x, new_st = _group_decode(gp, cfg, x, st, pos, ctx.for_layer(ad),
+                                  tbl=tbl, active=active)
         return x, new_st
 
     x, new_groups = jax.lax.scan(body, x, (params["groups"], cache["groups"], scan_adapters))
     x = blocks.rmsnorm(params["final_norm"], x)
     logits = lm_head(cfg, params, x, ctx.top)[:, 0]
-    return logits, {"groups": new_groups, "pos": pos + 1}
+    new_cache = {"groups": new_groups, "pos": pos + 1}
+    if tbl is not None:
+        new_cache["block_tbl"] = tbl
+    return logits, new_cache

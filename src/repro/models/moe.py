@@ -47,7 +47,10 @@ def _capacity(n_tokens: int, E: int, k: int, factor) -> int:
     receives at most one slot per token; cap = n_tokens never drops. This is
     the *exact* mode inference paths rely on (prefill/decode token counts
     differ, so any capacity tied to tokens-in-flight breaks the paper's
-    exact-output property). A float factor is the lossy training knob."""
+    exact-output property) — and what the serving engine's paged-vs-dense
+    byte-identity bar inherits for MoE clients: dispatch depends only on
+    token values, never on the KV layout behind the attention sublayers.
+    A float factor is the lossy training knob."""
     cap = n_tokens if factor is None else int(n_tokens * k / E * factor)
     return max(8, ((cap + 7) // 8) * 8)  # pad to 8 for clean tiling
 

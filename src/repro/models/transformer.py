@@ -11,7 +11,7 @@ sliced inside the scan (so adapters ride along with their layer).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -124,27 +124,31 @@ def _prefix_attend(attn_p, cfg, h, prefix_kv, lin: LinearFns):
 
 
 def _layer_decode(p, cfg: ModelConfig, x, cache, pos, lin: LinearFns, adapter_slice,
-                  *, ring: bool = False):
+                  *, ring: bool = False, tbl=None, active=None):
+    """One decoder layer's single-token step. The cache variant is derived
+    from the cache leaves themselves: ``k_s`` present -> int8-quantized
+    entries + scales; ``tbl`` given -> k/v are page pools addressed through
+    the block table (paged and quantized compose)."""
     h = blocks.rmsnorm(p["ln1"], x)
     if "k_s" in cache:   # int8-quantized cache (beyond-paper decode variant)
-        attn, ck, cks, cv, cvs = blocks.mha_decode_quant(
-            p["attn"], cfg, h, cache["k"], cache["k_s"], cache["v"],
-            cache["v_s"], pos, lin, ring=ring)
-        new_cache = {"k": ck, "k_s": cks, "v": cv, "v_s": cvs}
-        pk = _prefix_kv(adapter_slice)
-        if pk is not None:
-            attn = attn + _prefix_attend(p["attn"], cfg, h, pk, lin)
-        x = x + attn
-        h = blocks.rmsnorm(p["ln2"], x)
-        if "moe" in p:
-            y, _ = moe_lib.moe_forward(p["moe"], cfg, h, lin)
-            if "mlp" in p:
-                y = y + blocks.mlp_forward(p["mlp"], h, lin)
+        if tbl is not None:
+            attn, ck, cks, cv, cvs = blocks.mha_decode_quant_paged(
+                p["attn"], cfg, h, cache["k"], cache["k_s"], cache["v"],
+                cache["v_s"], tbl, pos, lin, active=active)
         else:
-            y = blocks.mlp_forward(p["mlp"], h, lin)
-        return x + y, new_cache
-    attn, ck, cv = blocks.mha_decode(p["attn"], cfg, h, cache["k"], cache["v"], pos, lin,
-                                     ring=ring)
+            attn, ck, cks, cv, cvs = blocks.mha_decode_quant(
+                p["attn"], cfg, h, cache["k"], cache["k_s"], cache["v"],
+                cache["v_s"], pos, lin, ring=ring)
+        new_cache = {"k": ck, "k_s": cks, "v": cv, "v_s": cvs}
+    else:
+        if tbl is not None:
+            attn, ck, cv = blocks.mha_decode_paged(
+                p["attn"], cfg, h, cache["k"], cache["v"], tbl, pos, lin,
+                active=active)
+        else:
+            attn, ck, cv = blocks.mha_decode(p["attn"], cfg, h, cache["k"],
+                                             cache["v"], pos, lin, ring=ring)
+        new_cache = {"k": ck, "v": cv}
     pk = _prefix_kv(adapter_slice)
     if pk is not None:
         attn = attn + _prefix_attend(p["attn"], cfg, h, pk, lin)
@@ -156,7 +160,7 @@ def _layer_decode(p, cfg: ModelConfig, x, cache, pos, lin: LinearFns, adapter_sl
             y = y + blocks.mlp_forward(p["mlp"], h, lin)
     else:
         y = blocks.mlp_forward(p["mlp"], h, lin)
-    return x + y, {"k": ck, "v": cv}
+    return x + y, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -228,42 +232,76 @@ def forward(cfg: ModelConfig, params, batch, ctx: LinCtx = DEFAULT_CTX,
     return logits, aux_total
 
 
+def default_block_table(batch_size: int, max_seq: int, page_block: int,
+                        pool_pages: int = 0):
+    """(n_blocks, pool size, initial table) for a paged cache. With an
+    auto-sized pool (pool_pages=0) the pool fully provisions every slot and
+    the table is the identity layout — a standalone paged cache then works
+    without any allocator (slot b owns pages [b*n_blocks, (b+1)*n_blocks)).
+    An explicit pool size means a caller-managed table: it starts zeroed and
+    the owner (the serving engine's page allocator) assigns pages."""
+    n_blocks = -(-max_seq // page_block)
+    if pool_pages:
+        return n_blocks, pool_pages, jnp.zeros((batch_size, n_blocks), jnp.int32)
+    tbl = jnp.arange(batch_size * n_blocks, dtype=jnp.int32).reshape(
+        batch_size, n_blocks)
+    return n_blocks, batch_size * n_blocks, tbl
+
+
 def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None,
-               *, window: int = 0, quant: bool = False):
+               *, window: int = 0, quant: bool = False, page_block: int = 0,
+               pool_pages: int = 0):
     """window > 0 -> ring-buffer cache of that depth (sliding-window archs can
     decode contexts far beyond the cache size; use decode_step(ring=True)).
     quant=True -> int8 KV entries + per-head f32 scales (halves the HBM
-    bytes of the decode cache read)."""
+    bytes of the decode cache read).
+    page_block > 0 -> paged cache: K/V live in a page pool shared by the
+    batch's slots ([pool_pages, page_block, K, hd] per layer) addressed
+    through a per-slot block table (cache key ``block_tbl``); composes with
+    quant. pool_pages=0 fully provisions (batch * ceil(max_seq/block))."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     n_pre = cfg.first_dense_layers
     n_scan = cfg.n_layers - n_pre
-    T = min(window, max_seq) if window else max_seq
     K, hd = cfg.n_kv_heads, cfg.hd
+    if page_block:
+        assert not window, "paged cache subsumes the ring-buffer variant"
+        n_blocks, P, tbl = default_block_table(batch_size, max_seq,
+                                               page_block, pool_pages)
+        kv_shape = (P, page_block)
+    else:
+        T = min(window, max_seq) if window else max_seq
+        kv_shape = (batch_size, T)
     if quant:
         def layer_kv(lead=()):
-            return {"k": jnp.zeros(lead + (batch_size, T, K, hd), jnp.int8),
-                    "k_s": jnp.zeros(lead + (batch_size, T, K, 1), jnp.float32),
-                    "v": jnp.zeros(lead + (batch_size, T, K, hd), jnp.int8),
-                    "v_s": jnp.zeros(lead + (batch_size, T, K, 1), jnp.float32)}
+            return {"k": jnp.zeros(lead + kv_shape + (K, hd), jnp.int8),
+                    "k_s": jnp.zeros(lead + kv_shape + (K, 1), jnp.float32),
+                    "v": jnp.zeros(lead + kv_shape + (K, hd), jnp.int8),
+                    "v_s": jnp.zeros(lead + kv_shape + (K, 1), jnp.float32)}
     else:
         def layer_kv(lead=()):
-            return {"k": jnp.zeros(lead + (batch_size, T, K, hd), dtype),
-                    "v": jnp.zeros(lead + (batch_size, T, K, hd), dtype)}
+            return {"k": jnp.zeros(lead + kv_shape + (K, hd), dtype),
+                    "v": jnp.zeros(lead + kv_shape + (K, hd), dtype)}
     cache = {
         "layers": layer_kv((n_scan,)),
         "pos": jnp.zeros((batch_size,), jnp.int32),
     }
+    if page_block:
+        cache["block_tbl"] = tbl
     if n_pre:
         cache["pre_layers"] = [layer_kv() for _ in range(n_pre)]
     return cache
 
 
 def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CTX,
-                adapter=None, *, ring: bool = False):
+                adapter=None, *, ring: bool = False, active=None):
     """One decode step. token [B] int32. Returns (logits [B,V], new_cache).
-    ring=True: the KV cache is a ring buffer (see init_cache(window=...))."""
+    ring=True: the KV cache is a ring buffer (see init_cache(window=...)).
+    For a paged cache (``block_tbl`` present) ``active`` [B] bool gates the
+    pool writes: inactive slots leave the shared page pool untouched (their
+    pos/logits are discarded by the caller's merge instead)."""
     B = token.shape[0]
     pos = cache["pos"]
+    tbl = cache.get("block_tbl")
     x = embed_tokens(cfg, params, token[:, None], ctx.top)
 
     scan_adapters, pre_adapters = _adapter_layers(adapter, cfg)
@@ -271,18 +309,21 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
     for i, p in enumerate(params.get("pre_layers", [])):
         ad = pre_adapters[i] if pre_adapters is not None else None
         x, c = _layer_decode(p, cfg, x, cache["pre_layers"][i], pos, ctx.for_layer(ad), ad,
-                             ring=ring)
+                             ring=ring, tbl=tbl, active=active)
         new_pre.append(c)
 
     def body(x, layer_in):
         p, c, ad = layer_in
-        x, c = _layer_decode(p, cfg, x, c, pos, ctx.for_layer(ad), ad, ring=ring)
+        x, c = _layer_decode(p, cfg, x, c, pos, ctx.for_layer(ad), ad, ring=ring,
+                             tbl=tbl, active=active)
         return x, c
 
     x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"], scan_adapters))
     x = blocks.rmsnorm(params["final_norm"], x)
     logits = lm_head(cfg, params, x, ctx.top)[:, 0]
     new_cache = {"layers": new_layers, "pos": pos + 1}
+    if tbl is not None:
+        new_cache["block_tbl"] = tbl
     if new_pre:
         new_cache["pre_layers"] = new_pre
     return logits, new_cache
@@ -298,9 +339,16 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
 
     ``lengths`` ([B] int32 or scalar, optional) supports right-padded
     prompts: logits are gathered at each row's last real position and the
-    returned ``pos`` starts decode there. Stale pad K/V beyond a row's
-    length is safe — decode writes slot ``pos`` before attending to it, so
-    a pad slot is overwritten in the step that would first read it.
+    returned ``pos`` starts decode there. On the dense path, stale pad K/V
+    beyond a row's length is safe — decode writes slot ``pos`` before
+    attending to it, so a pad slot is overwritten in the step that would
+    first read it. On the paged path (``block_tbl`` in the cache) pads are
+    never written at all: the K/V scatter through the block table is bounded
+    by the row's true length, so only pages covering real tokens are touched
+    (a row with length 0 writes nothing — how the engine's masked prefill
+    keeps non-admitted slots' pages untouched). Quantized caches (``k_s``
+    leaves) get per-head int8 quantization at capture time, matching what
+    decode would have written.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -308,8 +356,14 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     if cfg.arch == VLM and "img_embed" in batch:
         x = jnp.concatenate([batch["img_embed"].astype(x.dtype), x], axis=1)
     S_total = x.shape[1]
+    prefix = S_total - S                          # leading image tokens (VLM)
     positions = jnp.broadcast_to(jnp.arange(S_total)[None, :], (B, S_total))
     scan_adapters, pre_adapters = _adapter_layers(adapter, cfg)
+    tbl = cache.get("block_tbl")
+    if lengths is None:
+        wlen = None                               # write all S_total positions
+    else:
+        wlen = prefix + jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
 
     def capture_layer(p, x, lin, ad):
         """Run one layer, also returning its K/V for the cache."""
@@ -324,20 +378,31 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         x, _ = _layer_forward(p, cfg, x, positions, lin, ad)
         return x, k, v
 
+    def write_kv(c, k, v):
+        """Write captured K/V [B, S_total, K, hd] into one layer's cache
+        slice, handling every layout: dense / paged x full / int8."""
+        if "k_s" in c:
+            parts = zip(("k", "k_s", "v", "v_s"),
+                        blocks.quantize_head(k) + blocks.quantize_head(v))
+        else:
+            parts = (("k", k), ("v", v))
+        if tbl is not None:
+            return {n: blocks.paged_prefill_write(c[n], tbl, val, wlen)
+                    for n, val in parts}
+        return {n: jax.lax.dynamic_update_slice(c[n], val.astype(c[n].dtype),
+                                                (0, 0, 0, 0))
+                for n, val in parts}
+
     new_pre = []
     for i, p in enumerate(params.get("pre_layers", [])):
         ad = pre_adapters[i] if pre_adapters is not None else None
         x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
-        c = cache["pre_layers"][i]
-        new_pre.append({"k": jax.lax.dynamic_update_slice(c["k"], k, (0, 0, 0, 0)),
-                        "v": jax.lax.dynamic_update_slice(c["v"], v, (0, 0, 0, 0))})
+        new_pre.append(write_kv(cache["pre_layers"][i], k, v))
 
     def body(x, layer_in):
         p, c, ad = layer_in
         x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
-        c = {"k": jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0)),
-             "v": jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))}
-        return x, c
+        return x, write_kv(c, k, v)
 
     x, new_layers = jax.lax.scan(jax.checkpoint(body), x,
                                  (params["layers"], cache["layers"], scan_adapters))
@@ -346,13 +411,14 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]
         pos = jnp.full((B,), S_total, jnp.int32)
     else:
-        prefix = S_total - S                      # leading image tokens (VLM)
         lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
         idx = prefix + lengths - 1
         xg = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         logits = lm_head(cfg, params, xg, ctx.top)[:, 0]
         pos = prefix + lengths
     new_cache = {"layers": new_layers, "pos": pos}
+    if tbl is not None:
+        new_cache["block_tbl"] = tbl
     if new_pre:
         new_cache["pre_layers"] = new_pre
     return logits, new_cache

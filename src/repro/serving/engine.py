@@ -12,14 +12,31 @@ Architecture
   prompt row for its lifetime; slots free the moment their request finishes
   and are re-admitted from the queue on the next tick — not after the whole
   bank drains (mid-stream join/leave).
+* **KV layout.** ``ServeConfig.page_block = 0`` keeps dense fixed-depth
+  (``max_seq``) cache rows per slot. ``page_block > 0`` switches to the
+  PAGED layout: each client owns a pool of ``page_block``-token pages
+  (``pool_pages`` per client) and the engine runs a host-side page
+  allocator — prompt pages are assigned at admission, one page is assigned
+  as a slot's decode position crosses each block boundary, and a finished
+  request's pages return to the pool for the next occupant. The device
+  sees the allocator only through the ``block_tbl`` cache leaf (pushed
+  before prefill/decode whenever it changed). ``kv_quant=True`` stores
+  int8 KV entries + per-head f32 scales and composes with paging. Outputs
+  are byte-identical between the dense and paged layouts.
 * **Admission.** A per-engine FIFO queue. A request is admitted when (a) its
-  client has enough free slots, (b) its context fits the cache depth, and
-  (c) the optional ``PlacementRouter`` finds it a §3.4 placement (capacity
-  is released on finish). Admission triggers the *masked single-client
-  prefill* (``symbiosis.make_client_prefill``): one model execution for the
-  admitted client, scattered into the bank cache under a slot mask — the
-  seed engine instead ran a bank-wide prefill, paying C× base compute per
-  admitted request.
+  client has enough free slots, (b) its context fits the cache depth,
+  (c) under paging, the client pool has enough unreserved pages for the
+  full context (reserved up front so a mid-flight sequence can never
+  starve; physically assigned lazily as tokens are produced), and (d) the
+  optional ``PlacementRouter`` finds it a §3.4 placement (capacity is
+  released on finish). The router is charged for what the layout actually
+  pins: the dense engine charges a full ``max_seq``-deep slot row, the
+  paged engine only the context rounded up to whole pages — the admission
+  headroom that motivates paging. Admission triggers the *masked
+  single-client prefill* (``symbiosis.make_client_prefill``): one model
+  execution for the admitted client, scattered into the bank cache under a
+  slot mask — the seed engine instead ran a bank-wide prefill, paying C×
+  base compute per admitted request.
 * **Tick loop.** Every tick the scheduler policy (``core.scheduler.
   TickPolicy`` — lockstep / nolockstep / opportunistic) picks which *ready*
   clients join the batched decode (``symbiosis.make_masked_decode_step``);
@@ -123,8 +140,32 @@ class ServingEngine:
             raise ValueError("bank_prefill replaces the whole client cache "
                              "slice; it requires max_inflight_per_client=1")
         self.max_inflight = 1 if bank_prefill else max_inflight_per_client
+        cache_kw = symbiosis.serve_cache_kwargs(cfg, scfg)
+        self._paged = "page_block" in cache_kw
+        self._quant = bool(cache_kw.get("quant"))
+        if self._paged:
+            if bank_prefill:
+                raise ValueError("bank_prefill replaces whole cache slices; "
+                                 "it is a dense-layout-only ablation")
+            self._blk = scfg.page_block
+            self._n_blocks = -(-scfg.max_seq // self._blk)
+            self._pool_pages = scfg.pool_pages or max_batch_per_client * self._n_blocks
+            cache_kw["pool_pages"] = self._pool_pages
+            # host-side page allocator: per-client free list + reservation
+            # count (pages promised to in-flight requests but not yet
+            # assigned), per-slot assigned pages, per-slot next write pos,
+            # and the block-table mirror pushed to the device when dirty.
+            self._free_pages = [list(range(self._pool_pages))
+                                for _ in range(self.n_clients)]
+            self._reserved = [0] * self.n_clients
+            self._slot_pages: Dict[tuple, List[int]] = {}
+            self._wpos = np.zeros((self.n_clients, self.max_b), np.int64)
+            self._tbl = np.zeros((self.n_clients, self.max_b, self._n_blocks),
+                                 np.int32)
+            self._tbl_dirty = True
+            self._resv_of: Dict[int, int] = {}
         self.caches = symbiosis.init_client_caches(
-            cfg, self.n_clients, max_batch_per_client, scfg.max_seq)
+            cfg, self.n_clients, max_batch_per_client, scfg.max_seq, **cache_kw)
         self._prefill_one = _jit_client_prefill(cfg, acfg, scfg)
         self._prefill_bank = _jit_bank_prefill(cfg, acfg, scfg) if bank_prefill else None
         self._decode = _jit_masked_decode(cfg, acfg, scfg)
@@ -138,7 +179,8 @@ class ServingEngine:
         self._rng: Dict[int, np.random.Generator] = {}
         self._placement: Dict[int, object] = {}
         self.stats = {"ticks": 0, "decode_tokens": 0, "prefill_tokens": 0,
-                      "batched_clients": 0, "admitted": 0, "prefill_calls": 0}
+                      "batched_clients": 0, "admitted": 0, "prefill_calls": 0,
+                      "peak_inflight": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -173,6 +215,8 @@ class ServingEngine:
                         inflight.append(req)
                         admitted_any = True
 
+            self.stats["peak_inflight"] = max(self.stats["peak_inflight"],
+                                              len(inflight))
             # -- decode tick over the policy-chosen subset of ready clients
             ready = sorted({r.client_id for r in inflight if self._left[id(r)] > 0})
             serve = self.policy.serving_set(ready)
@@ -210,14 +254,42 @@ class ServingEngine:
         free = [s for s in range(self.max_b) if self._slot_owner[c][s] is None]
         if len(free) < B:
             return False
+        ctx_tokens = S + req.max_new_tokens
+        if self._paged:
+            # Reserve pages for the FULL context up front (deadlock freedom:
+            # a running sequence can always draw its next page) but assign
+            # them lazily — the block table only maps pages whose tokens
+            # exist. Admission backpressure = not enough unreserved pages.
+            pages_per_row = -(-ctx_tokens // self._blk)
+            prompt_pages = -(-S // self._blk)
+            if (len(self._free_pages[c]) - self._reserved[c]
+                    < pages_per_row * B):
+                return False
         placement = None
         if self.router is not None:
+            # charge what the layout pins: whole pages under paging, a full
+            # max_seq-deep dense slot row otherwise
+            alloc_tokens = (pages_per_row * self._blk if self._paged
+                            else self.scfg.max_seq)
             try:
-                placement = self.router.route(S + req.max_new_tokens, B,
-                                              latency_sensitive=req.latency_sensitive)
+                placement = self.router.route(ctx_tokens, B,
+                                              latency_sensitive=req.latency_sensitive,
+                                              alloc_tokens=alloc_tokens,
+                                              quant=self._quant)
             except RuntimeError:
                 return False                      # stays queued until capacity frees
         slots = free[:B]
+        if self._paged:
+            for s in slots:
+                pages = [self._free_pages[c].pop()
+                         for _ in range(prompt_pages)]
+                self._tbl[c, s, :] = 0
+                self._tbl[c, s, :prompt_pages] = pages
+                self._slot_pages[(c, s)] = pages
+                self._wpos[c, s] = S
+            self._resv_of[id(req)] = (pages_per_row - prompt_pages) * B
+            self._reserved[c] += self._resv_of[id(req)]
+            self._tbl_dirty = True
         first_logits = self._prefill_request(req, slots)
 
         sp = req.sampling or SamplingParams()
@@ -247,6 +319,13 @@ class ServingEngine:
             b *= 2
         return min(b, self.scfg.max_seq)
 
+    def _sync_tbl(self):
+        """Push the block-table mirror to the device cache tree if the host
+        allocator changed it since the last jitted call."""
+        if self._paged and self._tbl_dirty:
+            self.caches = dict(self.caches, block_tbl=jnp.asarray(self._tbl))
+            self._tbl_dirty = False
+
     def _prefill_request(self, req: Request, slots: List[int]) -> np.ndarray:
         """Masked single-client prefill into the assigned slots.
 
@@ -260,7 +339,11 @@ class ServingEngine:
         toks[slots, :S] = req.prompt
         mask = np.zeros((self.max_b,), bool)
         mask[slots] = True
-        lengths = np.full((self.max_b,), S, np.int32)
+        # zero length on non-admitted rows: their logits/pos are discarded by
+        # the slot-mask merge anyway, and under paging a zero length is what
+        # keeps the masked prefill's scatter off other slots' live pages
+        lengths = np.where(mask, S, 0).astype(np.int32)
+        self._sync_tbl()
         logits, self.caches = self._prefill_one(
             self.base, self.bank, self.caches, np.int32(c),
             jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
@@ -290,12 +373,31 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # decode + sampling
     # ------------------------------------------------------------------
+    def _grow_slot_pages(self, req: Request, c: int, s: int):
+        """Assign the next page when this tick's token write crosses a block
+        boundary (reservation guarantees the pool can serve it)."""
+        w = int(self._wpos[c, s])
+        bi = w // self._blk
+        pages = self._slot_pages[(c, s)]
+        if bi >= len(pages):
+            page = self._free_pages[c].pop()
+            pages.append(page)
+            self._tbl[c, s, bi] = page
+            self._reserved[c] -= 1
+            self._resv_of[id(req)] -= 1
+            self._tbl_dirty = True
+        self._wpos[c, s] = w + 1
+
     def _decode_tick(self, serve: set, inflight: List[Request]):
         active = np.zeros((self.n_clients, self.max_b), bool)
         stepping = [r for r in inflight
                     if r.client_id in serve and self._left[id(r)] > 0]
         for req in stepping:
             active[req.client_id, self._slots_of[id(req)]] = True
+            if self._paged:
+                for s in self._slots_of[id(req)]:
+                    self._grow_slot_pages(req, req.client_id, s)
+        self._sync_tbl()
         logits, self.caches = self._decode(
             self.base, self.bank, self.caches,
             jnp.asarray(self._last_tok), jnp.asarray(active))
@@ -331,8 +433,17 @@ class ServingEngine:
 
     def _retire(self, req: Request):
         req.finish_t = time.perf_counter()
+        c = req.client_id
         for s in self._slots_of.pop(id(req)):
-            self._slot_owner[req.client_id][s] = None
+            self._slot_owner[c][s] = None
+            if self._paged:
+                # pages (and any unused reservation) return to the pool for
+                # the next admit; the table rows are remapped at admission,
+                # so stale entries can never be read through
+                self._free_pages[c].extend(self._slot_pages.pop((c, s)))
+                self._wpos[c, s] = 0
+        if self._paged:
+            self._reserved[c] -= self._resv_of.pop(id(req), 0)
         del self._left[id(req)]
         self._rng.pop(id(req), None)
         placement = self._placement.pop(id(req), None)

@@ -10,7 +10,12 @@ stateless"). This module provides:
   ``serving.engine`` admits a request only if its full context
   (prompt + max_new_tokens) fits the slot depth, and the optional
   ``PlacementRouter`` charges ``cache_bytes`` against fleet HBM for the
-  request's lifetime (released when its slots free).
+  request's lifetime (released when its slots free). The model is
+  layout-aware: ``quant=True`` prices int8 entries + per-head f32 scales,
+  and ``page_block > 0`` prices the PAGED layout — bytes are charged per
+  allocated ``page_block``-token page (the request's context rounded up to
+  whole pages) instead of per dense ``max_seq``-deep slot row, which is
+  what lets many short requests share the HBM one dense row used to pin.
 * sliding-window ring-buffer cache ops (the beyond-paper long-context
   variant for dense archs).
 * host-offload accounting: on real TPU hardware the cache is placed with
@@ -21,7 +26,6 @@ stateless"). This module provides:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,10 +50,16 @@ def _dt_bytes(cfg: ModelConfig) -> int:
     return jnp.dtype(cfg.dtype).itemsize
 
 
-def make_cache_spec(cfg: ModelConfig) -> CacheSpec:
-    """Derive the decode-state spec from a model config."""
+def make_cache_spec(cfg: ModelConfig, *, quant: bool = False) -> CacheSpec:
+    """Derive the decode-state spec from a model config.
+
+    ``quant=True`` prices the int8 KV layout: 1-byte entries plus one f32
+    scale per head per token for K and V each (pure-KV families only; the
+    recurrent/hybrid fixed state is never quantized)."""
     it = _dt_bytes(cfg)
     kv_row = cfg.n_kv_heads * cfg.hd * it * 2          # K+V per layer per token
+    if quant:
+        kv_row = cfg.n_kv_heads * (cfg.hd * 1 + 4) * 2  # int8 entries + f32 scale
     if cfg.arch == RWKV:
         H = cfg.d_model // cfg.hd
         fixed = cfg.n_layers * (H * cfg.hd * cfg.hd * 4      # wkv state f32
@@ -167,5 +177,13 @@ def decode_token_cost(cfg: ModelConfig, seq_len: int, *, placement: str,
     raise ValueError(placement)
 
 
-def cache_bytes(cfg: ModelConfig, seq_len: int, batch: int = 1) -> int:
-    return make_cache_spec(cfg).total_bytes(seq_len, batch)
+def cache_bytes(cfg: ModelConfig, seq_len: int, batch: int = 1, *,
+                quant: bool = False, page_block: int = 0) -> int:
+    """HBM bytes of one client's decode state for ``seq_len`` context.
+
+    ``page_block > 0`` charges the paged layout: the context is rounded up
+    to whole pages (what the engine's allocator actually pins), instead of
+    the caller pre-rounding to a dense ``max_seq`` row."""
+    if page_block:
+        seq_len = -(-seq_len // page_block) * page_block
+    return make_cache_spec(cfg, quant=quant).total_bytes(seq_len, batch)

@@ -59,12 +59,21 @@ class PlacementRouter:
         self.host_free = host_free_bytes
 
     def route(self, context_len: int, batch: int = 1,
-              *, latency_sensitive: bool = True) -> Placement:
+              *, latency_sensitive: bool = True, alloc_tokens: int = 0,
+              quant: bool = False) -> Placement:
         """Pick the cheapest placement that fits; latency-sensitive requests
-        refuse the CPU unless nothing else fits."""
+        refuse the CPU unless nothing else fits.
+
+        ``context_len`` drives the latency estimates (tokens actually
+        attended); ``alloc_tokens`` drives the HBM charge (tokens the cache
+        layout actually pins — a dense engine passes its ``max_seq`` slot
+        depth, a paged engine its context already rounded up to whole
+        pages). 0 falls back to ``context_len``. ``quant`` prices the int8
+        KV layout."""
         # cache_bytes already multiplies by `batch` — `need` is the whole
         # session's footprint, and is what commit()/release() account with.
-        need = cache_bytes(self.cfg, context_len, batch)
+        need = cache_bytes(self.cfg, alloc_tokens or context_len, batch,
+                           quant=quant)
         candidates = []
 
         gpu = decode_token_cost(self.cfg, context_len, placement="gpu")

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import AdapterConfig, DENSE, RWKV
 from repro.core import adapters as ad_lib

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import AdapterConfig, TrainConfig, ServeConfig, SHAPES, ENCDEC, VLM
+from repro.config import AdapterConfig, TrainConfig, ServeConfig, SHAPES, VLM
 from repro.configs import ASSIGNED, get_config
 from repro.core import symbiosis
 from repro.data import frontend_stub

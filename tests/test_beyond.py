@@ -4,9 +4,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.config import ModelConfig, AdapterConfig, ServeConfig, DENSE
+from repro.config import ServeConfig, DENSE
 from repro.core import symbiosis
 from repro.models import blocks
 from repro.models.blocks import DEFAULT_LIN

@@ -19,7 +19,7 @@ FAMS = [DENSE, RWKV, HYBRID, VLM]
 
 
 @pytest.mark.parametrize("arch", FAMS)
-def test_prefill_then_decode_matches_forward(arch):
+def test_prefill_then_decode_matches_forward(arch, cache_kw=None):
     cfg = tiny(arch)
     model = get_model(cfg)
     key = jax.random.PRNGKey(0)
@@ -32,7 +32,7 @@ def test_prefill_then_decode_matches_forward(arch):
             jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
 
     max_seq = S + n_new + 1 + (cfg.n_frontend_tokens if arch == VLM else 0)
-    cache = model.init_cache(B, max_seq)
+    cache = model.init_cache(B, max_seq, **(cache_kw or {}))
     logits_p, cache = model.prefill(base, {"tokens": prompt, **extra}, cache)
 
     toks = [jnp.argmax(logits_p, -1).astype(jnp.int32)]
@@ -51,6 +51,14 @@ def test_prefill_then_decode_matches_forward(arch):
             np.asarray(dec_logits[i]), np.asarray(logits_f[:, pos]),
             rtol=2e-3, atol=2e-3,
             err_msg=f"{arch}: decode step {i} diverges from forward")
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("arch", [a for a in FAMS if a != RWKV])
+def test_prefill_then_decode_matches_forward_paged(arch):
+    """Same consistency bar through the paged KV layout (attention-bearing
+    families; RWKV has no KV cache to page)."""
+    test_prefill_then_decode_matches_forward(arch, cache_kw={"page_block": 4})
 
 
 def test_moe_decode_runs_finite():

@@ -106,6 +106,33 @@ class TestDecodeAttn:
         y = decode_attn(q, k, v, jnp.zeros((1,), jnp.int32))
         np.testing.assert_allclose(np.asarray(y), 2.0, rtol=1e-5)
 
+    def test_block_table_matches_dense(self):
+        """Paged layout: pools + block tables reproduce the dense result —
+        the reference contract behind serving's paged KV slots."""
+        B, T, K, G, hd, blk = 2, 256, 2, 2, 32, 64
+        n_blocks = T // blk
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        q = jax.random.normal(ks[0], (B, K, G, hd))
+        k = jax.random.normal(ks[1], (B, T, K, hd))
+        v = jax.random.normal(ks[2], (B, T, K, hd))
+        pos = jnp.array([100, 255], jnp.int32)
+        # scatter the dense rows into a shuffled pool
+        perm = jax.random.permutation(ks[3], B * n_blocks)
+        tbl = perm.reshape(B, n_blocks).astype(jnp.int32)
+        pool_k = jnp.zeros((B * n_blocks, blk, K, hd))
+        pool_v = jnp.zeros((B * n_blocks, blk, K, hd))
+        kb = k.reshape(B * n_blocks, blk, K, hd)
+        vb = v.reshape(B * n_blocks, blk, K, hd)
+        pool_k = pool_k.at[perm].set(kb)
+        pool_v = pool_v.at[perm].set(vb)
+        y_ref = decode_attn_ref(q, k, v, pos)
+        y_paged_ref = decode_attn_ref(q, pool_k, pool_v, pos, block_tbl=tbl)
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_paged_ref))
+        y_kernel = decode_attn(q, pool_k, pool_v, pos, block_tbl=tbl,
+                               block_kv=64)
+        np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
 
 class TestFlashAttn:
     @given(

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import moe as moe_lib
 from repro.models.blocks import DEFAULT_LIN

@@ -1,0 +1,144 @@
+"""Paged KV cache: pool/block-table layout exactness + cost model.
+
+The correctness bar (ISSUE 2): byte-identical outputs vs the dense cache
+layout — the paged gather reconstructs the same dense view the attention
+math sees, invalid lanes are exact softmax zeros either way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DENSE, MOE, HYBRID, VLM, ENCDEC, ServeConfig
+from repro.core import symbiosis
+from repro.models import blocks, get_model
+from repro.serving import kvcache
+from conftest import tiny
+
+ATTN_FAMS = [DENSE, MOE, HYBRID, VLM]
+
+
+def _roundtrip(arch, n_new=4, **cache_kw):
+    """prefill + n_new greedy decode steps; returns per-step logits list."""
+    cfg = tiny(arch)
+    model = get_model(cfg)
+    base = model.init_params(jax.random.PRNGKey(0))
+    B, S, max_seq = 2, 8, 32
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    extra = {}
+    if arch == VLM:
+        extra["img_embed"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+    if arch == ENCDEC:
+        extra["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model)) * 0.1
+    cache = model.init_cache(B, max_seq, **cache_kw)
+    logits, cache = model.prefill(base, {"tokens": prompt, **extra}, cache)
+    out = [np.asarray(logits)]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(n_new):
+        logits, cache = model.decode_step(base, cache, tok)
+        out.append(np.asarray(logits))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return out
+
+
+class TestPagedExactness:
+    def test_dense_family_paged_matches_dense(self):
+        """Fast tier-1 guard: the dense family's paged layout is bit-exact."""
+        for a, b in zip(_roundtrip(DENSE), _roundtrip(DENSE, page_block=8)):
+            np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.tier2
+    @pytest.mark.parametrize("arch", ATTN_FAMS + [ENCDEC])
+    @pytest.mark.parametrize("page_block", [4, 8, 16])
+    def test_paged_matches_dense_all_families(self, arch, page_block):
+        """Every attention-bearing family, several page sizes (including a
+        block size that does not divide max_seq)."""
+        for a, b in zip(_roundtrip(arch), _roundtrip(arch, page_block=page_block)):
+            np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.tier2
+    def test_paged_quant_compose_matches_dense_quant(self):
+        """Paged + int8 must equal dense + int8 bit-for-bit (same
+        quantization points, same attention math)."""
+        for a, b in zip(_roundtrip(DENSE, quant=True),
+                        _roundtrip(DENSE, quant=True, page_block=8)):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestPagedPrimitives:
+    def test_prefill_write_bounded_by_lengths(self):
+        """Positions >= a row's length never touch the pool — what protects
+        other slots' live pages during a masked admission prefill."""
+        pool = jnp.full((4, 4, 2, 8), -1.0)
+        tbl = jnp.array([[0, 1], [2, 3]], jnp.int32)
+        x = jnp.ones((2, 8, 2, 8))
+        out = blocks.paged_prefill_write(pool, tbl, x, jnp.array([3, 0]))
+        out = np.asarray(out)
+        assert (out[0, :3] == 1.0).all()          # row 0: 3 tokens written
+        assert (out[0, 3:] == -1.0).all()
+        assert (out[1:] == -1.0).all()            # page 1 tail + row 1 pages
+
+    def test_token_write_inactive_dropped(self):
+        pool = jnp.zeros((2, 4, 1, 8))
+        tbl = jnp.array([[0], [1]], jnp.int32)
+        pos = jnp.array([1, 2], jnp.int32)
+        x = jnp.ones((2, 1, 8))
+        out = blocks.paged_token_write(pool, tbl, pos, x,
+                                       active=jnp.array([True, False]))
+        out = np.asarray(out)
+        assert (out[0, 1] == 1.0).all()           # active row wrote its slot
+        assert (out[1] == 0.0).all()              # inactive row dropped
+
+    def test_paged_view_roundtrip(self):
+        pool = jnp.arange(4 * 2 * 1 * 2, dtype=jnp.float32).reshape(4, 2, 1, 2)
+        tbl = jnp.array([[3, 0], [1, 2]], jnp.int32)
+        view = np.asarray(blocks.paged_view(pool, tbl))
+        np.testing.assert_array_equal(view[0, :2], np.asarray(pool[3]))
+        np.testing.assert_array_equal(view[0, 2:], np.asarray(pool[0]))
+        np.testing.assert_array_equal(view[1, :2], np.asarray(pool[1]))
+
+    def test_slot_axes_mark_pool_shared(self):
+        """Structural slot-axis derivation: pools and block tables have no
+        slot axis (None); per-slot leaves keep their axis."""
+        cfg = tiny(DENSE)
+        axes = symbiosis.cache_slot_axes(cfg, 32, page_block=8)
+        assert axes["block_tbl"] is None
+        assert axes["layers"]["k"] is None        # shared page pool
+        assert axes["pos"] == 0
+        dense_axes = symbiosis.cache_slot_axes(cfg, 32)
+        assert dense_axes["layers"]["k"] == 1     # dense: slot axis under L
+
+
+class TestPagedCostModel:
+    def test_cache_bytes_rounds_to_pages(self):
+        cfg = tiny(DENSE, dtype="bfloat16")
+        per_tok = kvcache.make_cache_spec(cfg).bytes_per_token
+        assert kvcache.cache_bytes(cfg, 17, page_block=16) == 32 * per_tok
+        assert kvcache.cache_bytes(cfg, 16, page_block=16) == 16 * per_tok
+        assert kvcache.cache_bytes(cfg, 17) == 17 * per_tok
+
+    def test_quant_bytes_about_half(self):
+        cfg = tiny(DENSE, dtype="bfloat16")
+        full = kvcache.cache_bytes(cfg, 1024)
+        quant = kvcache.cache_bytes(cfg, 1024, quant=True)
+        assert 0.4 * full < quant < 0.65 * full
+
+    def test_paged_quant_beats_dense_row(self):
+        """The admission story: a short request charged per int8 page is a
+        tiny fraction of a dense max_seq-deep bf16 slot row."""
+        cfg = tiny(DENSE, dtype="bfloat16")
+        dense_row = kvcache.cache_bytes(cfg, 2048)
+        paged = kvcache.cache_bytes(cfg, 24, quant=True, page_block=16)
+        assert paged * 10 < dense_row
+
+    def test_serve_cache_kwargs_family_gating(self):
+        scfg = ServeConfig(page_block=16, kv_quant=True)
+        kw = symbiosis.serve_cache_kwargs(tiny(DENSE), scfg)
+        assert kw == {"page_block": 16, "quant": True}
+        kw = symbiosis.serve_cache_kwargs(tiny(HYBRID), scfg)
+        assert kw == {"page_block": 16}           # no pure-KV cache to quantize
+        from repro.config import RWKV
+        kw = symbiosis.serve_cache_kwargs(tiny(RWKV), scfg)
+        assert kw == {}                           # O(1) state: nothing to page

@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import AdapterConfig, DENSE
-from repro.core import privacy, symbiosis
+from repro.config import DENSE
+from repro.core import privacy
 from repro.core.virtlayer import make_client_ctx, attach_privacy
 from repro.core.frozen_linear import frozen_dense
 from repro.models import get_model

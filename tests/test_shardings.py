@@ -2,14 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.config import SHAPES
 from repro.configs import ASSIGNED, get_config
 from repro.core import symbiosis
 from repro.launch import shardings, specs
-from repro.launch.mesh import make_host_mesh, batch_axes, batch_size, model_size
+from repro.launch.mesh import make_host_mesh, batch_size, model_size
 from repro.launch.specs import DEFAULT_ADAPTER, is_applicable
 
 

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import AdapterConfig, TrainConfig, ServeConfig, DENSE, MOE
+from repro.config import AdapterConfig, TrainConfig, ServeConfig, DENSE
 from repro.core import symbiosis
 from conftest import tiny
 
