@@ -144,6 +144,94 @@ def run_paged_admission(quick: bool = False):
     return emit("paged_admission_fixed_hbm", rows)
 
 
+def run_compaction(quick: bool = False):
+    """ISSUE 3 acceptance: compute-proportional decode. The same bank serves
+    workloads at several slot occupancies through (a) the masked bank-wide
+    decode (every tick runs all C*max_b rows, inactive outputs discarded)
+    and (b) the compacted decode (active rows gathered across clients into
+    a bucketed dense batch; attention through the table-aware paged kernel,
+    per-row LoRA through SGMV). Outputs are asserted byte-identical; at
+    sparse occupancy the compacted path must deliver >= 2x decode tok/s,
+    and at full occupancy it must not regress."""
+    cfg = get_config("symbiosis-llama2-13b").reduced(
+        n_layers=2, d_model=256 if quick else 512)
+    C, max_b = (8, 2) if quick else (16, 4)
+    max_new = 16 if quick else 32
+    scfg = ServeConfig(n_clients=C, max_seq=64, page_block=16)
+    base, bank, _ = symbiosis.init_system(cfg, ACFG, C, jax.random.PRNGKey(0))
+    total = C * max_b
+
+    def workload(busy_rows):
+        rng = np.random.default_rng(0)
+        reqs, rows_left, c = [], busy_rows, 0
+        while rows_left > 0:
+            rows = min(max_b, rows_left)
+            reqs.append(Request(client_id=c,
+                                prompt=rng.integers(0, cfg.vocab,
+                                                    (rows, 8)).astype(np.int32),
+                                max_new_tokens=max_new))
+            rows_left -= rows
+            c += 1
+        return reqs
+
+    def measure(busy_rows, compact):
+        def once():
+            eng = ServingEngine(cfg, ACFG, scfg, base, bank,
+                                max_batch_per_client=max_b,
+                                compact_decode=compact)
+            for r in workload(busy_rows):
+                eng.submit(r)
+            t0 = time.perf_counter()
+            done = eng.run()
+            dt = time.perf_counter() - t0
+            return eng.stats["decode_tokens"] / dt, eng.stats, done
+        once()                                 # warm the compile caches
+        return max((once() for _ in range(2 if quick else 3)),
+                   key=lambda r: r[0])
+
+    rows = []
+    sparse_ratios = {}
+    # occupancies: 1/16, 1/8, 1/4 of the bank's rows, and the full bank
+    for busy in sorted({max(1, total // 16), total // 8, total // 4, total}):
+        m_tok, m_stats, m_done = measure(busy, compact=False)
+        c_tok, c_stats, c_done = measure(busy, compact=True)
+        key = lambda r: (r.client_id, r.prompt.tobytes())
+        assert ({key(r): r.generated.tobytes() for r in m_done}
+                == {key(r): r.generated.tobytes() for r in c_done}), \
+            f"compacted decode diverged from masked at occupancy {busy}/{total}"
+        occ = busy / total
+        ratio = c_tok / max(m_tok, 1e-9)
+        if occ <= 0.25:
+            sparse_ratios[occ] = ratio
+        rows.append({"occupancy": f"{busy}/{total}",
+                     "masked_tok_s": round(m_tok),
+                     "compact_tok_s": round(c_tok),
+                     "speedup": round(ratio, 2),
+                     "compact_rows": c_stats["compact_rows"],
+                     "compact_padded": c_stats["compact_padded"],
+                     "admitted": c_stats["admitted"]})
+    best_sparse = max(sparse_ratios.values())
+    full_ratio = rows[-1]["speedup"]
+    # acceptance: >=2x at <=25% occupancy at full size, no regression at
+    # full occupancy. The quick/smoke shapes are too small for row count to
+    # dominate CPU matmul efficiency, so the smoke floor is a sanity bound
+    # (compaction must not LOSE at sparse occupancy); the 2x bar runs in
+    # the non-quick bench and the CI tier2 job.
+    floor = 1.0 if quick else 2.0
+    full_floor = 0.7 if quick else 0.8
+    rows.append({"occupancy": "check", "masked_tok_s": "-",
+                 "compact_tok_s": "-",
+                 "speedup": f"sparse>={floor}:{best_sparse:.2f}",
+                 "compact_rows": f"full>={full_floor}:{full_ratio}",
+                 "compact_padded": "-", "admitted": "-"})
+    assert best_sparse >= floor, (
+        f"compacted decode speedup {best_sparse:.2f}x at sparse occupancy "
+        f"(need >= {floor}x)")
+    assert full_ratio >= full_floor, (
+        f"compacted decode regressed at full occupancy: {full_ratio:.2f}x")
+    return emit("compact_decode_sparse_occupancy", rows)
+
+
 def run(quick: bool = False):
     # paper uses Llama3-1B for this comparison; reduced variant here
     cfg = get_config("symbiosis-llama2-13b").reduced(
@@ -190,14 +278,16 @@ def run(quick: bool = False):
                  "baseline_iter_s": "-", "symbiosis_tok_s": "-",
                  "baseline_tok_s": "-"})
     out = emit("fig11_12_multiclient", rows)
-    return out + run_serving(quick) + run_paged_admission(quick)
+    return (out + run_serving(quick) + run_paged_admission(quick)
+            + run_compaction(quick))
 
 
 def run_smoke():
     """CI bench-smoke entry: a few real engine ticks on tiny configs —
-    the serving comparison (incl. the paged engine) and the paged-admission
-    section."""
-    return run_serving(quick=True) + run_paged_admission(quick=True)
+    the serving comparison (incl. the paged engine), the paged-admission
+    section, and the compacted-decode occupancy sweep."""
+    return (run_serving(quick=True) + run_paged_admission(quick=True)
+            + run_compaction(quick=True))
 
 
 if __name__ == "__main__":

@@ -1,17 +1,26 @@
 """Benchmark driver: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--smoke]
+                                          [--json PATH]
 
 Emits CSV lines (bench,key=value,...) and writes experiments/bench/*.json.
 
 ``--smoke`` is the CI guard against benchmark rot: it imports EVERY bench
 module (so stale imports/APIs fail loudly) and runs a few real ticks of
-bench_multiclient on tiny configs — the serving comparison plus the
-paged-admission-at-fixed-HBM section.
+bench_multiclient on tiny configs — the serving comparison, the
+paged-admission-at-fixed-HBM section, and the compacted-decode occupancy
+sweep.
+
+``--json PATH`` persists the serving-side sections (continuous-batching
+tok/s, paged admission counts, compacted-decode speedups) as one combined
+JSON document, so the bench trajectory is machine-readable across PRs —
+the CI bench-smoke job writes ``BENCH_serving.json`` from the same run.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 import traceback
 
@@ -28,6 +37,41 @@ BENCHES = [
     ("ablations", "benchmarks.bench_ablations"),
 ]
 
+# sections whose rows carry the serving trajectory (tok/s, admission and
+# compaction counts) persisted by --json
+SERVING_SECTIONS = (
+    "sec37_serving_continuous_batching",
+    "paged_admission_fixed_hbm",
+    "compact_decode_sparse_occupancy",
+)
+
+
+def _write_serving_json(path: str, rows: list):
+    """Split a flat row list back into its sections by schema and persist."""
+    import jax
+
+    schema_of = {
+        "engine": "sec37_serving_continuous_batching",
+        "layout": "paged_admission_fixed_hbm",
+        "occupancy": "compact_decode_sparse_occupancy",
+    }
+    sections = {name: [] for name in SERVING_SECTIONS}
+    for row in rows:
+        for key, name in schema_of.items():
+            if key in row:
+                sections[name].append(row)
+                break
+    doc = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "unix_time": int(time.time()),
+        "sections": sections,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
+    print(f"serving bench trajectory written to {path}")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -36,7 +80,11 @@ def main():
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: import every bench, run bench_multiclient "
-                         "serving + paged-admission sections on tiny configs")
+                         "serving + paged-admission + compaction sections on "
+                         "tiny configs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="persist the serving/paged/compaction sections' rows "
+                         "(tok/s, admission counts) as one JSON document")
     args = ap.parse_args()
 
     import importlib
@@ -46,11 +94,14 @@ def main():
         print(f"imported {len(BENCHES)} bench modules OK")
         mod = importlib.import_module("benchmarks.bench_multiclient")
         t0 = time.time()
-        mod.run_smoke()
+        rows = mod.run_smoke()
         print(f"bench smoke complete in {time.time() - t0:.1f}s")
+        if args.json:
+            _write_serving_json(args.json, rows)
         return
 
     failures = []
+    serving_rows = []
     for name, modname in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -58,11 +109,15 @@ def main():
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
-            mod.run(quick=args.quick)
+            rows = mod.run(quick=args.quick)
+            if name == "fig11_12_multiclient" and rows:
+                serving_rows = rows
             print(f"=== {name}: done in {time.time() - t0:.1f}s ===")
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    if args.json and serving_rows:
+        _write_serving_json(args.json, serving_rows)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
     print("\nall benchmarks complete")

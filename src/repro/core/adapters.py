@@ -168,3 +168,83 @@ def pre_scale(x, path, ad_slice, acfg: AdapterConfig, cfg: ModelConfig):
     if leaf is not None and path == "down":
         return x * leaf["scale"].astype(x.dtype)
     return x
+
+
+# ---------------------------------------------------------------------------
+# Compacted-batch application (the serving engine's active-slot decode)
+# ---------------------------------------------------------------------------
+#
+# In the compacted decode tick every row of the batch may belong to a
+# different client, so the per-layer adapter slice arrives CLIENT-STACKED
+# (leaves [C, ...]) together with a row -> client map. LoRA deltas go
+# through the SGMV kernel (Punica/S-LoRA's op; ``block_t=1`` = one adapter
+# per row) — byte-identical to the per-client vmapped ``apply_adapter``
+# path, which is the compact-vs-masked exactness contract. IA3 / prefix
+# leaves are gathered per row (elementwise, trivially identical).
+
+def apply_adapter_rows(y, x, path, ad_slice, acfg: AdapterConfig,
+                       cfg: ModelConfig, rows_client):
+    """Post-hook for a compacted [n_rows, 1, d] batch. ``ad_slice`` leaves
+    are client-stacked [C, ...]; ``rows_client`` [n_rows] int32."""
+    if ad_slice is None:
+        return y
+    leaf = ad_slice.get(path) if isinstance(ad_slice, dict) else None
+    if leaf is None:
+        return y
+    if acfg.method == "lora":
+        from repro.kernels.sgmv import sgmv   # deferred: kernels import nothing back
+        n = x.shape[0]
+        delta = sgmv(x.reshape(n, -1), leaf["A"].astype(x.dtype),
+                     leaf["B"].astype(x.dtype), rows_client, block_t=1,
+                     scale=acfg.alpha / acfg.rank)
+        return y + delta.reshape(y.shape)
+    if acfg.method == "ia3":
+        if path == "down":
+            return y                          # pre-scaled (see below)
+        s = leaf["scale"][rows_client]        # [n, dout]
+        return y * s.reshape((y.shape[0],) + (1,) * (y.ndim - 2) + (-1,)).astype(y.dtype)
+    return y
+
+
+def pre_scale_rows(x, path, ad_slice, acfg: AdapterConfig, cfg: ModelConfig,
+                   rows_client):
+    """Compacted-batch pre-hook: IA3 'down' input scaling, per row."""
+    if ad_slice is None or acfg.method != "ia3":
+        return x
+    leaf = ad_slice.get(path) if isinstance(ad_slice, dict) else None
+    if leaf is not None and path == "down":
+        s = leaf["scale"][rows_client]
+        return x * s.reshape((x.shape[0],) + (1,) * (x.ndim - 2) + (-1,)).astype(x.dtype)
+    return x
+
+
+def compact_adapter_bank(bank, rows_client):
+    """Re-lay a client-stacked adapter bank for a compacted row batch.
+
+    Stacked layer containers (leaves [C, L, ...]) become layer-major
+    [L, C, ...] so the model's layer scan slices a [C, ...] client-stacked
+    slice per layer (applied per row by ``apply_adapter_rows``). Prefix
+    leaves are instead gathered per ROW ([n, L?, n_prefix, K, hd]) because
+    prefix-tuning flows through model code (``_prefix_attend``), not the
+    linear hook. List containers (pre_layers) hold per-layer dicts with
+    [C, ...] leaves and pass through (prefix gathered likewise)."""
+    if bank is None:
+        return None
+
+    def fix_stacked(container):
+        out = {}
+        for path, leaf in container.items():
+            if path in ("prefix_k", "prefix_v"):
+                out[path] = jnp.swapaxes(leaf[rows_client], 0, 1)
+            else:
+                out[path] = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), leaf)
+        return out
+
+    def fix_flat(container):
+        return {path: (leaf[rows_client] if path in ("prefix_k", "prefix_v")
+                       else leaf)
+                for path, leaf in container.items()}
+
+    return {name: ([fix_flat(d) for d in sub] if isinstance(sub, list)
+                   else fix_stacked(sub))
+            for name, sub in bank.items()}

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.config import (AdapterConfig, ModelConfig, TrainConfig, ServeConfig,
                           DENSE, MOE, VLM, HYBRID, ENCDEC)
 from repro.core import adapters as adapters_lib
-from repro.core.virtlayer import make_client_ctx
+from repro.core.virtlayer import make_client_ctx, make_compact_ctx
 from repro.models import get_model
 from repro.models.losses import lm_loss
 from repro.optim import adamw_init, adamw_update
@@ -267,12 +267,21 @@ def make_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     """
     model = get_model(cfg)
     ctx = make_client_ctx(cfg, acfg, **ctx_kw)
-    slot_axes = cache_slot_axes(cfg, scfg.max_seq,
-                                **serve_cache_kwargs(cfg, scfg, pool_pages=1))
+    cache_kw = serve_cache_kwargs(cfg, scfg, pool_pages=1)
+    slot_axes = cache_slot_axes(cfg, scfg.max_seq, **cache_kw)
+    page_axes = (cache_page_axes(cfg, scfg.max_seq, **cache_kw)
+                 if "page_block" in cache_kw
+                 else jax.tree.map(lambda ax: None, slot_axes))
 
     def prefill_one(base, bank, caches, c, tokens, lengths, slot_mask):
         adapter = jax.tree.map(lambda x: x[c], bank) if bank is not None else None
-        old = jax.tree.map(lambda x: x[c], caches)
+
+        def slice_c(x, ax, pax):
+            # global page pools have no client axis; everything else
+            # (per-slot leaves, the client's block-table rows) is sliced
+            return x if pax is not None else x[c]
+
+        old = jax.tree.map(slice_c, caches, slot_axes, page_axes)
 
         def zero_slots(x, ax):
             if ax is None:    # shared page pool / block table: no slot rows
@@ -290,8 +299,14 @@ def make_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
             return jnp.where(_slot_mask(slot_mask, ax, o.ndim), n, o)
 
         merged = jax.tree.map(merge, old, new, slot_axes)
-        new_caches = jax.tree.map(lambda full, one: full.at[c].set(one),
-                                  caches, merged)
+
+        def write_back(full, one, ax, pax):
+            if pax is not None:
+                return one                     # global pool: already merged
+            return full.at[c].set(one)
+
+        new_caches = jax.tree.map(write_back, caches, merged, slot_axes,
+                                  page_axes)
         return logits, new_caches
 
     return prefill_one
@@ -310,24 +325,38 @@ def make_masked_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     one dispatch per tick instead of a host-side tree traversal.
 
     Paged caches (scfg.page_block > 0) can't express the merge as a
-    per-slot select — the page pool is shared across a client's slots — so
-    the active rows are threaded INTO the model step instead: inactive
-    slots' pool writes are dropped at the scatter (blocks.paged_token_write)
-    and the merge takes pool leaves wholesale."""
+    per-slot select — the page pool is GLOBAL (one flat pool, clients own
+    page ranges; see init_client_caches) — so the active rows are threaded
+    INTO the model step instead: inactive slots' pool writes are dropped at
+    the scatter (blocks.paged_token_write) and the merge takes pool leaves
+    wholesale. The pool rides the client vmap UNBATCHED: the write op and
+    the table-aware attention kernel both carry custom_vmap rules that
+    flatten the client axis into rows against the shared pool, so this
+    bank-wide step lowers to exactly the computation the compacted step
+    (make_compact_decode_step) runs on the active rows — byte-identity
+    between the two is by construction, not by numerical luck."""
     model = get_model(cfg)
     ctx = make_client_ctx(cfg, acfg, **ctx_kw)
     kw = {"ring": True} if ring else {}
     cache_kw = serve_cache_kwargs(cfg, scfg, pool_pages=1)
     paged = "page_block" in cache_kw
     slot_axes = cache_slot_axes(cfg, scfg.max_seq, **cache_kw)
+    if paged:
+        page_axes = cache_page_axes(cfg, scfg.max_seq, **cache_kw)
+        # global pools are shared across the client vmap (in/out axis None)
+        cache_axes = jax.tree.map(
+            lambda x, pax: None if pax is not None else 0,
+            jax.eval_shape(lambda: get_model(cfg).init_cache(
+                1, scfg.max_seq, **cache_kw)), page_axes)
 
     def decode(base, bank, caches, tokens, active):
         if paged:
             def one(adapter, cache, tok, act):
                 return model.decode_step(base, cache, tok, ctx, adapter,
                                          active=act, **kw)
-            logits, new_caches = jax.vmap(one, in_axes=(0, 0, 0, 0))(
-                bank, caches, tokens, active)
+            logits, new_caches = jax.vmap(
+                one, in_axes=(0, cache_axes, 0, 0),
+                out_axes=(0, cache_axes))(bank, caches, tokens, active)
         else:
             def one(adapter, cache, tok):
                 return model.decode_step(base, cache, tok, ctx, adapter, **kw)
@@ -346,9 +375,169 @@ def make_masked_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     return decode
 
 
+def cache_page_axes(cfg: ModelConfig, max_seq: int, **cache_kw):
+    """Per-leaf *page-pool axis* map for one client's PAGED decode cache.
+
+    The structural twin of ``cache_slot_axes``: build the cache at
+    ``pool_pages`` 1 and 2 and record, per leaf, the axis whose extent
+    changed — that is the axis page pools stack their pages on (layer-
+    stacked pools carry it behind the leading layer/group axis; pre-layer
+    pools carry it at axis 0). Per-slot leaves (positions, recurrent state,
+    cross-attention caches) and the block table don't scale with the pool
+    and map to ``None``. Shapes only — nothing is allocated."""
+    assert cache_kw.get("page_block"), "page axes exist only for paged caches"
+    model = get_model(cfg)
+    a = jax.eval_shape(lambda: model.init_cache(
+        2, max_seq, **dict(cache_kw, pool_pages=1)))
+    b = jax.eval_shape(lambda: model.init_cache(
+        2, max_seq, **dict(cache_kw, pool_pages=2)))
+
+    def axis(x, y):
+        for i, (m, n) in enumerate(zip(x.shape, y.shape)):
+            if m != n:
+                return i
+        return None
+
+    return jax.tree.map(axis, a, b)
+
+
+def _fold_pool_leaf(x, pax):
+    """Fold a bank leaf's leading client axis into its page axis:
+    [C, .., P@pax+1, ..] -> [.., C*P@pax, ..] (the global-pool layout
+    convention — client c owns page range [c*P, (c+1)*P)). ``pax`` is the
+    page axis of the PER-CLIENT leaf; None leaves pass through."""
+    if pax is None:
+        return x
+    rest = list(x.shape)
+    P = rest.pop(pax + 1)
+    C = rest.pop(0)
+    y = jnp.moveaxis(x, pax + 1, 1).reshape((C * P,) + tuple(rest))
+    return jnp.moveaxis(y, 0, pax)
+
+
+def stack_client_caches(cfg: ModelConfig, max_seq: int, per_client, **cache_kw):
+    """Stack per-client model caches (e.g. after standalone per-client
+    prefills on identity tables) into the BANK layout: per-slot leaves gain
+    a leading client axis; paged pools fold into the one global flat pool
+    (client c's pages land in [c*P, (c+1)*P)) and block tables are offset
+    to global page ids. The inverse convention of ``init_client_caches``."""
+    caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+    if not cache_kw.get("page_block"):
+        return caches
+    page_axes = cache_page_axes(cfg, max_seq, **cache_kw)
+    C = len(per_client)
+    P = max(jax.tree.leaves(jax.tree.map(
+        lambda x, pax: None if pax is None else x.shape[pax + 1],
+        caches, page_axes)))
+    caches = jax.tree.map(_fold_pool_leaf, caches, page_axes)
+    caches["block_tbl"] = (caches["block_tbl"]
+                           + (jnp.arange(C, dtype=jnp.int32) * P)[:, None, None])
+    return caches
+
+
+def make_compact_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
+                             scfg: ServeConfig, **ctx_kw):
+    """Compute-proportional decode tick: run ONLY the actively decoding
+    sequence slots, gathered across clients into one dense batch.
+
+    fn(base, bank, caches, tokens, clients, slots, row_mask)
+      -> (logits [n_rows, V], new bank caches)
+
+    * ``tokens``/``clients``/``slots``/``row_mask`` — [n_rows] arrays; row i
+      is sequence slot ``slots[i]`` of client ``clients[i]`` feeding
+      ``tokens[i]``. The row count is a call-site property (jax retraces
+      per shape; the engine buckets the active count to a few static sizes
+      to bound recompilation). ``row_mask`` False marks padding rows: their
+      logits are garbage and every write they produce is dropped.
+    * Requires the PAGED KV layout (``scfg.page_block > 0``): per-slot
+      leaves (positions, recurrent state, cross-attention caches) are
+      gathered per row and scattered back under the row mask, while the
+      GLOBAL page pools (see ``init_client_caches``) pass through untouched
+      — the gathered block-table rows already carry global page ids, so
+      attention reads/writes land in the original pool pages through the
+      table-aware kernel. The masked bank-wide decode lowers to exactly
+      this flattened computation (the kernel's and the token write's
+      custom_vmap rules), which makes the two paths byte-identical: the
+      policy/occupancy only decides which rows exist, never their math.
+    * Per-row client adapters are applied by ``make_compact_ctx`` — LoRA
+      through the SGMV kernel (one adapter per row), IA3/prefix by per-row
+      gathers. FLOPs and HBM traffic of base matmuls, adapter deltas and
+      attention all scale with ``n_rows``, not with the bank size.
+    """
+    model = get_model(cfg)
+    cache_kw = serve_cache_kwargs(cfg, scfg, pool_pages=1)
+    if "page_block" not in cache_kw:
+        raise ValueError(
+            "compact decode requires the paged KV layout (ServeConfig."
+            "page_block > 0 on an attention-bearing family); the dense "
+            "layout keeps the masked bank-wide step")
+    slot_axes = cache_slot_axes(cfg, scfg.max_seq, **cache_kw)
+    page_axes = cache_page_axes(cfg, scfg.max_seq, **cache_kw)
+    # block_tbl is engine-managed: excluded from the generic leaf handling
+    slot_axes.pop("block_tbl", None)
+    page_axes.pop("block_tbl", None)
+
+    def compact(base, bank, caches, tokens, clients, slots, row_mask):
+        C, B = caches["pos"].shape
+        clients = clients.astype(jnp.int32)
+        slots = slots.astype(jnp.int32)
+        rows = clients * B + slots
+        inner = {k: v for k, v in caches.items() if k != "block_tbl"}
+
+        def _rest(x, lifted):
+            shape = list(x.shape)
+            del shape[lifted], shape[0]
+            return tuple(shape)
+
+        def gather(x, ax, pax):
+            if pax is not None:      # global pool: flat already, zero copies
+                return x
+            if ax is not None:       # per-slot leaf: [C, .., B@ax, ..] -> rows
+                y = jnp.moveaxis(x, ax + 1, 1).reshape((C * B,) + _rest(x, ax + 1))
+                return jnp.moveaxis(y[rows], 0, ax)
+            raise ValueError("paged cache leaf with neither slot nor page axis")
+
+        compact_cache = jax.tree.map(gather, inner, slot_axes, page_axes)
+        # table rows already hold global page ids (allocator page ranges)
+        compact_cache["block_tbl"] = caches["block_tbl"].reshape(C * B, -1)[rows]
+
+        ctx = make_client_ctx(cfg, None, **ctx_kw) if bank is None else \
+            make_compact_ctx(cfg, acfg, clients, **ctx_kw)
+        adapter = adapters_lib.compact_adapter_bank(bank, clients)
+        logits, new_compact = model.decode_step(base, compact_cache, tokens,
+                                                ctx, adapter, active=row_mask)
+        new_compact = {k: v for k, v in new_compact.items() if k != "block_tbl"}
+
+        drop_rows = jnp.where(row_mask, rows, C * B)     # C*B is out of bounds
+
+        def scatter(old, new, ax, pax):
+            if pax is not None:
+                # pool writes were row-masked inside paged_token_write
+                return new
+            rest = _rest(old, ax + 1)
+            flat = jnp.moveaxis(old, ax + 1, 1).reshape((C * B,) + rest)
+            vals = jnp.moveaxis(new, ax, 0)
+            flat = flat.at[drop_rows].set(vals.astype(flat.dtype), mode="drop")
+            return jnp.moveaxis(flat.reshape((C, B) + rest), 1, ax + 1)
+
+        new_inner = jax.tree.map(scatter, inner, new_compact, slot_axes,
+                                 page_axes)
+        return logits, dict(new_inner, block_tbl=caches["block_tbl"])
+
+    return compact
+
+
 def init_client_caches(cfg: ModelConfig, n_clients: int, batch: int, max_seq: int,
                        dtype=None, *, window: int = 0, quant: bool = False,
                        page_block: int = 0, pool_pages: int = 0):
+    """Bank caches: per-slot leaves carry a leading client axis; PAGED pools
+    are stored GLOBALLY FLAT — the client axis is folded into the page axis
+    once at construction ([C, .., P, ..] -> [.., C*P, ..]) and per-client
+    ownership becomes an allocator convention (client c owns page range
+    [c*P, (c+1)*P)), not a tensor axis. That is what keeps the decode tick
+    compute-proportional: neither the masked step (vmapped with the pool
+    unbatched) nor the compacted step ever reshapes or copies the pool —
+    block tables simply carry global page ids."""
     model = get_model(cfg)
     kw = {}
     if window:
@@ -360,8 +549,12 @@ def init_client_caches(cfg: ModelConfig, n_clients: int, batch: int, max_seq: in
         if pool_pages:
             kw["pool_pages"] = pool_pages
     one = model.init_cache(batch, max_seq, dtype, **kw)
-    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape)
-                        .copy(), one)
+    caches = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape)
+                          .copy(), one)
+    if page_block:
+        page_axes = cache_page_axes(cfg, max_seq, **kw)
+        caches = jax.tree.map(_fold_pool_leaf, caches, page_axes)
+    return caches
 
 
 # ---------------------------------------------------------------------------

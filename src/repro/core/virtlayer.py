@@ -82,6 +82,43 @@ def make_client_ctx(cfg: ModelConfig, acfg: Optional[AdapterConfig] = None, *,
     return LinCtx(top=top, for_layer=for_layer)
 
 
+def make_compact_ctx(cfg: ModelConfig, acfg: Optional[AdapterConfig],
+                     rows_client, *, memory_optimized: bool = True) -> LinCtx:
+    """Client context for a COMPACTED multi-client batch (the serving
+    engine's active-slot decode tick).
+
+    Where ``make_client_ctx`` binds ONE client's adapter slice (the bank is
+    vmapped around it), this context serves a batch whose rows belong to
+    different clients: ``rows_client`` [n_rows] maps each row to its client
+    and the per-layer adapter slices arrive client-stacked (leaves
+    [C, ...], see ``adapters.compact_adapter_bank``). LoRA deltas are
+    applied per row through the SGMV kernel — byte-identical to the
+    per-client vmapped path, which is what makes the compacted decode's
+    outputs byte-identical to the masked bank-wide decode."""
+    base_dense = frozen_dense if memory_optimized else _plain_dense_nohook
+    base_expert = frozen_expert if memory_optimized else _plain_expert_nohook
+
+    def for_layer(ad_slice) -> LinearFns:
+        def dense(x, w, b, path):
+            if acfg is not None:
+                x = adapters_lib.pre_scale_rows(x, path, ad_slice, acfg, cfg,
+                                                rows_client)
+            y = base_dense(x, w, b)
+            if acfg is not None:
+                y = adapters_lib.apply_adapter_rows(y, x, path, ad_slice,
+                                                    acfg, cfg, rows_client)
+            return y
+
+        def expert(x, w, path):
+            return base_expert(x, w)
+
+        return LinearFns(dense=dense, expert=expert)
+
+    top = LinearFns(dense=lambda x, w, b, path: base_dense(x, w, b),
+                    expert=lambda x, w, path: base_expert(x, w))
+    return LinCtx(top=top, for_layer=for_layer)
+
+
 def _plain_dense_nohook(x, w, b=None):
     y = jnp.einsum("...i,io->...o", x, w)
     return y + b if b is not None else y

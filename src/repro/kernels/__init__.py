@@ -1,13 +1,31 @@
 """Pallas TPU kernels for the compute hot-spots (DESIGN.md §7).
 
 sgmv          — multi-adapter LoRA gather-matmul over packed tokens
+                (block_t=1 degenerates to one-adapter-per-row: the serving
+                engine's compacted decode tick)
 ragged_linear — token-packed frozen base linear (no-padding batching, §3.7)
-decode_attn   — blocked GQA decode attention (online softmax, KV streaming)
+decode_attn   — blocked GQA decode attention (online softmax, KV streaming).
+                Two layouts: dense [B,T,K,hd] caches, and the TABLE-AWARE
+                PAGED layout — K/V live in a page pool shared by many
+                sequence slots, each row's block table is scalar-prefetched
+                and the kernel's index_map reads pages in place from the
+                pool (no dense view is ever gathered; the gather survives
+                only as the test oracle). int8 pools with per-head f32
+                scales are dequantized while streaming.
 flash_attn    — causal GQA flash attention fwd (prefill/train hot path; the
                 VMEM-resident-carry fix for the roofline's memory term)
 
 Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper: padding/dispatch/fallback), ref.py (pure-jnp oracle).
+
+Dispatch convention: ``interpret=None`` auto-selects by backend — compiled
+Pallas on TPU; elsewhere the kernels' *jnp stream twins* run (the same
+blocked math as a lax.scan, byte-identical to the kernels — asserted in
+tests — and free of the grid interpreter's per-step overhead). The paged
+decode-attn and token-write ops carry custom_vmap rules that flatten a
+vmapped client axis into extra pool pages/rows, which is what makes the
+bank-wide masked decode and the engine's compacted decode the same
+computation.
 """
 from repro.kernels.sgmv import sgmv, sgmv_ref
 from repro.kernels.ragged_linear import ragged_linear, ragged_linear_ref

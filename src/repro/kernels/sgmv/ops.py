@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.sgmv.ref import sgmv_ref
-from repro.kernels.sgmv.sgmv import sgmv_pallas_safe
+from repro.kernels.sgmv.sgmv import sgmv_pallas_safe, sgmv_stream
 
 
 def _pad_to(x, axis, multiple):
@@ -23,14 +23,22 @@ def _pad_to(x, axis, multiple):
 @functools.partial(jax.jit, static_argnames=("block_t", "block_d", "scale",
                                              "use_kernel", "interpret"))
 def sgmv(x, A, B, block_adapter, *, block_t: int = 128, block_d: int = 512,
-         scale: float = 1.0, use_kernel: bool = True, interpret: bool = True):
+         scale: float = 1.0, use_kernel: bool = True, interpret: bool = None):
     """Multi-adapter LoRA delta over a packed token buffer.
 
     x [T, din]; A [n, din, r]; B [n, r, dout]; block_adapter [T // block_t]
     (id per token block; negative = dead block). Arbitrary shapes — padding
-    to tile multiples is handled here. ``interpret=True`` is the CPU default
-    (this container); on TPU pass interpret=False.
-    """
+    to tile multiples is handled here. ``interpret=None`` auto-selects by
+    backend: the compiled Pallas kernel on TPU, its byte-identical jnp
+    stream twin (``sgmv_stream``) elsewhere — the twin skips the grid
+    interpreter whose per-block overhead dwarfs the rank-r math, and is
+    also byte-identical to a per-client vmapped LoRA application (the
+    compacted-decode exactness contract). ``block_t=1`` degenerates to one
+    adapter per row — how the engine's compacted decode tick applies
+    per-row client adapters; production TPU callers should sort rows by
+    client into MXU-sized blocks instead."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     if not use_kernel:
         return sgmv_ref(x, A, B, block_adapter, block_t=block_t, scale=scale)
 
@@ -38,11 +46,13 @@ def sgmv(x, A, B, block_adapter, *, block_t: int = 128, block_d: int = 512,
     x, _ = _pad_to(x, 0, block_t)
     nb = x.shape[0] // block_t
     ids = jnp.full((nb,), -1, jnp.int32).at[:block_adapter.shape[0]].set(block_adapter)
+    if interpret:
+        return sgmv_stream(x, A, B, ids, block_t=block_t, scale=scale)[:T0]
     # pad rank to the fp32 sublane tile and dout to the lane tile
     A, _ = _pad_to(A, 2, 8)
     B, _ = _pad_to(B, 1, 8)
     bd = min(block_d, max(128, dout0))
     B, _ = _pad_to(B, 2, bd)
     y = sgmv_pallas_safe(x, A, B, ids, block_t=block_t, block_d=bd,
-                         scale=scale, interpret=interpret)
+                         scale=scale, interpret=False)
     return y[:T0, :dout0]

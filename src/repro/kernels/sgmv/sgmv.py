@@ -75,6 +75,38 @@ def sgmv_pallas(x, A, B, block_adapter, *, block_t: int = 128,
     )(block_adapter, x, A, B)
 
 
+def sgmv_stream(x, A, B, block_adapter, *, block_t: int, scale: float = 1.0):
+    """jnp twin of the SGMV kernel: one lax.scan step per token block, each
+    step gathering its block's adapter and running the same two
+    ``jnp.dot``s the kernel body runs — byte-identical to the Pallas kernel
+    in interpret mode AND to a per-client vmapped LoRA application (the
+    shared-weight matmul both lower to), which is what lets the serving
+    engine's compacted decode apply per-row adapters through this op while
+    staying byte-identical to the masked bank-wide path. Non-TPU backends
+    run this twin (the grid interpreter's per-block overhead dwarfs the
+    rank-r math); TPU runs the compiled kernel."""
+    T, din = x.shape
+    nb = T // block_t
+    n_adapters = A.shape[0]
+    dout = B.shape[-1]
+    xb = x.reshape(nb, block_t, din)
+
+    def body(_, inp):
+        xi, idx = inp
+        safe = jnp.clip(idx, 0, n_adapters - 1)
+        a = A[safe].astype(jnp.float32)
+        b = B[safe].astype(jnp.float32)
+        h = jnp.dot(xi.astype(jnp.float32), a, preferred_element_type=jnp.float32)
+        y = jnp.dot(h, b, preferred_element_type=jnp.float32) * scale
+        return None, jnp.where(idx >= 0, y, 0.0).astype(x.dtype)
+
+    # no carry -> block steps are independent; unrolling lets XLA overlap
+    # the tiny rank-r dots instead of paying loop machinery per block
+    _, yb = jax.lax.scan(body, None, (xb, block_adapter),
+                         unroll=min(nb, 8))
+    return yb.reshape(T, dout)
+
+
 # NOTE on the index_map trick: clamped ids are NOT what the index_map sees —
 # it receives the raw prefetched table, so callers must pass non-negative ids
 # there when a block is dead but keep the sign bit in the *kernel* table.

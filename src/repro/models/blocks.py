@@ -10,14 +10,18 @@ change to model code (paper design goal 3: model transparency).
 from __future__ import annotations
 
 import math
+from contextlib import contextmanager
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 
-# the canonical block-table gather lives beside the decode kernel's oracle
-# (kernels never import models); the model-side paged decode re-uses it
-from repro.kernels.decode_attn.ref import paged_view
+# Paged decode attention goes through the table-aware kernel wrapper: pages
+# are read in place from the pool via the scalar-prefetched block table —
+# the dense per-row view is never gathered on a decode path (the gather
+# survives only as the kernels' test oracle, see decode_attn(via_gather=...))
+from repro.kernels.decode_attn import decode_attn
 
 
 class LinearFns(NamedTuple):
@@ -348,18 +352,103 @@ def _decode_attend_quant(params, cfg, q, cache_k, cache_ks, cache_v, cache_vs,
 # slots — reads through them are always masked by position validity, and all
 # writes are either bounded by true lengths (prefill) or dropped for
 # inactive slots (decode), so cross-slot corruption is impossible.
+#
+# READS go through the table-aware decode kernel (kernels/decode_attn): the
+# block table is scalar-prefetched and the kernel's index_map reads each
+# row's pages straight out of the pool — attention math is the kernel's
+# blocked online softmax, byte-identical between the bank-wide masked decode
+# and the engine's compacted decode (the kernel's custom_vmap rule folds a
+# vmapped client axis into extra pool pages, so both are literally the same
+# computation). ``_ORACLE`` reroutes the read through the gather-based test
+# oracle (same blocked math on a materialized dense view) — tests only.
+
+_ORACLE = False
+
+
+@contextmanager
+def paged_gather_oracle():
+    """TEST ORACLE: route paged decode reads through gather_paged_kv + the
+    identical blocked kernel math. Byte-equality of a decode under this
+    context and without it is the paged kernel's correctness contract.
+    The flag is read at TRACE time: use only around direct model calls,
+    never while constructing engines (their memoized jitted steps would
+    bake the oracle in)."""
+    global _ORACLE
+    _ORACLE = True
+    try:
+        yield
+    finally:
+        _ORACLE = False
+
+
+def _paged_attend(params, cfg, q, pools, tbl, pos, lin: LinearFns,
+                  path_prefix: str):
+    """Attention of one query token read in place from paged pools.
+
+    q [B,1,H,hd]; pools = (k, v) or (k, k_s, v, v_s) page pools; tbl
+    [B, n_blocks]; pos [B]. Returns [B,1,d_model] after the o-projection."""
+    B = q.shape[0]
+    hd, K, H = cfg.hd, cfg.n_kv_heads, cfg.hp
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    kw = {}
+    if len(pools) == 4:
+        pool_k, pool_ks, pool_v, pool_vs = pools
+        kw = {"k_scale": pool_ks, "v_scale": pool_vs}
+    else:
+        pool_k, pool_v = pools
+    out = decode_attn(qg, pool_k, pool_v, pos, window=cfg.sliding_window,
+                      block_tbl=tbl, via_gather=_ORACLE, **kw)
+    out = out.reshape(B, 1, H * hd)
+    return lin.dense(out, params["wo"], params.get("bo"), path_prefix + "o")
 
 def paged_token_write(pool, tbl, pos, x, active=None):
     """Write one token's row x [B, ...] at logical position pos [B] through
     the block table. Rows with active == False are dropped (their target
     page index is pushed out of bounds), which is what lets a bank-wide
-    masked decode share one pool: inactive slots never touch it."""
+    masked decode share one pool: inactive slots never touch it.
+
+    The write is a custom_vmap op: when the masked decode vmaps a bank of
+    clients over a SHARED (unbatched) global pool, the rule flattens the
+    client axis into more rows and issues ONE scatter — a naive vmap of a
+    scatter onto an unbatched operand would broadcast the pool per lane
+    (C copies of the whole pool per layer). Clients' pages are disjoint by
+    the engine allocator's page-range invariant, so the flattened scatter
+    touches disjoint slots."""
+    active = jnp.ones(tbl.shape[:1], bool) if active is None else active
+    return _paged_token_write(pool, tbl, pos.astype(jnp.int32), x, active)
+
+
+@custom_vmap
+def _paged_token_write(pool, tbl, pos, x, active):
     P, blk = pool.shape[:2]
-    B = tbl.shape[0]
     page = jnp.take_along_axis(tbl, (pos // blk)[:, None], axis=1)[:, 0]
-    if active is not None:
-        page = jnp.where(active, page, P)            # P is out of bounds
+    page = jnp.where(active, page, P)                # P is out of bounds
     return pool.at[page, pos % blk].set(x.astype(pool.dtype), mode="drop")
+
+
+@_paged_token_write.def_vmap
+def _paged_token_write_vmap(axis_size, in_batched, pool, tbl, pos, x, active):
+    pool_b, tbl_b, pos_b, x_b, act_b = in_batched
+    assert tbl_b or pool_b, \
+        "paged_token_write under vmap: lanes must differ in table or pool"
+    C = axis_size
+    lift = lambda a, b: a if b else jnp.broadcast_to(a, (C,) + a.shape)
+    tbl = lift(tbl, tbl_b)
+    pos, x, active = lift(pos, pos_b), lift(x, x_b), lift(active, act_b)
+    B = tbl.shape[1]
+    flat = lambda a: a.reshape((C * B,) + a.shape[2:])
+    if pool_b:
+        # batched per-client pools: fold clients into pages ([C,P]->[C*P])
+        P = pool.shape[1]
+        pool = pool.reshape((C * P,) + pool.shape[2:])
+        tbl = tbl + (jnp.arange(C, dtype=tbl.dtype) * P)[:, None, None]
+        out = _paged_token_write(pool, flat(tbl), flat(pos), flat(x), flat(active))
+        return out.reshape((C, P) + out.shape[1:]), True
+    # shared global pool: one scatter for all lanes, result stays shared
+    # (clients' pages are disjoint by the allocator's page-range invariant)
+    out = _paged_token_write(pool, flat(tbl), flat(pos), flat(x), flat(active))
+    return out, False
 
 
 def paged_prefill_write(pool, tbl, x, lengths=None):
@@ -444,16 +533,13 @@ def mha_decode_paged(params, cfg, x, pool_k, pool_v, tbl, pos, lin: LinearFns,
     pool_k/v [P, block, K, hd] page pools shared across the B slots;
     tbl [B, n_blocks] block table; pos [B]; active [B] bool (None = all).
     The new token's K/V is written through the table (dropped for inactive
-    rows), then a dense [B, n_blocks*block, K, hd] view is gathered and the
-    attention math is bit-identical to ``mha_decode`` on a dense cache of
-    the same depth. Returns (out, new_pool_k, new_pool_v)."""
+    rows), then the table-aware kernel attends over the pages in place —
+    no dense view is gathered. Returns (out, new_pool_k, new_pool_v)."""
     q, k, v = _decode_qkv(params, cfg, x, pos, lin, path_prefix)
     pool_k = paged_token_write(pool_k, tbl, pos, k[:, 0], active)
     pool_v = paged_token_write(pool_v, tbl, pos, v[:, 0], active)
-    cache_k = paged_view(pool_k, tbl)
-    cache_v = paged_view(pool_v, tbl)
-    valid = _decode_valid(cfg, pos, cache_k.shape[1], False)
-    out = _decode_attend(params, cfg, q, cache_k, cache_v, valid, lin, path_prefix)
+    out = _paged_attend(params, cfg, q, (pool_k, pool_v), tbl, pos, lin,
+                        path_prefix)
     return out, pool_k, pool_v
 
 
@@ -462,8 +548,8 @@ def mha_decode_quant_paged(params, cfg, x, pool_k, pool_ks, pool_v, pool_vs,
                            path_prefix: str = ""):
     """Paged + int8-quantized decode: pools hold int8 entries [P,block,K,hd]
     and f32 per-head scales [P,block,K,1]. Same contract as
-    ``mha_decode_paged``; math matches ``mha_decode_quant`` bit-for-bit on
-    equal cache depth. Returns (out, k, ks, v, vs) pools."""
+    ``mha_decode_paged``; the kernel dequantizes per page while streaming.
+    Returns (out, k, ks, v, vs) pools."""
     q, k, v = _decode_qkv(params, cfg, x, pos, lin, path_prefix)
     kq, ks = quantize_head(k)
     vq, vs = quantize_head(v)
@@ -471,13 +557,8 @@ def mha_decode_quant_paged(params, cfg, x, pool_k, pool_ks, pool_v, pool_vs,
     pool_ks = paged_token_write(pool_ks, tbl, pos, ks[:, 0], active)
     pool_v = paged_token_write(pool_v, tbl, pos, vq[:, 0], active)
     pool_vs = paged_token_write(pool_vs, tbl, pos, vs[:, 0], active)
-    cache_k = paged_view(pool_k, tbl)
-    cache_ks = paged_view(pool_ks, tbl)
-    cache_v = paged_view(pool_v, tbl)
-    cache_vs = paged_view(pool_vs, tbl)
-    valid = _decode_valid(cfg, pos, cache_k.shape[1], False)
-    out = _decode_attend_quant(params, cfg, q, cache_k, cache_ks, cache_v,
-                               cache_vs, valid, lin, path_prefix, x.dtype)
+    out = _paged_attend(params, cfg, q, (pool_k, pool_ks, pool_v, pool_vs),
+                        tbl, pos, lin, path_prefix)
     return out, pool_k, pool_ks, pool_v, pool_vs
 
 

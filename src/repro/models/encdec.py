@@ -210,13 +210,33 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
                      axis=0)[:, None].astype(x.dtype)
     scan_ad = adapter.get("dec_layers") if adapter else None
 
-    def body(x, layer_in):
-        p, sk, sv, xk, xv, ad = layer_in
+    # self-attention KV rides the scan as CARRY (see transformer.decode_step
+    # for the layout rationale): paged pools are fused [L, P, ..]->[L*P, ..]
+    # and addressed per layer through offset tables (the pool is never
+    # sliced); dense caches use indexed in-place carry updates. Read-only
+    # cross caches stay xs.
+    paged = tbl is not None
+    if paged:
+        Pl = cache["self_k"].shape[1]
+        fuse = lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:])
+        kv0 = (fuse(cache["self_k"]), fuse(cache["self_v"]))
+    else:
+        kv0 = (cache["self_k"], cache["self_v"])
+
+    def body(carry, layer_in):
+        x, self_kv, i = carry
+        p, xk, xv, ad = layer_in
+        if paged:
+            sk, sv = self_kv
+        else:
+            sk = jax.lax.dynamic_index_in_dim(self_kv[0], i, 0, keepdims=False)
+            sv = jax.lax.dynamic_index_in_dim(self_kv[1], i, 0, keepdims=False)
         lin = ctx.for_layer(ad)
         h = blocks.rmsnorm(p["ln1"], x)
-        if tbl is not None:
+        if paged:
             y, sk, sv = blocks.mha_decode_paged(p["attn"], cfg, h, sk, sv,
-                                                tbl, pos, lin, active=active)
+                                                tbl + i * Pl, pos, lin,
+                                                active=active)
         else:
             y, sk, sv = blocks.mha_decode(p["attn"], cfg, h, sk, sv, pos, lin)
         x = x + y
@@ -224,11 +244,21 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
         x = x + blocks.cross_decode(p["xattn"], cfg, h, xk, xv, lin)
         h = blocks.rmsnorm(p["ln2"], x)
         x = x + blocks.mlp_forward(p["mlp"], h, lin)
-        return x, (sk, sv)
+        if paged:
+            self_kv = (sk, sv)
+        else:
+            self_kv = (jax.lax.dynamic_update_index_in_dim(
+                           self_kv[0], sk.astype(self_kv[0].dtype), i, 0),
+                       jax.lax.dynamic_update_index_in_dim(
+                           self_kv[1], sv.astype(self_kv[1].dtype), i, 0))
+        return (x, self_kv, i + 1), None
 
-    x, (sk, sv) = jax.lax.scan(
-        body, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
-                  cache["cross_k"], cache["cross_v"], scan_ad))
+    (x, (sk, sv), _), _ = jax.lax.scan(
+        body, (x, kv0, jnp.int32(0)),
+        (params["dec_layers"], cache["cross_k"], cache["cross_v"], scan_ad))
+    if paged:
+        sk = sk.reshape(cache["self_k"].shape)
+        sv = sv.reshape(cache["self_v"].shape)
     x = blocks.rmsnorm(params["final_norm"], x)
     logits = ctx.top.dense(x, params["lm_head"], None, "lm_head")[:, 0]
     new_cache = {"self_k": sk, "self_v": sv, "cross_k": cache["cross_k"],

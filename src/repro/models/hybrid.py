@@ -246,13 +246,44 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
     x = embed_tokens(cfg, params, token[:, None], ctx.top)
     scan_adapters = adapter.get("groups") if adapter else None
 
-    def body(x, grp_in):
-        gp, st, ad = grp_in
-        x, new_st = _group_decode(gp, cfg, x, st, pos, ctx.for_layer(ad),
-                                  tbl=tbl, active=active)
-        return x, new_st
+    # Group state rides the scan as CARRY (see transformer.decode_step for
+    # the layout rationale): paged attention-sublayer pools are fused
+    # [G, P, ..] -> [G*P, ..] and addressed per group through offset block
+    # tables (never sliced); Mamba state uses indexed in-place carry
+    # updates.
+    grp = cache["groups"]
+    pool_subs = {name for name, sub in grp.items()
+                 if tbl is not None and "k" in sub}
+    pools0 = {n: jax.tree.map(
+        lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]), grp[n])
+        for n in pool_subs}
+    states0 = {n: grp[n] for n in grp if n not in pool_subs}
+    Pg = (jax.tree.leaves(grp[next(iter(pool_subs))])[0].shape[1]
+          if pool_subs else 0)
 
-    x, new_groups = jax.lax.scan(body, x, (params["groups"], cache["groups"], scan_adapters))
+    def body(carry, grp_in):
+        x, pools, states, i = carry
+        gp, ad = grp_in
+        st = dict(pools)
+        st.update({n: jax.tree.map(lambda t: jax.lax.dynamic_index_in_dim(
+            t, i, 0, keepdims=False), sub) for n, sub in states.items()})
+        x, new_st = _group_decode(gp, cfg, x, st, pos, ctx.for_layer(ad),
+                                  tbl=None if tbl is None else tbl + i * Pg,
+                                  active=active)
+        pools = {n: new_st[n] for n in pools}
+        states = {n: jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                full, one.astype(full.dtype), i, 0), sub, new_st[n])
+            for n, sub in states.items()}
+        return (x, pools, states, i + 1), None
+
+    (x, pools, states, _), _ = jax.lax.scan(
+        body, (x, pools0, states0, jnp.int32(0)),
+        (params["groups"], scan_adapters))
+    new_groups = {n: (jax.tree.map(lambda t, old: t.reshape(old.shape),
+                                   pools[n], grp[n]) if n in pools
+                      else states[n])
+                  for n in grp}
     x = blocks.rmsnorm(params["final_norm"], x)
     logits = lm_head(cfg, params, x, ctx.top)[:, 0]
     new_cache = {"groups": new_groups, "pos": pos + 1}

@@ -108,7 +108,9 @@ def _prefix_attend(attn_p, cfg, h, prefix_kv, lin: LinearFns):
 
     Added as a separate softmax branch (an additive approximation that keeps
     the base attention untouched — the client-side op of paper §3.2).
-    prefix_k/v: [n_prefix, K, hd].
+    prefix_k/v: [n_prefix, K, hd] shared across the batch, or — in the
+    engine's compacted decode tick, where every row may belong to a
+    different client — per-row [B, n_prefix, K, hd].
     """
     import math
     B, S, _ = h.shape
@@ -116,10 +118,16 @@ def _prefix_attend(attn_p, cfg, h, prefix_kv, lin: LinearFns):
     G = H // K
     pk, pv = prefix_kv
     q = lin.dense(h, attn_p["wq"], None, "q").reshape(B, S, K, G, hd)
-    s = jnp.einsum("bskgh,pkh->bkgsp", q, pk.astype(h.dtype)).astype(jnp.float32)
+    if pk.ndim == 4:      # per-row prefixes (compacted multi-client batch)
+        s = jnp.einsum("bskgh,bpkh->bkgsp", q, pk.astype(h.dtype)).astype(jnp.float32)
+    else:
+        s = jnp.einsum("bskgh,pkh->bkgsp", q, pk.astype(h.dtype)).astype(jnp.float32)
     s = s / math.sqrt(hd)
     p = jax.nn.softmax(s, axis=-1).astype(h.dtype)
-    out = jnp.einsum("bkgsp,pkh->bskgh", p, pv.astype(h.dtype)).reshape(B, S, H * hd)
+    if pk.ndim == 4:
+        out = jnp.einsum("bkgsp,bpkh->bskgh", p, pv.astype(h.dtype)).reshape(B, S, H * hd)
+    else:
+        out = jnp.einsum("bkgsp,pkh->bskgh", p, pv.astype(h.dtype)).reshape(B, S, H * hd)
     return lin.dense(out, attn_p["wo"], None, "o") * 0.1
 
 
@@ -312,13 +320,52 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
                              ring=ring, tbl=tbl, active=active)
         new_pre.append(c)
 
-    def body(x, layer_in):
-        p, c, ad = layer_in
-        x, c = _layer_decode(p, cfg, x, c, pos, ctx.for_layer(ad), ad, ring=ring,
-                             tbl=tbl, active=active)
-        return x, c
+    # The layer-stacked cache rides the scan as CARRY, not as xs/ys: scanned
+    # ys re-materialize their whole stacked buffer every step, which made
+    # each decode tick copy the entire KV cache / page pool — a per-tick
+    # cost proportional to bank size. As a carry, XLA aliases the buffer
+    # through the loop (and, with the serving engine's donated cache
+    # argument, across ticks) so a tick only touches the lanes it writes.
+    #
+    # PAGED caches go one step further: the layer axis is fused into the
+    # page axis ([L, P, ..] -> [L*P, ..], a free reshape) and each layer
+    # addresses its own page range through an offset block table — the pool
+    # is never even sliced per layer, so decode-tick HBM traffic is the
+    # token writes + the pages the tables name, nothing else.
+    if tbl is not None:
+        Pl = jax.tree.leaves(cache["layers"])[0].shape[1]
+        fused = jax.tree.map(
+            lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
+            cache["layers"])
 
-    x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"], scan_adapters))
+        def body(carry, layer_in):
+            x, pools, i = carry
+            p, ad = layer_in
+            x, pools = _layer_decode(p, cfg, x, pools, pos, ctx.for_layer(ad),
+                                     ad, ring=ring, tbl=tbl + i * Pl,
+                                     active=active)
+            return (x, pools, i + 1), None
+
+        (x, fused, _), _ = jax.lax.scan(
+            body, (x, fused, jnp.int32(0)), (params["layers"], scan_adapters))
+        new_layers = jax.tree.map(
+            lambda t, old: t.reshape(old.shape), fused, cache["layers"])
+    else:
+        def body(carry, layer_in):
+            x, layers, i = carry
+            p, ad = layer_in
+            c = jax.tree.map(lambda t: jax.lax.dynamic_index_in_dim(
+                t, i, 0, keepdims=False), layers)
+            x, c = _layer_decode(p, cfg, x, c, pos, ctx.for_layer(ad), ad,
+                                 ring=ring, tbl=None, active=active)
+            layers = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                    full, one.astype(full.dtype), i, 0), layers, c)
+            return (x, layers, i + 1), None
+
+        (x, new_layers, _), _ = jax.lax.scan(
+            body, (x, cache["layers"], jnp.int32(0)),
+            (params["layers"], scan_adapters))
     x = blocks.rmsnorm(params["final_norm"], x)
     logits = lm_head(cfg, params, x, ctx.top)[:, 0]
     new_cache = {"layers": new_layers, "pos": pos + 1}

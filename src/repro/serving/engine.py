@@ -14,15 +14,32 @@ Architecture
   bank drains (mid-stream join/leave).
 * **KV layout.** ``ServeConfig.page_block = 0`` keeps dense fixed-depth
   (``max_seq``) cache rows per slot. ``page_block > 0`` switches to the
-  PAGED layout: each client owns a pool of ``page_block``-token pages
-  (``pool_pages`` per client) and the engine runs a host-side page
-  allocator — prompt pages are assigned at admission, one page is assigned
-  as a slot's decode position crosses each block boundary, and a finished
-  request's pages return to the pool for the next occupant. The device
-  sees the allocator only through the ``block_tbl`` cache leaf (pushed
-  before prefill/decode whenever it changed). ``kv_quant=True`` stores
-  int8 KV entries + per-head f32 scales and composes with paging. Outputs
-  are byte-identical between the dense and paged layouts.
+  PAGED layout: the device holds ONE global flat pool of
+  ``page_block``-token pages per KV leaf; each client owns the page RANGE
+  ``[c*P, (c+1)*P)`` (``pool_pages`` = P per client) and the engine runs a
+  host-side page allocator — prompt pages are assigned at admission, one
+  page is assigned as a slot's decode position crosses each block
+  boundary, and a finished request's pages return to the pool for the next
+  occupant. The device sees the allocator only through the ``block_tbl``
+  cache leaf (global page ids, pushed before prefill/decode whenever it
+  changed); attention reads pages in place through the table-aware
+  ``kernels/decode_attn`` kernel. ``kv_quant=True`` stores int8 KV entries
+  + per-head f32 scales and composes with paging. The paged layout tracks
+  the dense one within float tolerance (the kernel's blocked online
+  softmax re-associates reductions) with identical greedy streams.
+* **Compute-proportional decode.** With the paged layout the engine
+  defaults to the COMPACTED decode tick (``compact_decode``; the masked
+  bank-wide step stays as the dense-layout path and the
+  ``compact_decode=False`` ablation): the actively decoding
+  (client, slot) rows are gathered across clients into a dense batch
+  (bucketed to a few static sizes to bound recompiles), run through the
+  model once — per-row LoRA via ``kernels/sgmv``, attention via the paged
+  kernel — and scattered back under the row mask. FLOPs and HBM traffic
+  scale with ACTIVE tokens, not provisioned slots; outputs are
+  byte-identical to the masked step under every tick policy (the masked
+  step lowers to the same flattened computation through the kernels'
+  custom_vmap rules). Cache buffers are donated into the jitted steps, so
+  a tick updates the bank cache in place instead of copying it.
 * **Admission.** A per-engine FIFO queue. A request is admitted when (a) its
   client has enough free slots, (b) its context fits the cache depth,
   (c) under paging, the client pool has enough unreserved pages for the
@@ -80,19 +97,32 @@ from repro.core.scheduler import ClientSpec, TickPolicy, simulate
 # Jitted step builders are memoized on the (frozen, hashable) configs so
 # every engine instance over the same model shares one compile cache —
 # constructing an engine is cheap and benchmarks don't re-pay compilation.
+# The cache tree (arg 2) is DONATED in every step that replaces it: the
+# engine always rebinds ``self.caches`` to the result, and donation lets
+# XLA update the (potentially multi-GB) bank cache in place instead of
+# copying it once per tick — without it, per-tick cost grows with bank
+# size no matter how few slots decode.
 @functools.lru_cache(maxsize=None)
 def _jit_client_prefill(cfg, acfg, scfg):
-    return jax.jit(symbiosis.make_client_prefill(cfg, acfg, scfg))
+    return jax.jit(symbiosis.make_client_prefill(cfg, acfg, scfg),
+                   donate_argnums=2)
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_masked_decode(cfg, acfg, scfg):
-    return jax.jit(symbiosis.make_masked_decode_step(cfg, acfg, scfg))
+    return jax.jit(symbiosis.make_masked_decode_step(cfg, acfg, scfg),
+                   donate_argnums=2)
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_bank_prefill(cfg, acfg, scfg):
     return jax.jit(symbiosis.make_multi_client_prefill(cfg, acfg, scfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_compact_decode(cfg, acfg, scfg):
+    return jax.jit(symbiosis.make_compact_decode_step(cfg, acfg, scfg),
+                   donate_argnums=2)
 
 
 @dataclasses.dataclass
@@ -127,7 +157,8 @@ class ServingEngine:
                  base_params, client_bank, *, max_batch_per_client: int = 4,
                  router=None, policy: Optional[str] = None,
                  bank_prefill: bool = False,
-                 max_inflight_per_client: Optional[int] = None):
+                 max_inflight_per_client: Optional[int] = None,
+                 compact_decode: Optional[bool] = None):
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
         self.base = base_params
         self.bank = client_bank
@@ -155,13 +186,24 @@ class ServingEngine:
             # count (pages promised to in-flight requests but not yet
             # assigned), per-slot assigned pages, per-slot next write pos,
             # and the block-table mirror pushed to the device when dirty.
-            self._free_pages = [list(range(self._pool_pages))
-                                for _ in range(self.n_clients)]
+            # Page ids are GLOBAL (client c owns [c*P, (c+1)*P) of the one
+            # flat device pool — see symbiosis.init_client_caches); the
+            # per-client free lists keep ISSUE-2 admission semantics
+            # (per-client pool backpressure) as an allocator convention.
+            self._free_pages = [list(range(c * self._pool_pages,
+                                           (c + 1) * self._pool_pages))
+                                for c in range(self.n_clients)]
             self._reserved = [0] * self.n_clients
             self._slot_pages: Dict[tuple, List[int]] = {}
             self._wpos = np.zeros((self.n_clients, self.max_b), np.int64)
-            self._tbl = np.zeros((self.n_clients, self.max_b, self._n_blocks),
-                                 np.int32)
+            # unmapped table entries hold an OUT-OF-RANGE sentinel: under
+            # the global pool a zero would alias client 0's first page, and
+            # any stray write through a stale entry would corrupt it; the
+            # sentinel makes such writes scatter-drop (reads through it are
+            # clamped and always position-masked)
+            self._tbl_oob = np.int32(self.n_clients * self._pool_pages)
+            self._tbl = np.full((self.n_clients, self.max_b, self._n_blocks),
+                                self._tbl_oob, np.int32)
             self._tbl_dirty = True
             self._resv_of: Dict[int, int] = {}
         self.caches = symbiosis.init_client_caches(
@@ -169,18 +211,44 @@ class ServingEngine:
         self._prefill_one = _jit_client_prefill(cfg, acfg, scfg)
         self._prefill_bank = _jit_bank_prefill(cfg, acfg, scfg) if bank_prefill else None
         self._decode = _jit_masked_decode(cfg, acfg, scfg)
+        # Compute-proportional decode (ISSUE 3 tentpole): gather the active
+        # (client, slot) rows into one dense batch and run ONLY those —
+        # FLOPs/HBM scale with active tokens, not bank size. Paged layouts
+        # only (the page pools are what let the client axis fold away);
+        # auto-enabled there, the masked bank-wide step stays as the
+        # ablation (compact_decode=False) and the dense-layout path.
+        if compact_decode and not self._paged:
+            raise ValueError("compact_decode requires the paged KV layout "
+                             "(ServeConfig.page_block > 0)")
+        self._compact = self._paged if compact_decode is None else compact_decode
+        self._compact_step = (_jit_compact_decode(cfg, acfg, scfg)
+                              if self._compact else None)
+        # jit-bucketed row-batch sizes: 4, 8, ... capped at the bank's rows
+        total_rows = self.n_clients * self.max_b
+        self._buckets = []
+        b = 4
+        while b < total_rows:
+            self._buckets.append(b)
+            b *= 2
+        self._buckets.append(total_rows)
         self._queue: List[Request] = []
         # slot tables + per-request bookkeeping (keyed by id(req); requests
         # stay alive in the done list for the whole run)
         self._slot_owner = [[None] * self.max_b for _ in range(self.n_clients)]
         self._last_tok = np.zeros((self.n_clients, self.max_b), np.int32)
+        # Incrementally maintained activity state (admit/retire only — never
+        # re-derived from the request list inside the tick loop, whose cost
+        # would grow with bank size): the bool mask drives the masked step,
+        # the per-client sorted slot lists drive compacted row building.
+        self._active_mask = np.zeros((self.n_clients, self.max_b), bool)
+        self._active_slots: List[List[int]] = [[] for _ in range(self.n_clients)]
         self._left: Dict[int, int] = {}
         self._slots_of: Dict[int, List[int]] = {}
         self._rng: Dict[int, np.random.Generator] = {}
         self._placement: Dict[int, object] = {}
         self.stats = {"ticks": 0, "decode_tokens": 0, "prefill_tokens": 0,
                       "batched_clients": 0, "admitted": 0, "prefill_calls": 0,
-                      "peak_inflight": 0}
+                      "peak_inflight": 0, "compact_rows": 0, "compact_padded": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -283,7 +351,7 @@ class ServingEngine:
             for s in slots:
                 pages = [self._free_pages[c].pop()
                          for _ in range(prompt_pages)]
-                self._tbl[c, s, :] = 0
+                self._tbl[c, s, :] = self._tbl_oob
                 self._tbl[c, s, :prompt_pages] = pages
                 self._slot_pages[(c, s)] = pages
                 self._wpos[c, s] = S
@@ -303,6 +371,13 @@ class ServingEngine:
         self._placement[id(req)] = placement
         for s in slots:
             self._slot_owner[c][s] = req
+        if self._left[id(req)] > 0:
+            # a request admitted with max_new_tokens == 1 is already done
+            # (its one token came from prefill) and must never join a decode
+            # tick: its slot's next block-table entry is still unassigned,
+            # and decoding through it would write another client's page
+            self._active_mask[c, slots] = True
+            self._active_slots[c] = sorted(self._active_slots[c] + slots)
         self.stats["admitted"] += 1
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += B * S
@@ -388,23 +463,38 @@ class ServingEngine:
             self._tbl_dirty = True
         self._wpos[c, s] = w + 1
 
+    def _row_bucket(self, n: int) -> int:
+        """Smallest jit bucket holding n active rows (bounds recompiles)."""
+        for b in self._buckets:
+            if b >= n:
+                return b
+        return self._buckets[-1]
+
     def _decode_tick(self, serve: set, inflight: List[Request]):
-        active = np.zeros((self.n_clients, self.max_b), bool)
         stepping = [r for r in inflight
                     if r.client_id in serve and self._left[id(r)] > 0]
         for req in stepping:
-            active[req.client_id, self._slots_of[id(req)]] = True
             if self._paged:
                 for s in self._slots_of[id(req)]:
                     self._grow_slot_pages(req, req.client_id, s)
         self._sync_tbl()
-        logits, self.caches = self._decode(
-            self.base, self.bank, self.caches,
-            jnp.asarray(self._last_tok), jnp.asarray(active))
-        lg = np.asarray(logits)
+        if self._compact:
+            lookup = self._decode_tick_compact(serve)
+        else:
+            # masked bank-wide step: compose this tick's mask from the
+            # incrementally maintained activity mask (admit/retire updates)
+            # and the policy's serving set — O(C) per tick, not O(inflight)
+            serve_sel = np.zeros((self.n_clients, 1), bool)
+            serve_sel[sorted(serve)] = True
+            active = self._active_mask & serve_sel
+            logits, self.caches = self._decode(
+                self.base, self.bank, self.caches,
+                jnp.asarray(self._last_tok), jnp.asarray(active))
+            lg = np.asarray(logits)
+            lookup = lambda c, slots: lg[c, slots]
         for req in stepping:
             c, slots = req.client_id, self._slots_of[id(req)]
-            nxt = self._sample(lg[c, slots], req)
+            nxt = self._sample(lookup(c, slots), req)
             pos = req.max_new_tokens - self._left[id(req)]
             req.generated[:, pos] = nxt
             self._last_tok[c, slots] = nxt
@@ -412,6 +502,32 @@ class ServingEngine:
             self.stats["decode_tokens"] += len(slots)
         self.stats["ticks"] += 1
         self.stats["batched_clients"] += len(serve)
+
+    def _decode_tick_compact(self, serve: set):
+        """Compute-proportional tick: gather the serving clients' active
+        (client, slot) rows into a bucketed dense batch, decode only those
+        rows, and return a logits lookup for the sampler. The jitted step
+        scatters cache writes back under the row mask (symbiosis.
+        make_compact_decode_step); outputs are byte-identical to the masked
+        bank-wide step — the bucket's padding rows are masked out of every
+        write and their logits never read."""
+        rows = [(c, s) for c in sorted(serve) for s in self._active_slots[c]]
+        n = len(rows)
+        nb = self._row_bucket(n)
+        clients = np.zeros((nb,), np.int32)
+        slots = np.zeros((nb,), np.int32)
+        mask = np.zeros((nb,), bool)
+        for i, (c, s) in enumerate(rows):
+            clients[i], slots[i], mask[i] = c, s, True
+        toks = self._last_tok[clients, slots]
+        logits, self.caches = self._compact_step(
+            self.base, self.bank, self.caches, jnp.asarray(toks),
+            jnp.asarray(clients), jnp.asarray(slots), jnp.asarray(mask))
+        lg = np.asarray(logits)
+        row_of = {cs: i for i, cs in enumerate(rows)}
+        self.stats["compact_rows"] += n
+        self.stats["compact_padded"] += nb - n
+        return lambda c, ss: lg[[row_of[(c, s)] for s in ss]]
 
     def _sample(self, logits: np.ndarray, req: Request) -> np.ndarray:
         """logits [rows, V] -> next token per row, via the request's RNG."""
@@ -436,6 +552,9 @@ class ServingEngine:
         c = req.client_id
         for s in self._slots_of.pop(id(req)):
             self._slot_owner[c][s] = None
+            if self._active_mask[c, s]:       # never set for max_new == 1
+                self._active_mask[c, s] = False
+                self._active_slots[c].remove(s)
             if self._paged:
                 # pages (and any unused reservation) return to the pool for
                 # the next admit; the table rows are remapped at admission,

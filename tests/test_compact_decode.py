@@ -1,0 +1,277 @@
+"""Compute-proportional (compacted) decode — ISSUE 3 tentpole.
+
+Byte-identity bars:
+
+* core level: ``make_compact_decode_step`` over any active subset ==
+  ``make_masked_decode_step`` over the whole bank, logits AND every cache
+  leaf, for every attention family × adapter method (incl. int8 pools);
+* engine level: a compacted engine's outputs == the masked engine's, across
+  occupancies (single slot / exactly a jit bucket / full bank) and tick
+  policies.
+
+Compaction is paged-only (the page pools are what let the client axis fold
+into extra pages); the dense layout keeps the masked step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AdapterConfig, ServeConfig, DENSE, MOE, VLM, HYBRID,
+                          ENCDEC)
+from repro.core import symbiosis
+from repro.models import get_model
+from repro.core.virtlayer import make_client_ctx
+from repro.serving.engine import ServingEngine, Request
+from conftest import tiny
+
+ATTN_FAMS = [DENSE, MOE, VLM, HYBRID, ENCDEC]
+
+
+def _bank_caches_after_prefill(cfg, acfg, scfg, C, B, S, seed=0):
+    """Per-client prefill on identity block tables, stacked into bank caches
+    (bypasses the engine so enc-dec frames can be threaded)."""
+    model = get_model(cfg)
+    base, bank, _ = symbiosis.init_system(cfg, acfg, C, jax.random.PRNGKey(seed))
+    ctx = make_client_ctx(cfg, acfg)
+    rng = np.random.default_rng(seed)
+    cache_kw = symbiosis.serve_cache_kwargs(cfg, scfg)
+    per = []
+    for c in range(C):
+        cache = model.init_cache(B, scfg.max_seq, **cache_kw)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)).astype(np.int32))}
+        if cfg.arch == VLM:
+            batch["img_embed"] = jnp.asarray(rng.normal(
+                size=(B, cfg.n_frontend_tokens, cfg.d_model)).astype(np.float32)) * 0.02
+        if cfg.arch == ENCDEC:
+            batch["frames"] = jnp.asarray(rng.normal(
+                size=(B, cfg.n_frontend_tokens, cfg.d_model)).astype(np.float32)) * 0.1
+        adapter = jax.tree.map(lambda x: x[c], bank)
+        _, cache = model.prefill(base, batch, cache, ctx, adapter)
+        per.append(cache)
+    caches = symbiosis.stack_client_caches(cfg, scfg.max_seq, per, **cache_kw)
+    return base, bank, caches, rng
+
+
+class TestCompactStepCore:
+    @pytest.mark.parametrize("arch", [DENSE, HYBRID])
+    def test_matches_masked_step(self, arch):
+        self._case(arch, "lora")
+
+    @pytest.mark.tier2
+    @pytest.mark.parametrize("arch", ATTN_FAMS)
+    @pytest.mark.parametrize("method", ["lora", "ia3", "prefix"])
+    def test_matches_masked_step_all(self, arch, method):
+        self._case(arch, method)
+
+    @pytest.mark.tier2
+    def test_matches_masked_step_quant(self):
+        self._case(DENSE, "lora", kv_quant=True)
+
+    def _case(self, arch, method, **scfg_kw):
+        cfg = tiny(arch)
+        acfg = AdapterConfig(method=method, rank=4, alpha=8.0,
+                             targets=("q", "v"), n_prefix=4)
+        C, B, S = 3, 2, 6
+        scfg = ServeConfig(n_clients=C, max_seq=32, page_block=8, **scfg_kw)
+        base, bank, caches, rng = _bank_caches_after_prefill(cfg, acfg, scfg,
+                                                            C, B, S)
+        masked = jax.jit(symbiosis.make_masked_decode_step(cfg, acfg, scfg))
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (C, B)).astype(np.int32))
+        active = np.zeros((C, B), bool)
+        active[0, 1] = active[2, 0] = True
+        lg_m, new_m = masked(base, bank, caches, tokens, jnp.asarray(active))
+
+        # 2 live + 2 padding rows (row count is a call-site shape)
+        compact = jax.jit(symbiosis.make_compact_decode_step(cfg, acfg, scfg))
+        clients = jnp.asarray(np.array([0, 2, 0, 0], np.int32))
+        slots = jnp.asarray(np.array([1, 0, 0, 0], np.int32))
+        row_mask = jnp.asarray(np.array([True, True, False, False]))
+        lg_c, new_c = compact(base, bank, caches, tokens[clients, slots],
+                              clients, slots, row_mask)
+
+        np.testing.assert_array_equal(np.asarray(lg_m)[0, 1], np.asarray(lg_c)[0])
+        np.testing.assert_array_equal(np.asarray(lg_m)[2, 0], np.asarray(lg_c)[1])
+        for a, b in zip(jax.tree.leaves(new_m), jax.tree.leaves(new_c)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_requires_paged_layout(self):
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="lora", rank=4)
+        with pytest.raises(ValueError, match="paged"):
+            symbiosis.make_compact_decode_step(cfg, acfg,
+                                               ServeConfig(max_seq=32))
+
+
+class TestCompactEngine:
+    """Engine-level: compacted vs masked serving, byte-identical outputs."""
+
+    def _serve(self, cfg, acfg, scfg, base, bank, reqs, *, compact, policy,
+               max_b=2):
+        eng = ServingEngine(cfg, acfg, scfg, base, bank,
+                            max_batch_per_client=max_b, policy=policy,
+                            compact_decode=compact)
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        return eng, sorted((r.client_id, r.prompt.tobytes(),
+                            r.generated.tobytes()) for r in done)
+
+    def _reqs(self, cfg, rng, spec):
+        """spec: list of (client, rows, prompt_len, max_new, arrive)."""
+        return [Request(client_id=c,
+                        prompt=rng.integers(0, cfg.vocab, (rows, S)).astype(np.int32),
+                        max_new_tokens=new, arrive_tick=at)
+                for (c, rows, S, new, at) in spec]
+
+    # occupancy shapes over a 3-client x 2-slot bank (buckets: 4, 6):
+    OCCUPANCIES = {
+        "one_slot": [(0, 1, 5, 6, 0)],
+        "bucket_boundary": [(0, 2, 5, 6, 0), (1, 2, 6, 6, 0)],   # 4 rows
+        "bucket_padded": [(0, 2, 5, 6, 0), (1, 2, 6, 6, 0),
+                          (2, 1, 4, 6, 0)],                      # 5 rows -> 6
+        "full_bank": [(c, 2, 4 + c, 6, 0) for c in range(3)],    # 6 rows
+        "staggered_turnover": [(0, 1, 4, 3, 0), (1, 2, 5, 8, 1),
+                               (0, 1, 5, 4, 2), (2, 2, 6, 2, 3),
+                               (0, 2, 4, 5, 6)],
+    }
+
+    @pytest.mark.parametrize("occupancy", list(OCCUPANCIES))
+    def test_compact_matches_masked(self, key, occupancy):
+        self._case(key, occupancy, "opportunistic")
+
+    @pytest.mark.tier2
+    @pytest.mark.parametrize("policy", ["lockstep", "nolockstep"])
+    @pytest.mark.parametrize("occupancy", list(OCCUPANCIES))
+    def test_compact_matches_masked_policies(self, key, occupancy, policy):
+        self._case(key, occupancy, policy)
+
+    def _case(self, key, occupancy, policy, page_block=8, arch=DENSE):
+        cfg = tiny(arch)
+        acfg = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+        scfg = ServeConfig(n_clients=3, max_seq=32, page_block=page_block)
+        base, bank, _ = symbiosis.init_system(cfg, acfg, 3, key)
+        outs = {}
+        for compact in (False, True):
+            rng = np.random.default_rng(11)
+            eng, outs[compact] = self._serve(
+                cfg, acfg, scfg, base, bank,
+                self._reqs(cfg, rng, self.OCCUPANCIES[occupancy]),
+                compact=compact, policy=policy)
+        assert outs[True] == outs[False], (
+            f"compacted decode diverged from masked ({occupancy}, {policy})")
+        # allocator drained + activity state empty (incremental bookkeeping)
+        assert not any(eng._active_slots)
+        assert not eng._active_mask.any()
+
+    def test_hybrid_engine_compact(self, key):
+        """Recurrent family: per-slot Mamba state gathers/scatters through
+        the compacted step; slot turnover stays exact."""
+        cfg = tiny(HYBRID)
+        acfg = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+        scfg = ServeConfig(n_clients=2, max_seq=32, page_block=8)
+        base, bank, _ = symbiosis.init_system(cfg, acfg, 2, key)
+        spec = [(0, 1, 5, 4, 0), (1, 1, 6, 8, 1), (0, 1, 5, 3, 2)]
+        outs = {}
+        for compact in (False, True):
+            rng = np.random.default_rng(3)
+            _, outs[compact] = self._serve(cfg, acfg, scfg, base, bank,
+                                           self._reqs(cfg, rng, spec),
+                                           compact=compact,
+                                           policy="opportunistic", max_b=1)
+        assert outs[True] == outs[False]
+
+    def test_compact_stats_track_active_rows(self, key):
+        """The compacted step's row count scales with ACTIVE slots, not the
+        bank: a single 1-row request over a 3x2 bank decodes 1 row/tick
+        (padded to the smallest jit bucket)."""
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="lora", rank=4)
+        scfg = ServeConfig(n_clients=3, max_seq=32, page_block=8)
+        base, bank, _ = symbiosis.init_system(cfg, acfg, 3, key)
+        eng, _ = self._serve(cfg, acfg, scfg, base, bank,
+                             self._reqs(cfg, np.random.default_rng(0),
+                                        [(0, 1, 5, 6, 0)]),
+                             compact=True, policy="opportunistic")
+        assert eng.stats["compact_rows"] == 5          # 5 decode ticks x 1 row
+        assert eng.stats["compact_rows"] + eng.stats["compact_padded"] \
+            == 5 * eng._buckets[0]                     # bucketed to 4
+
+    @pytest.mark.parametrize("compact", [False, True])
+    def test_single_token_request_never_joins_a_tick(self, key, compact):
+        """Regression (found in PR-3 review): a request admitted with
+        max_new_tokens=1 is already complete (its token came from prefill).
+        Its slot must never join a decode tick — the slot's next block-table
+        entry is unassigned, and under the global pool a stray decode write
+        through it would land in ANOTHER client's page. Setup: client 0's
+        pool fully allocated, client 1 has an in-flight request (so client 1
+        is in the serving set) plus the single-token admit with a
+        page-aligned prompt; client 0's stream must match solo serving."""
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+        scfg = ServeConfig(n_clients=2, max_seq=64, page_block=8)
+        base, bank, _ = symbiosis.init_system(cfg, acfg, 2, key)
+        rng = np.random.default_rng(5)
+        # victim prompts exhaust client 0's whole pool (2 rows x 8 pages),
+        # so global page 0 holds LIVE prompt K/V read on every tick — where
+        # a stray write through a zero/unassigned table entry would land
+        victim = Request(client_id=0,
+                         prompt=rng.integers(0, cfg.vocab, (2, 58)).astype(np.int32),
+                         max_new_tokens=6)
+        filler = Request(client_id=1,
+                         prompt=rng.integers(0, cfg.vocab, (1, 6)).astype(np.int32),
+                         max_new_tokens=12)
+        one_tok = Request(client_id=1,                      # S % page_block == 0
+                          prompt=rng.integers(0, cfg.vocab, (1, 8)).astype(np.int32),
+                          max_new_tokens=1, arrive_tick=2)
+        eng = ServingEngine(cfg, acfg, scfg, base, bank,
+                            max_batch_per_client=2, compact_decode=compact)
+        for r in (victim, filler, one_tok):
+            eng.submit(r)
+        done = {id(r): r for r in eng.run()}
+        solo = ServingEngine(cfg, acfg, scfg, base, bank,
+                             max_batch_per_client=2, compact_decode=compact)
+        solo.submit(Request(client_id=0, prompt=victim.prompt.copy(),
+                            max_new_tokens=6))
+        (ref,) = solo.run()
+        np.testing.assert_array_equal(
+            done[id(victim)].generated, ref.generated,
+            err_msg="single-token admit corrupted another client's stream")
+
+    def test_compact_requires_paged_engine(self, key):
+        cfg = tiny(DENSE)
+        acfg = AdapterConfig(method="lora", rank=4)
+        base, bank, _ = symbiosis.init_system(cfg, acfg, 2, key)
+        with pytest.raises(ValueError, match="paged"):
+            ServingEngine(cfg, acfg, ServeConfig(n_clients=2, max_seq=32),
+                          base, bank, compact_decode=True)
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("page_block", [8, 16])
+@pytest.mark.parametrize("max_b", [1, 2])           # bucket structures differ
+@pytest.mark.parametrize("occupancy", ["one_slot", "full_bank"])
+def test_compact_sweep(key, page_block, max_b, occupancy):
+    """CI tier-2 sweep: page size x jit-bucket structure x occupancy for the
+    compacted paged path (ISSUE 3 satellite)."""
+    cfg = tiny(DENSE)
+    acfg = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+    scfg = ServeConfig(n_clients=3, max_seq=32, page_block=page_block)
+    base, bank, _ = symbiosis.init_system(cfg, acfg, 3, key)
+    spec = ([(0, 1, 5, 6, 0)] if occupancy == "one_slot"
+            else [(c, max_b, 4 + c, 6, 0) for c in range(3)])
+    outs = {}
+    for compact in (False, True):
+        rng = np.random.default_rng(7)
+        eng = ServingEngine(cfg, acfg, scfg, base, bank,
+                            max_batch_per_client=max_b,
+                            compact_decode=compact)
+        for r in [Request(client_id=c,
+                          prompt=rng.integers(0, cfg.vocab, (rows, S)).astype(np.int32),
+                          max_new_tokens=new, arrive_tick=at)
+                  for (c, rows, S, new, at) in spec]:
+            eng.submit(r)
+        outs[compact] = sorted((r.client_id, r.generated.tobytes())
+                               for r in eng.run())
+    assert outs[True] == outs[False]

@@ -1,8 +1,16 @@
 """Paged KV cache: pool/block-table layout exactness + cost model.
 
-The correctness bar (ISSUE 2): byte-identical outputs vs the dense cache
-layout — the paged gather reconstructs the same dense view the attention
-math sees, invalid lanes are exact softmax zeros either way.
+Correctness bars:
+
+* ISSUE 3 (table-aware kernel): paged decode reads pages in place through
+  the block table — BYTE-identical to the gather reference (the same
+  blocked math run over a ``gather_paged_kv``-materialized dense view, via
+  ``blocks.paged_gather_oracle``), at model level for every attention
+  family.
+* ISSUE 2 (layout exactness), amended by ISSUE 3: the paged layout tracks
+  the dense layout within float tolerance (the kernel's blocked online
+  softmax re-associates the reductions the dense path does in one shot) and
+  the greedy token stream stays identical.
 """
 import jax
 import jax.numpy as jnp
@@ -11,6 +19,7 @@ import pytest
 
 from repro.config import DENSE, MOE, HYBRID, VLM, ENCDEC, ServeConfig
 from repro.core import symbiosis
+from repro.kernels.decode_attn.ref import paged_view
 from repro.models import blocks, get_model
 from repro.serving import kvcache
 from conftest import tiny
@@ -43,11 +52,50 @@ def _roundtrip(arch, n_new=4, **cache_kw):
     return out
 
 
+def _steps_close(xs, ys, tol=1e-4):
+    """Per-step logits within tolerance AND identical greedy tokens."""
+    for a, b in zip(xs, ys):
+        np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+        np.testing.assert_array_equal(np.argmax(a, -1), np.argmax(b, -1))
+
+
+class TestPagedKernelByteIdentity:
+    """ISSUE 3 acceptance: the table-aware kernel's in-place page reads are
+    byte-identical to the gather reference at MODEL level — same decode
+    steps rerun under ``blocks.paged_gather_oracle()`` (gather_paged_kv + the
+    identical blocked math) must reproduce every step's logits exactly."""
+
+    def _case(self, arch, **cache_kw):
+        direct = _roundtrip(arch, **cache_kw)
+        with blocks.paged_gather_oracle():
+            oracle = _roundtrip(arch, **cache_kw)
+        for a, b in zip(direct, oracle):
+            np.testing.assert_array_equal(a, b)
+
+    def test_dense_family(self):
+        self._case(DENSE, page_block=8)
+
+    def test_quant_pools(self):
+        self._case(DENSE, page_block=8, quant=True)
+
+    def test_single_page_and_nondividing(self):
+        self._case(DENSE, page_block=32)   # one page per slot (max_seq 32)
+        self._case(DENSE, page_block=12)   # 12 does not divide max_seq 32
+
+    @pytest.mark.tier2
+    @pytest.mark.parametrize("arch", ATTN_FAMS + [ENCDEC])
+    @pytest.mark.parametrize("page_block", [4, 8, 16, 12])
+    def test_all_families(self, arch, page_block):
+        self._case(arch, page_block=page_block)
+
+
 class TestPagedExactness:
     def test_dense_family_paged_matches_dense(self):
-        """Fast tier-1 guard: the dense family's paged layout is bit-exact."""
-        for a, b in zip(_roundtrip(DENSE), _roundtrip(DENSE, page_block=8)):
-            np.testing.assert_array_equal(a, b)
+        """Fast tier-1 guard: paged tracks dense within float tolerance and
+        the greedy stream is identical (bit-exactness holds paged-vs-paged
+        across schedules — see test_compact_decode — not across layouts:
+        the table-aware kernel's online softmax re-associates reductions)."""
+        _steps_close(_roundtrip(DENSE), _roundtrip(DENSE, page_block=8))
 
     @pytest.mark.tier2
     @pytest.mark.parametrize("arch", ATTN_FAMS + [ENCDEC])
@@ -55,16 +103,14 @@ class TestPagedExactness:
     def test_paged_matches_dense_all_families(self, arch, page_block):
         """Every attention-bearing family, several page sizes (including a
         block size that does not divide max_seq)."""
-        for a, b in zip(_roundtrip(arch), _roundtrip(arch, page_block=page_block)):
-            np.testing.assert_array_equal(a, b)
+        _steps_close(_roundtrip(arch), _roundtrip(arch, page_block=page_block))
 
     @pytest.mark.tier2
     def test_paged_quant_compose_matches_dense_quant(self):
-        """Paged + int8 must equal dense + int8 bit-for-bit (same
-        quantization points, same attention math)."""
-        for a, b in zip(_roundtrip(DENSE, quant=True),
-                        _roundtrip(DENSE, quant=True, page_block=8)):
-            np.testing.assert_array_equal(a, b)
+        """Paged + int8 tracks dense + int8 (same quantization points; the
+        kernel dequantizes per streamed page)."""
+        _steps_close(_roundtrip(DENSE, quant=True),
+                     _roundtrip(DENSE, quant=True, page_block=8))
 
 
 class TestPagedPrimitives:
@@ -94,7 +140,7 @@ class TestPagedPrimitives:
     def test_paged_view_roundtrip(self):
         pool = jnp.arange(4 * 2 * 1 * 2, dtype=jnp.float32).reshape(4, 2, 1, 2)
         tbl = jnp.array([[3, 0], [1, 2]], jnp.int32)
-        view = np.asarray(blocks.paged_view(pool, tbl))
+        view = np.asarray(paged_view(pool, tbl))
         np.testing.assert_array_equal(view[0, :2], np.asarray(pool[3]))
         np.testing.assert_array_equal(view[0, 2:], np.asarray(pool[0]))
         np.testing.assert_array_equal(view[1, :2], np.asarray(pool[1]))
