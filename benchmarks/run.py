@@ -15,11 +15,15 @@ sweep.
 tok/s, paged admission counts, compacted-decode speedups) as one combined
 JSON document, so the bench trajectory is machine-readable across PRs —
 the CI bench-smoke job writes ``BENCH_serving.json`` from the same run.
+The TRAINING sections (fine-tuning-as-a-service: shared-base vs dedicated
+replicas HBM/step-s, heterogeneous bank mix) are persisted alongside it as
+``BENCH_training.json`` in the same directory.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import time
 import traceback
@@ -28,6 +32,7 @@ BENCHES = [
     ("table2_adapter_configs", "benchmarks.bench_adapter_configs"),
     ("fig9_10_memory", "benchmarks.bench_memory"),
     ("fig11_12_multiclient", "benchmarks.bench_multiclient"),
+    ("sec5_finetune_service", "benchmarks.bench_finetune_service"),
     ("fig15_17_sharded", "benchmarks.bench_sharded"),
     ("fig18_19_heterogeneous", "benchmarks.bench_heterogeneous"),
     ("fig21_privacy", "benchmarks.bench_privacy"),
@@ -45,20 +50,30 @@ SERVING_SECTIONS = (
     "compact_decode_sparse_occupancy",
 )
 
+# training trajectory sections (--json writes them to BENCH_training.json)
+TRAINING_SECTIONS = (
+    "finetune_service_shared_base",
+    "finetune_service_bank_mix",
+)
 
-def _write_serving_json(path: str, rows: list):
+# row-schema key -> section name, across both documents
+_SCHEMA_OF = {
+    "engine": "sec37_serving_continuous_batching",
+    "layout": "paged_admission_fixed_hbm",
+    "occupancy": "compact_decode_sparse_occupancy",
+    "workload": "finetune_service_shared_base",
+    "bankmix": "finetune_service_bank_mix",
+}
+
+
+def _write_sections_json(path: str, rows: list, section_names, label: str):
     """Split a flat row list back into its sections by schema and persist."""
     import jax
 
-    schema_of = {
-        "engine": "sec37_serving_continuous_batching",
-        "layout": "paged_admission_fixed_hbm",
-        "occupancy": "compact_decode_sparse_occupancy",
-    }
-    sections = {name: [] for name in SERVING_SECTIONS}
+    sections = {name: [] for name in section_names}
     for row in rows:
-        for key, name in schema_of.items():
-            if key in row:
+        for key, name in _SCHEMA_OF.items():
+            if key in row and name in sections:
                 sections[name].append(row)
                 break
     doc = {
@@ -70,7 +85,21 @@ def _write_serving_json(path: str, rows: list):
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, default=str)
-    print(f"serving bench trajectory written to {path}")
+    print(f"{label} bench trajectory written to {path}")
+
+
+def _write_serving_json(path: str, rows: list):
+    _write_sections_json(path, rows, SERVING_SECTIONS, "serving")
+
+
+def _training_json_path(serving_path: str) -> str:
+    return os.path.join(os.path.dirname(serving_path) or ".",
+                        "BENCH_training.json")
+
+
+def _write_training_json(serving_path: str, rows: list):
+    _write_sections_json(_training_json_path(serving_path), rows,
+                         TRAINING_SECTIONS, "training")
 
 
 def main():
@@ -92,16 +121,19 @@ def main():
         for name, modname in BENCHES:
             importlib.import_module(modname)       # rot check: must import
         print(f"imported {len(BENCHES)} bench modules OK")
-        mod = importlib.import_module("benchmarks.bench_multiclient")
         t0 = time.time()
-        rows = mod.run_smoke()
+        rows = importlib.import_module("benchmarks.bench_multiclient").run_smoke()
+        train_rows = importlib.import_module(
+            "benchmarks.bench_finetune_service").run_smoke()
         print(f"bench smoke complete in {time.time() - t0:.1f}s")
         if args.json:
             _write_serving_json(args.json, rows)
+            _write_training_json(args.json, train_rows)
         return
 
     failures = []
     serving_rows = []
+    training_rows = []
     for name, modname in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -112,12 +144,16 @@ def main():
             rows = mod.run(quick=args.quick)
             if name == "fig11_12_multiclient" and rows:
                 serving_rows = rows
+            if name == "sec5_finetune_service" and rows:
+                training_rows = rows
             print(f"=== {name}: done in {time.time() - t0:.1f}s ===")
         except Exception:
             failures.append(name)
             traceback.print_exc()
     if args.json and serving_rows:
         _write_serving_json(args.json, serving_rows)
+    if args.json and training_rows:
+        _write_training_json(args.json, training_rows)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
     print("\nall benchmarks complete")

@@ -1,54 +1,74 @@
-"""Mixed serving + fine-tuning on one base (paper §4.4, Fig 22/23).
+"""Mixed serving + fine-tuning on one base (paper §4.4, Fig 22/23) — the
+full service shape, driven by the SymbiosisEngine.
 
-6 inference clients decode continuously while 2 fine-tuning clients train,
-all against the same resident frozen base — the provider time-multiplexes
-one model instance instead of deploying eight.
+Six inference requests stream through a continuous-batching ServingEngine
+while three fine-tuning jobs — LoRA, IA3 and prefix, i.e. THREE different
+PEFT methods in three banks — train through a FinetuneEngine, all against
+the SAME resident frozen base: the provider time-multiplexes one model
+instance instead of deploying one per workload. Interleaving decode ticks
+with train steps changes when work runs, never its math (each job still
+matches its dedicated run bit-for-bit; see tests/test_finetune_engine.py).
 
   PYTHONPATH=src python examples/mixed_inference_finetune.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import AdapterConfig, ServeConfig, TrainConfig
+from repro.config import AdapterConfig, FinetuneConfig, ServeConfig
 from repro.configs import get_config
 from repro.core import symbiosis
-from repro.data import make_client_batches
+from repro.serving.engine import Request, ServingEngine
+from repro.training import (FinetuneEngine, FinetuneJob, SymbiosisEngine,
+                            make_job_stream)
 
 cfg = get_config("jamba-v0.1-52b").reduced(n_layers=4, d_model=256)
 print(f"model: {cfg.name} (hybrid mamba+attn, MoE) reduced to "
       f"{cfg.n_layers}L d={cfg.d_model} E={cfg.n_experts}")
 
-N_INF, N_FT, B = 6, 2, 2
-acfg = AdapterConfig(method="lora", rank=8, targets=("q", "v"))
-tcfg = TrainConfig(n_clients=N_FT, lr=3e-3)
+N_INF, B, SEQ = 3, 2, 48
+acfg_inf = AdapterConfig(method="lora", rank=8, targets=("q", "v"))
 scfg = ServeConfig(n_clients=N_INF, max_seq=64)
 
 key = jax.random.PRNGKey(0)
-base, ft_bank, ft_opt = symbiosis.init_system(cfg, acfg, N_FT, key)
-_, inf_bank, _ = symbiosis.init_system(cfg, acfg, N_INF, jax.random.PRNGKey(1))
-caches = symbiosis.init_client_caches(cfg, N_INF, B, 64)
+base, inf_bank, _ = symbiosis.init_system(cfg, acfg_inf, N_INF, key)
 
-mixed = jax.jit(symbiosis.make_mixed_step(cfg, acfg, tcfg, scfg))
-stream = make_client_batches(cfg, N_FT, B, 64)
+serving = ServingEngine(cfg, acfg_inf, scfg, base, inf_bank,
+                        max_batch_per_client=B)
+finetune = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=4))
+engine = SymbiosisEngine(serving=serving, finetune=finetune)
 
-tok = jnp.ones((N_INF, B), jnp.int32)
+# three PEFT METHODS fine-tuning concurrently -> three banks, one base
+jobs = []
+for i, (method, targets) in enumerate([("lora", ("q", "v")),
+                                       ("ia3", ("k", "v", "down")),
+                                       ("prefix", ("q", "v"))]):
+    jobs.append(FinetuneJob(
+        acfg=AdapterConfig(method=method, rank=8, targets=targets),
+        data=make_job_stream(cfg, B, SEQ, seed=i), batch_size=B, seq_len=SEQ,
+        steps=10, lr=3e-3, warmup_steps=1, seed=i, name=method))
+    engine.submit(jobs[-1])
+
+rng = np.random.default_rng(0)
+for i in range(6):
+    engine.submit(Request(client_id=i % N_INF,
+                          prompt=rng.integers(0, cfg.vocab, (1, 8)).astype(np.int32),
+                          max_new_tokens=10, arrive_tick=i))
+
 t0 = time.time()
-losses = []
-for step in range(10):
-    ft_bank, ft_opt, caches, logits, metrics = mixed(
-        base, ft_bank, ft_opt, stream.batch(step), inf_bank, caches, tok, step)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    losses.append(float(np.asarray(metrics["loss"]).mean()))
+done_requests, done_jobs = engine.run()
 dt = time.time() - t0
 
-inf_tokens = 10 * N_INF * B
-ft_tokens = 10 * N_FT * B * 64
-print(f"10 mixed steps in {dt:.1f}s: {inf_tokens} inference tokens decoded, "
-      f"{ft_tokens} fine-tuning tokens trained "
-      f"({(inf_tokens + ft_tokens) / dt:,.0f} tok/s combined)")
-print(f"fine-tuning loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
-print(f"decode positions advanced to {int(np.asarray(caches['pos']).max())}")
+inf_tokens = sum(r.generated.size for r in done_requests)
+ft_tokens = finetune.stats["train_tokens"]
+print(f"service drained in {dt:.1f}s: {len(done_requests)} requests "
+      f"({inf_tokens} tokens decoded) + {len(done_jobs)} fine-tuning jobs "
+      f"({ft_tokens} tokens trained) = {(inf_tokens + ft_tokens) / dt:,.0f} tok/s combined")
+print(f"interleaving: {engine.stats['decode_ticks']} decode ticks / "
+      f"{engine.stats['train_ticks']} train ticks, "
+      f"{len(finetune._banks)} adapter banks (lora+ia3+prefix) on ONE base")
+for j in done_jobs:
+    print(f"  job {j.name:6s}: loss {j.result.losses[0]:.3f} -> "
+          f"{j.result.losses[-1]:.3f} over {j.result.step} steps")
 print("mixed workload OK")

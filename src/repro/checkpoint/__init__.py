@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
+                                   save_job_state, restore_job_state,
+                                   latest_step)

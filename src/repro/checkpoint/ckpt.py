@@ -71,6 +71,28 @@ def restore_checkpoint(directory: str, step: int, like: Any, *, name: str = "sta
     return jax.tree.unflatten(treedef, out)
 
 
+def save_job_state(directory: str, step: int, adapter: Any, opt: Any, *,
+                   name: str = "job") -> str:
+    """Persist one fine-tuning JOB's client-side state — adapter params +
+    AdamW state — as a single checkpoint (the as-a-service persistence
+    unit: a retired job carries this out, a resumed job carries it back in
+    via ``FinetuneJob(init_adapter=..., init_opt=..., start_step=step)``).
+    The roundtrip is exact (float arrays stored verbatim by np.save), which
+    is what makes resume-after-retire bitwise."""
+    return save_checkpoint(directory, step, {"adapter": adapter, "opt": opt},
+                           name=name)
+
+
+def restore_job_state(directory: str, step: int, like_adapter: Any,
+                      like_opt: Any, *, name: str = "job"):
+    """Inverse of ``save_job_state``: returns ``(adapter, opt)`` restored
+    into the structures of the given exemplars."""
+    out = restore_checkpoint(directory, step,
+                             {"adapter": like_adapter, "opt": like_opt},
+                             name=name)
+    return out["adapter"], out["opt"]
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None

@@ -170,6 +170,29 @@ class TrainConfig:
 
 
 @dataclass(frozen=True)
+class FinetuneConfig:
+    """Fine-tuning-as-a-service configuration (``training.FinetuneEngine``).
+
+    Service-level knobs only; per-JOB choices (PEFT method/rank/targets,
+    batch size, optimizer schedule, microbatching, step budget) live on
+    ``training.FinetuneJob`` — heterogeneity across jobs is the point.
+
+    * ``max_jobs`` — service-wide concurrent-job ceiling across all banks.
+      Admission scans the queue in submit order each tick; a job that
+      doesn't fit yet stays queued WITHOUT blocking later jobs (the same
+      continuous-admission rule as the serving engine — strict FIFO
+      head-of-line blocking is deliberately not implemented).
+    * ``memory_optimized`` — §3.6 frozen-base backward for every job (the
+      Symbiosis-MO path); False emulates the torch-like baseline.
+    * ``remat`` — activation checkpointing of the layer body inside every
+      job's step.
+    """
+    max_jobs: int = 16
+    memory_optimized: bool = True
+    remat: bool = False
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Serving-engine configuration.
 

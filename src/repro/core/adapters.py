@@ -51,6 +51,17 @@ def _rwkv_target_dims(cfg: ModelConfig) -> Dict[str, tuple]:
 # RWKV has no q projection; map the conventional q/v targets onto r/v.
 _RWKV_ALIAS = {"q": "r"}
 
+# Sensible default target sets per PEFT method (what the CLI driver and
+# benchmarks hand to jobs that don't pick their own): LoRA on the full
+# attention block, IA3 on its paper placements (k/v activations + the FFN
+# intermediate), prefix on q/v (the prefix K/V ride model code, not the
+# linear hook — targets only gate which layers carry prefixes).
+DEFAULT_TARGETS = {
+    "lora": ("q", "k", "v", "o"),
+    "ia3": ("k", "v", "down"),
+    "prefix": ("q", "v"),
+}
+
 
 def target_dims(cfg: ModelConfig):
     return _rwkv_target_dims(cfg) if cfg.arch == RWKV else _dense_target_dims(cfg)
@@ -131,6 +142,23 @@ def init_client_bank(cfg: ModelConfig, acfg: AdapterConfig, n_clients: int, key,
     """Stack n_clients adapters along a leading client axis (one bank)."""
     return jax.vmap(lambda k: init_adapter(cfg, acfg, k, dtype))(
         jax.random.split(key, n_clients))
+
+
+def adapter_shapes(cfg: ModelConfig, acfg: AdapterConfig):
+    """Abstract (never-allocated) shape tree of one client's adapter."""
+    return jax.eval_shape(
+        lambda: init_adapter(cfg, acfg, jax.random.PRNGKey(0)))
+
+
+def adapter_bytes(cfg: ModelConfig, acfg: AdapterConfig) -> tuple:
+    """(param_count, param_bytes) of one client's adapter — what a
+    fine-tuning job pins beyond the shared base (admission accounting:
+    the AdamW moments add 2 × param_count × 4 bytes on top)."""
+    import numpy as np
+    leaves = jax.tree.leaves(adapter_shapes(cfg, acfg))
+    n = sum(int(np.prod(x.shape)) for x in leaves)
+    nbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+    return n, nbytes
 
 
 # ---------------------------------------------------------------------------

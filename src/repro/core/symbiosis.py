@@ -9,14 +9,22 @@ a *bank* of clients (fine-tuning trainers and/or inference sessions):
   per-client batch) carries a leading client axis (vmapped); base matmuls see
   the merged token batch, so cross-client batching happens inside one XLA
   matmul — the in-graph form of the paper's base-executor batching (§3.7).
+* ``make_compact_train_step`` — the fine-tuning-as-a-service tick
+  (``training.FinetuneEngine``): a job-masked, slot-compacted step over one
+  BANK of jobs, each with its own traced hyperparameters/schedule position,
+  gathered into a bucketed row batch and scattered back under a row mask.
+  Runs the same per-row program as ``make_baseline_train_step``
+  (``make_row_grad_fn``), which is what makes a served job's grads/params
+  bitwise-equal to its dedicated run.
 * ``make_multi_client_decode_step`` / ``prefill`` — inference banks sharing
   the base, one token per step per request against per-client KV caches.
 * ``make_mixed_step`` — inference + fine-tuning clients time-share the base
-  in one step (paper §4.4).
+  in one step (paper §4.4). The live-service form is
+  ``training.SymbiosisEngine`` interleaving engine ticks.
 
-The torch-like comparison baseline (each job re-differentiates a private
-base copy, saving activations) is available via
-``memory_optimized_backward=False`` + ``baseline_dedicated_base=True``.
+The torch-like comparison baseline (each job differentiates through a
+private base copy, saving activations) is ``make_baseline_train_step``'s
+default (``memory_optimized=False``).
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ from repro.core import adapters as adapters_lib
 from repro.core.virtlayer import make_client_ctx, make_compact_ctx
 from repro.models import get_model
 from repro.models.losses import lm_loss
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_init, adamw_update, adamw_update_hyper
 from repro.optim.schedules import warmup_cosine
 
 
@@ -112,27 +120,170 @@ def make_multi_client_train_step(cfg: ModelConfig, acfg: AdapterConfig,
     return train_step
 
 
-def make_baseline_train_step(cfg: ModelConfig, acfg: AdapterConfig,
-                             tcfg: TrainConfig):
-    """Torch-like baseline: ONE client, differentiates through the base tree
-    (grads discarded) — forces activation residuals for every base linear,
-    emulating the paper's non-memory-optimized baseline for Fig 9/10."""
-    model = get_model(cfg)
-    ctx = make_client_ctx(cfg, acfg, memory_optimized=False)
+def make_row_grad_fn(cfg: ModelConfig, acfg: AdapterConfig, *,
+                     remat: bool = True, memory_optimized: bool = True,
+                     microbatch: int = 0, moe_dispatch: str = "scatter",
+                     capacity_factor=None, differentiate_base: bool = False):
+    """One JOB's loss-and-grads closure: ``fn(adapter, base, batch[B, ...])
+    -> (loss, adapter_grads)``, with ``microbatch > 1`` accumulating grads
+    over a ``lax.scan`` of B/microbatch-sized slices (mean of per-microbatch
+    means, f32 accumulators — the same math as the bank-wide step's
+    accumulation).
 
-    def loss(adapter_and_base, batch):
-        adapter, base = adapter_and_base
-        logits, aux = model.forward(base, batch, ctx, adapter, remat=tcfg.remat)
+    This single closure is the byte-identity contract of fine-tuning as a
+    service: ``make_compact_train_step`` vmaps it over the gathered bank
+    rows and ``make_baseline_train_step`` runs it solo, so a job's grads in
+    a bank are the SAME program as its dedicated run — equality is by
+    construction, not by tolerance. ``differentiate_base=True`` additionally
+    differentiates through the base tree (grads discarded), forcing
+    activation residuals for every base linear — the torch-like memory
+    baseline of Fig 9/10."""
+    model = get_model(cfg)
+    ctx = make_client_ctx(cfg, acfg, memory_optimized=memory_optimized)
+
+    def client_loss(adapter, base, batch):
+        logits, aux = model.forward(base, batch, ctx, adapter, remat=remat,
+                                    moe_dispatch=moe_dispatch,
+                                    capacity_factor=capacity_factor)
         return lm_loss(logits, batch["labels"], batch.get("mask"), aux)
+
+    if differentiate_base:
+        def pair_loss(adapter_and_base, batch):
+            adapter, base = adapter_and_base
+            return client_loss(adapter, base, batch)
+
+        vg = jax.value_and_grad(pair_loss)
+
+        def grad_fn(adapter, base, batch):
+            l, (g_adapter, _g_base_discarded) = vg((adapter, base), batch)
+            return l, g_adapter
+    else:
+        grad_fn = jax.value_and_grad(client_loss)
+
+    nmb = microbatch
+    if not nmb or nmb <= 1:
+        return grad_fn
+
+    def accum_grad_fn(adapter, base, batch):
+        B = batch["tokens"].shape[0]
+        if B % nmb or B == nmb:
+            return grad_fn(adapter, base, batch)
+
+        def split(x):   # [B, ...] -> [nmb, B/nmb, ...]
+            return x.reshape(nmb, B // nmb, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), adapter)
+
+        def body(carry, mbatch):
+            l_acc, g_acc = carry
+            l, g = grad_fn(adapter, base, mbatch)
+            g_acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32) / nmb,
+                                 g_acc, g)
+            return (l_acc + l / nmb, g_acc), None
+
+        (l, g), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), mb)
+        return l, g
+
+    return accum_grad_fn
+
+
+def make_baseline_train_step(cfg: ModelConfig, acfg: AdapterConfig,
+                             tcfg: TrainConfig, *,
+                             memory_optimized: bool = False,
+                             moe_dispatch: str = "scatter",
+                             capacity_factor=None):
+    """Dedicated single-job trainer — the oracle every FinetuneEngine job is
+    compared against, AND (by default) the torch-like memory baseline.
+
+    ``memory_optimized=False`` (default) differentiates through the base
+    tree (grads discarded), forcing activation residuals for every base
+    linear — the paper's non-memory-optimized baseline for Fig 9/10.
+    ``memory_optimized=True`` runs the §3.6 client path, exactly the
+    program a bank row executes. Either way the step runs the SAME
+    ``make_row_grad_fn`` closure the compact multi-job step vmaps
+    (``tcfg.microbatch`` accumulation included), so a job served by the
+    engine must reproduce this step's grads and params bit-for-bit."""
+    row_grads = make_row_grad_fn(cfg, acfg, remat=tcfg.remat,
+                                 memory_optimized=memory_optimized,
+                                 microbatch=tcfg.microbatch,
+                                 moe_dispatch=moe_dispatch,
+                                 capacity_factor=capacity_factor,
+                                 differentiate_base=not memory_optimized)
 
     def train_step(base, adapter, opt, batch, step):
         lr = warmup_cosine(step, tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
-        (l, grads) = jax.value_and_grad(loss)((adapter, base), batch)
-        g_adapter, _g_base_discarded = grads
-        adapter, opt, gnorm = adamw_update(adapter, g_adapter, opt, lr,
+        l, grads = row_grads(adapter, base, batch)
+        adapter, opt, gnorm = adamw_update(adapter, grads, opt, lr,
                                            weight_decay=tcfg.weight_decay,
                                            max_grad_norm=tcfg.max_grad_norm)
         return adapter, opt, {"loss": l, "gnorm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def make_compact_train_step(cfg: ModelConfig, acfg: AdapterConfig, *,
+                            microbatch: int = 0, remat: bool = True,
+                            memory_optimized: bool = True,
+                            moe_dispatch: str = "scatter",
+                            capacity_factor=None):
+    """Job-masked, slot-compacted multi-job train step — the FinetuneEngine's
+    tick over ONE bank (jobs sharing an AdapterConfig + batch shape +
+    microbatching, each with its OWN AdamW state, schedule position and
+    data).
+
+    fn(base, bank, opt, batch, slots, row_mask, hyper)
+      -> (new bank, new opt, metrics)
+
+    * ``bank`` / ``opt``  — job-stacked trees with leading [cap] bank-slot
+      axis; only the gathered rows' slots are ever rewritten, so slots
+      outside this call (retired jobs' leftovers, other jobs between their
+      admission and this tick) stay bitwise untouched — the optimizer-state
+      isolation guarantee under join/leave churn.
+    * ``batch``           — leaves [R, B, ...]: row i is the job in bank
+      slot ``slots[i]`` feeding its OWN per-step batch. R is a call-site
+      property; the engine buckets the active-job count to a few static
+      sizes to bound recompilation (the training analogue of the compacted
+      decode tick). ``row_mask`` False marks padding rows: their loss is
+      garbage and every write they produce is dropped at the scatter.
+    * ``hyper``           — per-row traced hyperparameters, [R] arrays:
+      ``step`` (the job's own schedule position), ``lr``, ``warmup``,
+      ``total`` (its warmup-cosine schedule), ``wd``, ``gnorm`` (clip
+      threshold; inf = no clipping). Heterogeneous jobs ride one vmapped
+      step because ``adamw_update_hyper`` is bitwise-equal to the static
+      conditional form at every setting.
+
+    Per-row grads come from the same ``make_row_grad_fn`` closure the solo
+    ``make_baseline_train_step`` runs, vmapped with the base unbatched —
+    the merged token batch hits the shared base matmuls as ONE XLA op
+    (§3.7 base-executor batching) while each job's grads and updated
+    adapter params stay bit-for-bit equal to its dedicated run.
+    """
+    row_grads = make_row_grad_fn(cfg, acfg, remat=remat,
+                                 memory_optimized=memory_optimized,
+                                 microbatch=microbatch,
+                                 moe_dispatch=moe_dispatch,
+                                 capacity_factor=capacity_factor)
+
+    def train_step(base, bank, opt, batch, slots, row_mask, hyper):
+        cap = jax.tree.leaves(bank)[0].shape[0]
+        slots = slots.astype(jnp.int32)
+        params = jax.tree.map(lambda x: x[slots], bank)
+        ostate = jax.tree.map(lambda x: x[slots], opt)
+        losses, grads = jax.vmap(row_grads, in_axes=(0, None, 0))(
+            params, base, batch)
+        lr = warmup_cosine(hyper["step"], hyper["lr"], hyper["warmup"],
+                           hyper["total"])
+        new_p, new_o, gnorms = jax.vmap(adamw_update_hyper)(
+            params, grads, ostate, lr, hyper["wd"], hyper["gnorm"])
+        drop = jnp.where(row_mask, slots, cap)       # cap is out of bounds
+
+        def scatter(full, rows):
+            return full.at[drop].set(rows.astype(full.dtype), mode="drop")
+
+        new_bank = jax.tree.map(scatter, bank, new_p)
+        new_opt = jax.tree.map(scatter, opt, new_o)
+        return new_bank, new_opt, {"loss": losses, "gnorm": gnorms, "lr": lr}
 
     return train_step
 

@@ -1,13 +1,16 @@
-"""Multi-client fine-tuning driver (end-to-end; deliverable b).
+"""Multi-job fine-tuning driver — a thin wrapper over the FinetuneEngine
+(fine-tuning as a service; deliverable b).
 
 On this CPU container it trains REDUCED variants of any assigned arch for
 real steps (loss decreases); on TPU hardware the same driver lowers the
 full config onto the production mesh (the mesh/sharding path is proven by
-``dryrun.py``).
+``dryrun.py``). ``--peft mixed`` cycles LoRA / IA3 / prefix across jobs —
+heterogeneous banks sharing one engine and one base.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --clients 4 \
-      --steps 50 --seq 128 --batch 2 [--peft lora|ia3|prefix] [--full-size]
+      --steps 50 --seq 128 --batch 2 [--peft lora|ia3|prefix|mixed] \
+      [--full-size] [--ckpt-dir DIR]
 """
 from __future__ import annotations
 
@@ -15,25 +18,30 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
-from repro.config import AdapterConfig, TrainConfig
+from repro.config import AdapterConfig, FinetuneConfig
 from repro.configs import ARCHS, get_config
-from repro.core import symbiosis
-from repro.data import make_client_batches
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import save_job_state
+from repro.core.adapters import DEFAULT_TARGETS
+from repro.models import get_model
+from repro.training import FinetuneEngine, FinetuneJob, make_job_stream
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-4b")
-    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent fine-tuning jobs")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=2,
-                    help="per-client batch (paper uses 2)")
-    ap.add_argument("--peft", default="lora", choices=("lora", "ia3", "prefix"))
+                    help="per-job batch (paper uses 2)")
+    ap.add_argument("--peft", default="lora",
+                    choices=("lora", "ia3", "prefix", "mixed"))
     ap.add_argument("--rank", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (TPU); default: reduced smoke size")
     ap.add_argument("--no-memory-optimized", action="store_true")
@@ -45,40 +53,49 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = cfg.reduced(n_layers=args.layers, d_model=args.d_model)
-    acfg = AdapterConfig(method=args.peft, rank=args.rank,
-                         targets=("q", "k", "v", "o"))
-    tcfg = TrainConfig(n_clients=args.clients, lr=args.lr, total_steps=args.steps,
-                       warmup_steps=max(1, args.steps // 10),
-                       memory_optimized_backward=not args.no_memory_optimized)
 
-    key = jax.random.PRNGKey(tcfg.seed)
-    base, bank, opt = symbiosis.init_system(cfg, acfg, args.clients, key)
-    step_fn = jax.jit(symbiosis.make_multi_client_train_step(cfg, acfg, tcfg),
-                      donate_argnums=(1, 2))
-    stream = make_client_batches(cfg, args.clients, args.batch, args.seq)
+    key = jax.random.PRNGKey(0)
+    base = get_model(cfg).init_params(key)
+    fcfg = FinetuneConfig(max_jobs=args.clients,
+                          memory_optimized=not args.no_memory_optimized)
+    engine = FinetuneEngine(cfg, base, fcfg=fcfg)
 
-    print(f"[train] {cfg.name} | {args.clients} clients × {args.peft} "
+    methods = (("lora", "ia3", "prefix") if args.peft == "mixed"
+               else (args.peft,))
+    jobs = []
+    for c in range(args.clients):
+        method = methods[c % len(methods)]
+        acfg = AdapterConfig(method=method, rank=args.rank,
+                             targets=DEFAULT_TARGETS[method])
+        jobs.append(FinetuneJob(
+            acfg=acfg, data=make_job_stream(cfg, args.batch, args.seq, seed=c),
+            batch_size=args.batch, seq_len=args.seq, steps=args.steps,
+            lr=args.lr, warmup_steps=max(1, args.steps // 10),
+            microbatch=args.microbatch, seed=c, name=f"{method}-{c}"))
+        engine.submit(jobs[-1])
+
+    print(f"[train] {cfg.name} | {args.clients} jobs x {args.peft} "
           f"(rank {args.rank}) | seq {args.seq} batch {args.batch}")
-    hist = []
     t0 = time.time()
-    for step in range(args.steps):
-        batch = stream.batch(step)
-        bank, opt, m = step_fn(base, bank, opt, batch, step)
-        loss = jax.device_get(m["loss"])
-        hist.append(loss.mean().item())
-        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
-            tok_s = (args.clients * args.batch * args.seq * (step + 1)
-                     / (time.time() - t0))
-            print(f"  step {step:4d} loss/client={[round(x,3) for x in loss.tolist()]} "
-                  f"({tok_s:,.0f} tok/s)")
-    first, last = hist[0], hist[-1]
+    tick = 0
+    while engine.pending():
+        engine.train_tick()
+        tick += 1
+        if tick % max(1, args.steps // 10) == 0 or not engine.pending():
+            losses = [round(j.losses[-1], 3) for j in jobs if j.losses]
+            tok_s = engine.stats["train_tokens"] / (time.time() - t0)
+            print(f"  tick {tick:4d} loss/job={losses} ({tok_s:,.0f} tok/s)")
+    first = float(np.mean([j.result.losses[0] for j in jobs]))
+    last = float(np.mean([j.result.losses[-1] for j in jobs]))
     print(f"[train] done: mean loss {first:.3f} -> {last:.3f} "
-          f"({100*(first-last)/first:.0f}% drop) in {time.time()-t0:.1f}s")
+          f"({100 * (first - last) / first:.0f}% drop) in {time.time() - t0:.1f}s"
+          f" | banks={len(engine._banks)} steps={engine.stats['train_steps']}")
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.steps, bank, name="bank")
-        save_checkpoint(args.ckpt_dir, args.steps, jax.tree.map(lambda x: x, opt),
-                        name="opt")
-        print(f"[train] checkpoint -> {args.ckpt_dir}/step_{args.steps:08d}")
+        for j in jobs:
+            save_job_state(args.ckpt_dir, j.result.step, j.result.adapter,
+                           j.result.opt, name=j.name)
+        print(f"[train] per-job checkpoints -> "
+              f"{args.ckpt_dir}/step_{jobs[0].result.step:08d}")
     return first, last
 
 

@@ -1,2 +1,3 @@
-from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.adamw import (adamw_init, adamw_update, adamw_update_hyper,
+                               clip_by_global_norm)
 from repro.optim.schedules import warmup_cosine

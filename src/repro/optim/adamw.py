@@ -60,3 +60,44 @@ def adamw_update(params, grads, state: AdamWState, lr, *, b1=0.9, b2=0.999,
     new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
     new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
     return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def adamw_update_hyper(params, grads, state: AdamWState, lr, weight_decay,
+                       max_grad_norm, *, b1=0.9, b2=0.999, eps=1e-8):
+    """``adamw_update`` with TRACED per-call hyperparameters.
+
+    The multi-job train step (core.symbiosis.make_compact_train_step) runs a
+    bank of jobs whose lr / weight-decay / clip settings differ PER ROW, so
+    they arrive as traced scalars and the Python conditionals of
+    ``adamw_update`` can't branch on them. This variant applies the clip
+    scale and the decay term unconditionally — which is bitwise-equal to the
+    conditional form at every setting: "no clip" is encoded as
+    ``max_grad_norm = inf`` (scale is exactly 1.0 and ``g * 1.0 == g``), and
+    ``weight_decay = 0.0`` contributes exactly ``u + 0.0 * p == u``. That
+    equivalence is what lets a bank row match its dedicated
+    ``make_baseline_train_step`` run bit-for-bit while other rows use
+    different hyperparameters.
+    """
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm

@@ -54,6 +54,19 @@ Architecture
   execution for the admitted client, scattered into the bank cache under a
   slot mask — the seed engine instead ran a bank-wide prefill, paying C×
   base compute per admitted request.
+* **Ragged shared prefill.** Several same-client admissions in one tick
+  share ONE masked prefill call: each row carries its own prompt
+  right-padded to the longest prompt's jit bucket and its own true
+  ``lengths`` entry (positions, causal mask, last-token logit gather and
+  paged pool-write bounds are all per-row). Byte-identical to sequential
+  admission — rows are independent — while paying one model execution per
+  client per tick instead of one per request. Attention families only
+  (right-padding would pollute recurrent state); ``ragged_prefill=False``
+  restores per-request calls.
+* **Tick API.** ``service_tick()`` runs ONE admission+decode+retire round;
+  ``run()`` loops it to completion. ``training.SymbiosisEngine``
+  interleaves these ticks with a ``FinetuneEngine``'s train steps so
+  inference and fine-tuning time-share the same resident base (§4.4).
 * **Tick loop.** Every tick the scheduler policy (``core.scheduler.
   TickPolicy`` — lockstep / nolockstep / opportunistic) picks which *ready*
   clients join the batched decode (``symbiosis.make_masked_decode_step``);
@@ -158,7 +171,8 @@ class ServingEngine:
                  router=None, policy: Optional[str] = None,
                  bank_prefill: bool = False,
                  max_inflight_per_client: Optional[int] = None,
-                 compact_decode: Optional[bool] = None):
+                 compact_decode: Optional[bool] = None,
+                 ragged_prefill: Optional[bool] = None):
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
         self.base = base_params
         self.bank = client_bank
@@ -231,7 +245,25 @@ class ServingEngine:
             self._buckets.append(b)
             b *= 2
         self._buckets.append(total_rows)
+        # Ragged shared prefill (ROADMAP): several same-client admissions in
+        # one tick batch into ONE masked prefill call with per-row lengths.
+        # Right-padding to the longest prompt is exact for attention
+        # families only; recurrent state (hybrid/RWKV) would be polluted by
+        # pads, so those families keep one call per request.
+        can_ragged = cfg.arch in (DENSE, MOE, VLM) and not bank_prefill
+        if ragged_prefill and not can_ragged:
+            raise ValueError("ragged_prefill right-pads rows to a shared "
+                             "bucket; attention families only (and not the "
+                             "bank_prefill ablation)")
+        self._ragged = can_ragged if ragged_prefill is None else ragged_prefill
         self._queue: List[Request] = []
+        # incremental service loop state: SymbiosisEngine interleaves
+        # service_tick() with a FinetuneEngine's train ticks; run() is the
+        # standalone drive-to-completion loop over the same method
+        self._waiting: deque = deque()
+        self._inflight: List[Request] = []
+        self._done: List[Request] = []
+        self._tick = 0
         # slot tables + per-request bookkeeping (keyed by id(req); requests
         # stay alive in the done list for the whole run)
         self._slot_owner = [[None] * self.max_b for _ in range(self.n_clients)]
@@ -248,7 +280,8 @@ class ServingEngine:
         self._placement: Dict[int, object] = {}
         self.stats = {"ticks": 0, "decode_tokens": 0, "prefill_tokens": 0,
                       "batched_clients": 0, "admitted": 0, "prefill_calls": 0,
-                      "peak_inflight": 0, "compact_rows": 0, "compact_padded": 0}
+                      "peak_inflight": 0, "compact_rows": 0, "compact_padded": 0,
+                      "ragged_prefill_batches": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -265,63 +298,102 @@ class ServingEngine:
         req.submit_t = time.perf_counter()
         self._queue.append(req)
 
+    def pending(self) -> bool:
+        """True while any request is queued, waiting, or in flight."""
+        return bool(self._queue or self._waiting or self._inflight)
+
+    @property
+    def n_inflight(self) -> int:
+        """Requests currently holding slots/pages/router capacity (what a
+        co-scheduler checks before treating an admission stall as fatal)."""
+        return len(self._inflight)
+
+    def drain_done(self) -> List[Request]:
+        """Hand over (and forget) the finished-request list."""
+        done, self._done = self._done, []
+        return done
+
+    def service_tick(self) -> bool:
+        """ONE engine tick: admission (+ the admitted requests' prefills),
+        the policy-chosen decode tick, retirement. The incremental form of
+        ``run()`` — ``SymbiosisEngine`` interleaves these with a
+        FinetuneEngine's train steps against the same base. Returns True
+        while requests remain."""
+        if self._queue:
+            # merge new submissions (mid-run submits are allowed; order is
+            # stable for equal arrive_ticks)
+            self._waiting = deque(sorted(list(self._waiting) + self._queue,
+                                         key=lambda r: r.arrive_tick))
+            self._queue.clear()
+        waiting, inflight = self._waiting, self._inflight
+        if not waiting and not inflight:
+            return False
+        tick = self._tick
+        # -- admission (continuous except under lockstep's batch barrier);
+        # slots/pages/router capacity are claimed per request, then all of
+        # this tick's admissions prefill together (ragged where possible)
+        admitted_any = False
+        newly = []
+        attempted = [r for r in waiting if r.arrive_tick <= tick]
+        if self.policy.admit_now(len(inflight)):
+            for req in attempted:
+                slots = self._try_admit(req)
+                if slots is not None:
+                    waiting.remove(req)
+                    inflight.append(req)
+                    newly.append((req, slots))
+                    admitted_any = True
+        self._prefill_admitted(newly)
+
+        self.stats["peak_inflight"] = max(self.stats["peak_inflight"],
+                                          len(inflight))
+        # -- decode tick over the policy-chosen subset of ready clients
+        ready = sorted({r.client_id for r in inflight if self._left[id(r)] > 0})
+        serve = self.policy.serving_set(ready)
+        if serve:
+            self._decode_tick(set(serve), inflight)
+
+        # -- retire finished sequences; their slots free immediately
+        for req in list(inflight):
+            if self._left[id(req)] == 0:
+                self._retire(req)
+                inflight.remove(req)
+                self._done.append(req)
+
+        if not inflight and attempted and not admitted_any and not serve:
+            # nothing in flight to ever free capacity, and admission of
+            # every due request just failed -> stuck forever
+            raise RuntimeError(
+                f"{len(attempted)} request(s) can never be admitted "
+                f"(no free capacity and nothing in flight)")
+        tick += 1
+        if not inflight and waiting and all(r.arrive_tick > tick for r in waiting):
+            tick = min(r.arrive_tick for r in waiting)           # idle skip
+        self._tick = tick
+        return bool(waiting or inflight)
+
     def run(self) -> List[Request]:
         """Serve all queued requests to completion; returns finished list."""
-        waiting = deque(sorted(self._queue, key=lambda r: r.arrive_tick))
-        self._queue.clear()
-        inflight: List[Request] = []
-        done: List[Request] = []
-        tick = 0
-        while waiting or inflight:
-            # -- admission (continuous except under lockstep's batch barrier)
-            admitted_any = False
-            attempted = [r for r in waiting if r.arrive_tick <= tick]
-            if self.policy.admit_now(len(inflight)):
-                for req in attempted:
-                    if self._try_admit(req):
-                        waiting.remove(req)
-                        inflight.append(req)
-                        admitted_any = True
-
-            self.stats["peak_inflight"] = max(self.stats["peak_inflight"],
-                                              len(inflight))
-            # -- decode tick over the policy-chosen subset of ready clients
-            ready = sorted({r.client_id for r in inflight if self._left[id(r)] > 0})
-            serve = self.policy.serving_set(ready)
-            if serve:
-                self._decode_tick(set(serve), inflight)
-
-            # -- retire finished sequences; their slots free immediately
-            for req in list(inflight):
-                if self._left[id(req)] == 0:
-                    self._retire(req)
-                    inflight.remove(req)
-                    done.append(req)
-
-            if not inflight and attempted and not admitted_any and not serve:
-                # nothing in flight to ever free capacity, and admission of
-                # every due request just failed -> stuck forever
-                raise RuntimeError(
-                    f"{len(attempted)} request(s) can never be admitted "
-                    f"(no free capacity and nothing in flight)")
-            tick += 1
-            if not inflight and waiting and all(r.arrive_tick > tick for r in waiting):
-                tick = min(r.arrive_tick for r in waiting)       # idle skip
-        return done
+        while self.service_tick():
+            pass
+        return self.drain_done()
 
     # ------------------------------------------------------------------
     # admission + prefill
     # ------------------------------------------------------------------
-    def _try_admit(self, req: Request) -> bool:
+    def _try_admit(self, req: Request) -> Optional[List[int]]:
+        """Claim capacity for a request: slots, pages (under paging), and a
+        router placement. Returns the claimed slot list (admitted — the
+        caller prefills via ``_prefill_admitted``) or None (stays queued)."""
         c = req.client_id
         B, S = req.prompt.shape
         if self.max_inflight is not None:
             owners = {id(o) for o in self._slot_owner[c] if o is not None}
             if len(owners) >= self.max_inflight:
-                return False
+                return None
         free = [s for s in range(self.max_b) if self._slot_owner[c][s] is None]
         if len(free) < B:
-            return False
+            return None
         ctx_tokens = S + req.max_new_tokens
         if self._paged:
             # Reserve pages for the FULL context up front (deadlock freedom:
@@ -332,7 +404,7 @@ class ServingEngine:
             prompt_pages = -(-S // self._blk)
             if (len(self._free_pages[c]) - self._reserved[c]
                     < pages_per_row * B):
-                return False
+                return None
         placement = None
         if self.router is not None:
             # charge what the layout pins: whole pages under paging, a full
@@ -345,7 +417,7 @@ class ServingEngine:
                                               alloc_tokens=alloc_tokens,
                                               quant=self._quant)
             except RuntimeError:
-                return False                      # stays queued until capacity frees
+                return None                      # stays queued until capacity frees
         slots = free[:B]
         if self._paged:
             for s in slots:
@@ -358,8 +430,17 @@ class ServingEngine:
             self._resv_of[id(req)] = (pages_per_row - prompt_pages) * B
             self._reserved[c] += self._resv_of[id(req)]
             self._tbl_dirty = True
-        first_logits = self._prefill_request(req, slots)
+        self._placement[id(req)] = placement
+        for s in slots:
+            self._slot_owner[c][s] = req
+        return slots
 
+    def _finish_admit(self, req: Request, slots: List[int],
+                      first_logits: np.ndarray):
+        """Post-prefill admission bookkeeping: sample the first token and
+        activate the request's slots for decode ticks."""
+        c = req.client_id
+        B = req.prompt.shape[0]
         sp = req.sampling or SamplingParams()
         self._rng[id(req)] = np.random.default_rng([sp.seed, c])
         first = self._sample(first_logits, req)
@@ -368,9 +449,6 @@ class ServingEngine:
         self._last_tok[c, slots] = first
         self._left[id(req)] = req.max_new_tokens - 1
         self._slots_of[id(req)] = slots
-        self._placement[id(req)] = placement
-        for s in slots:
-            self._slot_owner[c][s] = req
         if self._left[id(req)] > 0:
             # a request admitted with max_new_tokens == 1 is already done
             # (its one token came from prefill) and must never join a decode
@@ -379,9 +457,60 @@ class ServingEngine:
             self._active_mask[c, slots] = True
             self._active_slots[c] = sorted(self._active_slots[c] + slots)
         self.stats["admitted"] += 1
+
+    def _prefill_admitted(self, newly: List[tuple]):
+        """Prefill this tick's admissions. With ``ragged_prefill`` (default
+        on attention families) the same client's admissions share ONE
+        masked prefill call — each row carries its own prompt and true
+        length — instead of one call per request; other families and the
+        ``bank_prefill`` ablation keep per-request calls. Byte-identical to
+        sequential admission: prefill rows are independent (per-row causal
+        attention, length-bounded writes) and the slot masks are disjoint."""
+        if not newly:
+            return
+        if not self._ragged:
+            for req, slots in newly:
+                logits = (self._prefill_request_bankwide(req, slots)
+                          if self.bank_prefill
+                          else self._prefill_request(req, slots))
+                self._finish_admit(req, slots, logits)
+            return
+        by_client: Dict[int, List[tuple]] = {}
+        for req, slots in newly:
+            by_client.setdefault(req.client_id, []).append((req, slots))
+        for c, items in by_client.items():
+            if len(items) == 1:
+                req, slots = items[0]
+                self._finish_admit(req, slots,
+                                   self._prefill_request(req, slots))
+                continue
+            logits = self._prefill_ragged(c, items)
+            for req, slots in items:
+                self._finish_admit(req, slots, logits[slots])
+
+    def _prefill_ragged(self, c: int, items: List[tuple]) -> np.ndarray:
+        """One ragged masked prefill for several same-client admissions:
+        rows are right-padded to the longest prompt's jit bucket and each
+        row's true ``lengths`` entry drives its positions, causal mask,
+        last-token logit gather and (under paging) pool-write bounds.
+        Returns the full [max_b, V] logits block."""
+        S_pad = self._bucket(max(req.prompt.shape[1] for req, _ in items))
+        toks = np.zeros((self.max_b, S_pad), np.int32)
+        lengths = np.zeros((self.max_b,), np.int32)
+        mask = np.zeros((self.max_b,), bool)
+        for req, slots in items:
+            B, S = req.prompt.shape
+            toks[slots, :S] = req.prompt
+            lengths[slots] = S
+            mask[slots] = True
+            self.stats["prefill_tokens"] += B * S
+        self._sync_tbl()
+        logits, self.caches = self._prefill_one(
+            self.base, self.bank, self.caches, np.int32(c),
+            jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
         self.stats["prefill_calls"] += 1
-        self.stats["prefill_tokens"] += B * S
-        return True
+        self.stats["ragged_prefill_batches"] += 1
+        return np.asarray(logits)
 
     def _bucket(self, S: int) -> int:
         """Jit-bucketed prompt length. Attention families tolerate right-
@@ -422,6 +551,8 @@ class ServingEngine:
         logits, self.caches = self._prefill_one(
             self.base, self.bank, self.caches, np.int32(c),
             jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += B * S
         return np.asarray(logits)[slots]
 
     def _prefill_request_bankwide(self, req: Request, slots: List[int]) -> np.ndarray:
@@ -443,6 +574,8 @@ class ServingEngine:
                              new, old)
 
         self.caches = jax.tree.map(merge, self.caches, new_caches)
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += B * S
         return np.asarray(logits)[c, slots]
 
     # ------------------------------------------------------------------

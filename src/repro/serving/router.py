@@ -44,7 +44,7 @@ class Slot:
 @dataclasses.dataclass
 class Placement:
     slot_id: Optional[int]        # None -> CPU host
-    mode: str                     # gpu | gpu_offload | hetero
+    mode: str                     # gpu | gpu_offload | hetero | train
     est_s_per_token: float
     cache_bytes: int
 
@@ -104,8 +104,28 @@ class PlacementRouter:
                                        est_s_per_token=best.est_s_per_token / 1.5)
         return best
 
+    def route_train(self, nbytes: float, *,
+                    latency_sensitive: bool = False) -> Placement:
+        """Place one FINE-TUNING job's client-side state: adapter params +
+        AdamW moments + activation working set (``training.job_hbm_bytes``).
+        Training state is touched every step for the job's whole lifetime,
+        so only co-located (accelerator-resident) placements are considered
+        — there is no offload tier for optimizer state. Commits the
+        capacity; the FinetuneEngine releases it when the job retires.
+        ``latency_sensitive`` is accepted for signature symmetry with
+        ``route`` (training placements are always co-located)."""
+        del latency_sensitive
+        for s in self.slots.values():
+            if s.fits(nbytes):
+                p = Placement(s.slot_id, "train", 0.0, int(nbytes))
+                self.commit(p)
+                return p
+        raise RuntimeError(
+            f"no accelerator slot fits {nbytes / 1e9:.2f} GB of training "
+            f"state (adapter + optimizer + activations)")
+
     def commit(self, p: Placement):
-        if p.slot_id is not None and p.mode == "gpu":
+        if p.slot_id is not None and p.mode in ("gpu", "train"):
             self.slots[p.slot_id].free_hbm -= p.cache_bytes
         elif p.slot_id is not None:
             self.slots[p.slot_id].free_hbm -= p.cache_bytes / self.cfg.n_layers
@@ -114,7 +134,7 @@ class PlacementRouter:
             self.host_free -= p.cache_bytes
 
     def release(self, p: Placement):
-        if p.slot_id is not None and p.mode == "gpu":
+        if p.slot_id is not None and p.mode in ("gpu", "train"):
             self.slots[p.slot_id].free_hbm += p.cache_bytes
         elif p.slot_id is not None:
             self.slots[p.slot_id].free_hbm += p.cache_bytes / self.cfg.n_layers

@@ -1,0 +1,3 @@
+from repro.training.job import FinetuneJob, JobResult, make_job_stream
+from repro.training.engine import FinetuneEngine, BankKey, job_hbm_bytes
+from repro.training.service import SymbiosisEngine

@@ -1,0 +1,341 @@
+"""FinetuneEngine: fine-tuning as a service over one shared frozen base.
+
+The training-side twin of ``serving.ServingEngine`` (paper §3, §5): tenants
+``submit()`` ``FinetuneJob``s — each with its own PEFT method/rank/targets,
+AdamW hyperparameters + warmup-cosine schedule, data stream and grad-accum
+microbatching — and the engine time-shares ONE resident copy of the frozen
+base params across all of them, admitting and retiring jobs mid-run.
+
+Architecture
+------------
+* **Banks.** Jobs whose step programs can share one vmapped call — same
+  ``AdapterConfig``, per-step batch shape and microbatch factor — are
+  grouped into a bank: adapter params and AdamW state stacked along a
+  leading bank-slot axis. Heterogeneous jobs (LoRA + IA3 + prefix, mixed
+  ranks/batch shapes) form SEPARATE banks inside the same engine, all
+  closing over the same base tree — the multi-bank heterogeneous-methods
+  service the adapter ecosystem needs (LLM-Adapters), without replicating
+  the base.
+* **Bucketed membership.** A bank's capacity grows by doubling and each
+  tick gathers the active slots into a power-of-two row bucket
+  (``core.symbiosis.make_compact_train_step``), so join/leave churn causes
+  a bounded number of recompiles and a sparse bank pays compute for its
+  ACTIVE jobs, not its high-water mark.
+* **Byte-identity.** A bank row runs the exact ``make_row_grad_fn``
+  program its solo ``make_baseline_train_step`` oracle runs, and the
+  scatter back into the bank only touches the gathered rows — so every
+  job's per-step grads, adapter params and optimizer state match its
+  dedicated run bit-for-bit, and churn around a job can never perturb it.
+* **Admission.** Each tick scans the queue in submit order, gated by
+  ``FinetuneConfig.max_jobs`` and (when a ``PlacementRouter`` is attached)
+  by an HBM charge for what a job actually pins: adapter params + AdamW
+  moments + an activation working-set estimate (``job_hbm_bytes``). A job
+  that doesn't fit stays queued without blocking later jobs (the serving
+  engine's continuous-admission rule); capacity releases at retire, and
+  queued jobs take it on the next tick.
+* **Retire / resume.** A job retires when its step budget is exhausted or
+  on explicit ``retire()``; its ``JobResult`` carries the final adapter +
+  optimizer state. Re-submitting that state (``init_adapter`` /
+  ``init_opt`` / ``start_step``) continues the same trajectory bitwise —
+  the checkpoint/resume story of a service whose clients own their state.
+
+Driven standalone via ``run()``, or interleaved tick-by-tick with a
+``ServingEngine`` against the same donated base by
+``training.SymbiosisEngine``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AdapterConfig, FinetuneConfig, ModelConfig
+from repro.core import adapters as adapters_lib
+from repro.core import symbiosis
+from repro.optim import adamw_init
+from repro.training.job import FinetuneJob, JobResult
+
+
+# One compile cache per (model, adapter-config, step knobs) shared by every
+# engine instance; bank/opt (args 1, 2) are donated — the engine always
+# rebinds them, so XLA updates the stacked job state in place.
+@functools.lru_cache(maxsize=None)
+def _jit_compact_train(cfg, acfg, microbatch, memory_optimized, remat):
+    return jax.jit(symbiosis.make_compact_train_step(
+        cfg, acfg, microbatch=microbatch, memory_optimized=memory_optimized,
+        remat=remat), donate_argnums=(1, 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class BankKey:
+    """Jobs sharing one vmapped step program: same PEFT config, same
+    per-step batch shape, same grad-accum factor."""
+    acfg: AdapterConfig
+    batch: int
+    seq: int
+    microbatch: int
+
+
+class _Bank:
+    """One bank's stacked state. ``slots[i]`` is the occupying job (or
+    None); params/opt leaves carry the matching leading [cap] axis."""
+
+    def __init__(self, key: BankKey):
+        self.key = key
+        self.params = None
+        self.opt = None
+        self.slots: List[Optional[FinetuneJob]] = []
+
+    @property
+    def cap(self) -> int:
+        return len(self.slots)
+
+    def alloc(self, adapter, opt_state) -> int:
+        """Place one job's state into a free slot, growing cap 1 -> 2 -> 4
+        ... by zero-padding the stacked leaves when the bank is full."""
+        if None not in self.slots:
+            if self.params is None:
+                self.params = jax.tree.map(lambda x: x[None], adapter)
+                self.opt = jax.tree.map(lambda x: x[None], opt_state)
+                self.slots = [None]
+            else:
+                grow = self.cap                      # double
+                pad = lambda x: jnp.concatenate(
+                    [x, jnp.zeros((grow,) + x.shape[1:], x.dtype)])
+                self.params = jax.tree.map(pad, self.params)
+                self.opt = jax.tree.map(pad, self.opt)
+                self.slots.extend([None] * grow)
+                return self._write(self.slots.index(None), adapter, opt_state)
+            return self._write(0, adapter, opt_state)
+        return self._write(self.slots.index(None), adapter, opt_state)
+
+    def _write(self, slot, adapter, opt_state) -> int:
+        wr = lambda full, one: full.at[slot].set(one.astype(full.dtype))
+        self.params = jax.tree.map(wr, self.params, adapter)
+        self.opt = jax.tree.map(wr, self.opt, opt_state)
+        return slot
+
+    def read(self, slot):
+        return (jax.tree.map(lambda x: x[slot], self.params),
+                jax.tree.map(lambda x: x[slot], self.opt))
+
+
+def job_hbm_bytes(cfg: ModelConfig, job: FinetuneJob, *,
+                  remat: bool = False) -> int:
+    """Admission charge for one job: what fine-tuning actually pins beyond
+    the (already-resident, shared) base — adapter params, the two f32 AdamW
+    moment trees, and an activation working-set estimate (per-microbatch
+    live tokens × residual stream, plus the logits block)."""
+    n_params, adapter_b = adapters_lib.adapter_bytes(cfg, job.acfg)
+    opt_b = 2 * n_params * 4
+    nmb = max(1, job.microbatch)
+    if job.batch_size % nmb or job.batch_size == nmb:
+        nmb = 1     # make_row_grad_fn falls back to one full-batch grad —
+        #             charge the activations the job will actually hold
+    tokens = job.batch_size * job.seq_len // nmb
+    layers_live = 2 if remat else cfg.n_layers
+    act_b = 4 * tokens * (layers_live * cfg.d_model + cfg.vocab)
+    return adapter_b + opt_b + act_b
+
+
+class FinetuneEngine:
+    """One frozen base continuously fine-tuned against by a churn of jobs."""
+
+    def __init__(self, cfg: ModelConfig, base_params, *,
+                 fcfg: Optional[FinetuneConfig] = None, router=None):
+        self.cfg = cfg
+        self.base = base_params
+        self.fcfg = fcfg or FinetuneConfig()
+        self.router = router
+        self._queue: List[FinetuneJob] = []
+        self._banks: Dict[BankKey, _Bank] = {}
+        self._slot_of: Dict[int, tuple] = {}      # id(job) -> (BankKey, slot)
+        self._step_of: Dict[int, int] = {}        # id(job) -> next global step
+        self._placement: Dict[int, object] = {}
+        self.finished: List[FinetuneJob] = []
+        self.stats = {"train_ticks": 0, "train_steps": 0, "admitted": 0,
+                      "retired": 0, "peak_jobs": 0, "compact_rows": 0,
+                      "compact_padded": 0, "train_tokens": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, job: FinetuneJob):
+        if (job.init_adapter is None) != (job.init_opt is None):
+            raise ValueError("resume needs both init_adapter and init_opt")
+        if job.start_step >= job.steps:
+            raise ValueError(f"start_step {job.start_step} >= step budget "
+                             f"{job.steps}: nothing to run")
+        nmb = job.microbatch
+        if nmb and nmb > 1 and (job.batch_size % nmb or job.batch_size == nmb):
+            # make_row_grad_fn would silently fall back to one full-batch
+            # grad — the tenant asked for accumulation to SHRINK activation
+            # memory, so refuse loudly instead of undercharging admission
+            raise ValueError(
+                f"microbatch {nmb} must strictly divide batch_size "
+                f"{job.batch_size} (a non-dividing or degenerate factor "
+                f"runs full-batch and holds full-batch activations)")
+        self._queue.append(job)
+
+    def pending(self) -> bool:
+        return bool(self._queue or self._slot_of)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._slot_of)
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _bank_key(self, job: FinetuneJob) -> BankKey:
+        return BankKey(job.acfg, job.batch_size, job.seq_len,
+                       max(1, job.microbatch))
+
+    def _try_admit(self, job: FinetuneJob) -> bool:
+        if self.n_active >= self.fcfg.max_jobs:
+            return False
+        placement = None
+        if self.router is not None:
+            try:
+                placement = self.router.route_train(
+                    job_hbm_bytes(self.cfg, job, remat=self.fcfg.remat),
+                    latency_sensitive=job.latency_sensitive)
+            except RuntimeError:
+                return False                      # queued until capacity frees
+        if job.init_adapter is not None:
+            adapter, opt = job.init_adapter, job.init_opt
+        else:
+            adapter = adapters_lib.init_adapter(
+                self.cfg, job.acfg, jax.random.PRNGKey(job.seed))
+            opt = adamw_init(adapter)
+        key = self._bank_key(job)
+        bank = self._banks.setdefault(key, _Bank(key))
+        slot = bank.alloc(adapter, opt)
+        bank.slots[slot] = job
+        self._slot_of[id(job)] = (key, slot)
+        self._step_of[id(job)] = job.start_step
+        self._placement[id(job)] = placement
+        self.stats["admitted"] += 1
+        self.stats["peak_jobs"] = max(self.stats["peak_jobs"], self.n_active)
+        return True
+
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
+    def _row_bucket(self, n: int, cap: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, cap) if cap else b
+
+    def _bank_tick(self, bank: _Bank):
+        rows = [(s, j) for s, j in enumerate(bank.slots) if j is not None]
+        if not rows:
+            return
+        R = self._row_bucket(len(rows), bank.cap)
+        slots = np.zeros((R,), np.int32)
+        mask = np.zeros((R,), bool)
+        hyper = {k: np.zeros((R,), np.float32)
+                 for k in ("lr", "warmup", "total", "wd", "gnorm")}
+        hyper["step"] = np.zeros((R,), np.int32)
+        batches = []
+        for i, (s, job) in enumerate(rows):
+            slots[i], mask[i] = s, True
+            step = self._step_of[id(job)]
+            hyper["step"][i] = step
+            hyper["lr"][i] = job.lr
+            hyper["warmup"][i] = job.warmup_steps
+            hyper["total"][i] = job.schedule_total
+            hyper["wd"][i] = job.weight_decay
+            hyper["gnorm"][i] = job.max_grad_norm if job.max_grad_norm > 0 \
+                else np.inf
+            batches.append(job.data.batch(step))
+        n = len(batches)
+
+        def stack(*leaves):
+            pads = [jnp.zeros_like(leaves[0])] * (R - n)
+            return jnp.stack(list(leaves) + pads)
+
+        batch = jax.tree.map(stack, *batches)
+        step_fn = _jit_compact_train(self.cfg, bank.key.acfg,
+                                     bank.key.microbatch,
+                                     self.fcfg.memory_optimized,
+                                     self.fcfg.remat)
+        bank.params, bank.opt, metrics = step_fn(
+            self.base, bank.params, bank.opt, batch, jnp.asarray(slots),
+            jnp.asarray(mask), {k: jnp.asarray(v) for k, v in hyper.items()})
+        losses = np.asarray(metrics["loss"])
+        for i, (_, job) in enumerate(rows):
+            job.losses.append(float(losses[i]))
+            self._step_of[id(job)] += 1
+        self.stats["train_steps"] += n
+        self.stats["compact_rows"] += n
+        self.stats["compact_padded"] += R - n
+        self.stats["train_tokens"] += n * bank.key.batch * bank.key.seq
+
+    def train_tick(self) -> bool:
+        """Admit due jobs, run one optimizer step for every active job
+        (one compact call per non-empty bank), retire exhausted jobs.
+        Returns True while jobs remain active or queued."""
+        admitted_any = False
+        for job in list(self._queue):
+            if self._try_admit(job):
+                self._queue.remove(job)
+                admitted_any = True
+        if self._queue and not self._slot_of and not admitted_any:
+            raise RuntimeError(
+                f"{len(self._queue)} job(s) can never be admitted "
+                f"(no free capacity and nothing running)")
+        for bank in self._banks.values():
+            self._bank_tick(bank)
+        self.stats["train_ticks"] += 1
+        for job in [j for (key, s) in list(self._slot_of.values())
+                    for j in [self._banks[key].slots[s]]
+                    if self._step_of[id(j)] >= j.steps]:
+            self.retire(job)
+        return self.pending()
+
+    def run(self) -> List[FinetuneJob]:
+        """Drive all queued/active jobs to their step budgets."""
+        while self.train_tick():
+            pass
+        out, self.finished = self.finished, []
+        return out
+
+    # ------------------------------------------------------------------
+    # job state, retirement, checkpointing
+    # ------------------------------------------------------------------
+    def job_state(self, job: FinetuneJob):
+        """(adapter, opt, next_step) for an ACTIVE job — a device-side
+        snapshot of its bank slot (used for checkpoints and inspection)."""
+        key, slot = self._slot_of[id(job)]
+        adapter, opt = self._banks[key].read(slot)
+        return adapter, opt, self._step_of[id(job)]
+
+    def retire(self, job: FinetuneJob) -> JobResult:
+        """Remove a job from service (explicit mid-run leave, or budget
+        exhaustion) and hand back its state. The bank slot frees for the
+        next admission; the stale row is never read again."""
+        adapter, opt, step = self.job_state(job)
+        key, slot = self._slot_of.pop(id(job))
+        self._banks[key].slots[slot] = None
+        del self._step_of[id(job)]
+        placement = self._placement.pop(id(job), None)
+        if placement is not None:
+            self.router.release(placement)
+        job.result = JobResult(adapter=adapter, opt=opt, step=step,
+                               losses=list(job.losses))
+        self.finished.append(job)
+        self.stats["retired"] += 1
+        return job.result
+
+    def checkpoint_job(self, job: FinetuneJob, directory: str) -> str:
+        """Write an ACTIVE job's adapter + optimizer state (resume with
+        ``checkpoint.restore_job_state`` + ``FinetuneJob(init_adapter=...,
+        init_opt=..., start_step=...)``)."""
+        from repro.checkpoint import save_job_state
+        adapter, opt, step = self.job_state(job)
+        return save_job_state(directory, step, adapter, opt,
+                              name=job.name or "job")

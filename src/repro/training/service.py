@@ -1,0 +1,109 @@
+"""SymbiosisEngine: inference and fine-tuning time-sharing ONE frozen base.
+
+The paper's full service shape (§4.4): a provider keeps a single resident
+copy of the base params and multiplexes it between a ``ServingEngine``
+(continuous-batching decode over adapter clients) and a ``FinetuneEngine``
+(fine-tuning as a service over PEFT jobs) — instead of deploying one model
+replica per workload. This wrapper interleaves the two engines' ticks;
+because the base is frozen and each engine owns its client-side state,
+interleaving changes WHEN work runs, never its math: serving outputs and
+every job's training trajectory are bit-for-bit identical to running each
+engine alone (asserted in tests/test_finetune_engine.py and the tier2
+mixed-workload sweep).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.serving.engine import Request, ServingEngine
+from repro.training.engine import FinetuneEngine
+from repro.training.job import FinetuneJob
+
+
+class SymbiosisEngine:
+    """Tick-interleaves a serving engine and a fine-tuning engine that close
+    over the SAME base-parameter tree (checked leaf-by-leaf at
+    construction — a copy would silently double the base HBM and break the
+    whole point)."""
+
+    def __init__(self, serving: Optional[ServingEngine] = None,
+                 finetune: Optional[FinetuneEngine] = None, *,
+                 train_every: int = 1):
+        if serving is None and finetune is None:
+            raise ValueError("need at least one of serving / finetune")
+        if serving is not None and finetune is not None:
+            s_leaves = jax.tree.leaves(serving.base)
+            f_leaves = jax.tree.leaves(finetune.base)
+            if len(s_leaves) != len(f_leaves) or any(
+                    a is not b for a, b in zip(s_leaves, f_leaves)):
+                raise ValueError(
+                    "serving and finetune engines must share ONE frozen "
+                    "base (identical param arrays, not copies)")
+        self.serving = serving
+        self.finetune = finetune
+        self.train_every = max(1, train_every)
+        self.stats = {"ticks": 0, "decode_ticks": 0, "train_ticks": 0,
+                      "admission_stalls": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, item):
+        """Route a ``Request`` to serving, a ``FinetuneJob`` to training."""
+        if isinstance(item, Request):
+            if self.serving is None:
+                raise ValueError("no serving engine attached")
+            self.serving.submit(item)
+        elif isinstance(item, FinetuneJob):
+            if self.finetune is None:
+                raise ValueError("no finetune engine attached")
+            self.finetune.submit(item)
+        else:
+            raise TypeError(f"cannot route {type(item).__name__}")
+
+    def tick(self) -> bool:
+        """One service tick: a decode tick (if serving work exists) then
+        ``train_every`` train ticks (if jobs exist). Returns True while
+        either engine still has work.
+
+        Each engine's standalone stuck detection ("can never be admitted")
+        assumes nothing outside itself will ever free capacity. Under a
+        SHARED PlacementRouter that assumption is wrong in exactly this
+        configuration — a queued request may be waiting on HBM pinned by a
+        fine-tuning job (or vice versa) — so a stall in one engine is
+        fatal only when the OTHER engine holds nothing that could free."""
+        did = False
+        if self.serving is not None and self.serving.pending():
+            try:
+                self.serving.service_tick()
+                self.stats["decode_ticks"] += 1
+                did = True
+            except RuntimeError:
+                if not (self.finetune is not None and self.finetune.n_active):
+                    raise          # nothing training-side will ever free
+                self.stats["admission_stalls"] += 1
+        for _ in range(self.train_every):
+            if self.finetune is not None and self.finetune.pending():
+                try:
+                    self.finetune.train_tick()
+                    self.stats["train_ticks"] += 1
+                    did = True
+                except RuntimeError:
+                    if not (self.serving is not None
+                            and self.serving.n_inflight):
+                        raise      # nothing serving-side will ever free
+                    self.stats["admission_stalls"] += 1
+        if did:
+            self.stats["ticks"] += 1
+        return did
+
+    def run(self):
+        """Drive both workloads to completion against the shared base.
+        Returns (finished inference Requests, finished FinetuneJobs)."""
+        while self.tick():
+            pass
+        done_reqs = self.serving.drain_done() if self.serving else []
+        done_jobs = []
+        if self.finetune is not None:
+            done_jobs, self.finetune.finished = self.finetune.finished, []
+        return done_reqs, done_jobs

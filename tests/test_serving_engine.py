@@ -412,3 +412,74 @@ class TestCacheSpec:
         assert short.total < short_h.total, "all-GPU wins short contexts"
         assert long_g.total == float("inf"), "all-GPU OOMs at 131k (Fig 19)"
         assert long_h.total < long.total, "hetero must win long contexts"
+
+
+class TestRaggedPrefill:
+    """Ragged shared prefill (ISSUE 4 satellite): several same-client
+    admissions in one tick share ONE masked prefill call with per-row
+    lengths, byte-identical to sequential per-request admission."""
+
+    def _workload(self, cfg, rng):
+        # client 0: three different-length prompts due the same tick
+        # (ragged rows); client 1: two equal-length prompts; a straggler
+        # arrives later and prefills alone
+        reqs = [Request(0, rng.integers(0, cfg.vocab, (1, L)).astype(np.int32),
+                        max_new_tokens=6) for L in (5, 9, 3)]
+        reqs += [Request(1, rng.integers(0, cfg.vocab, (1, 7)).astype(np.int32),
+                         max_new_tokens=5) for _ in range(2)]
+        reqs.append(Request(1, rng.integers(0, cfg.vocab, (1, 4)).astype(np.int32),
+                            max_new_tokens=4, arrive_tick=3))
+        return reqs
+
+    @pytest.mark.parametrize("page_block", [0, 16])
+    def test_ragged_matches_sequential(self, system, lora_cfg, page_block):
+        cfg, scfg, base, bank = system
+        sc = dataclasses.replace(scfg, page_block=page_block)
+        outs, engines = {}, {}
+        for name, ragged in (("ragged", True), ("sequential", False)):
+            rng = np.random.default_rng(3)
+            eng = ServingEngine(cfg, lora_cfg, sc, base, bank,
+                                max_batch_per_client=3, ragged_prefill=ragged)
+            for r in self._workload(cfg, rng):
+                eng.submit(r)
+            done = eng.run()
+            outs[name] = sorted((r.client_id, r.prompt.tobytes(),
+                                 r.generated.tobytes()) for r in done)
+            engines[name] = eng
+        assert outs["ragged"] == outs["sequential"]
+        # the 3+2 same-tick admissions collapse into 2 ragged calls (+1 solo)
+        assert engines["ragged"].stats["ragged_prefill_batches"] == 2
+        assert engines["ragged"].stats["prefill_calls"] == 3
+        assert engines["sequential"].stats["prefill_calls"] == 6
+        assert (engines["ragged"].stats["prefill_tokens"]
+                == engines["sequential"].stats["prefill_tokens"])
+
+    def test_ragged_rows_match_solo_serving(self, system, lora_cfg):
+        """Each request in a shared ragged prefill still matches serving it
+        alone — per-row lengths keep rows independent."""
+        cfg, scfg, base, bank = system
+        rng = np.random.default_rng(9)
+        reqs = [Request(0, rng.integers(0, cfg.vocab, (1, L)).astype(np.int32),
+                        max_new_tokens=5) for L in (4, 8)]
+        eng = ServingEngine(cfg, lora_cfg, scfg, base, bank,
+                            max_batch_per_client=2)
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        assert eng.stats["ragged_prefill_batches"] == 1
+        for r in done:
+            ref = _solo_reference(cfg, scfg, base, bank, lora_cfg, r, 2)
+            np.testing.assert_array_equal(r.generated, ref)
+
+    def test_recurrent_families_reject_ragged(self, key, lora_cfg):
+        """Right-padding rows to a shared bucket would pollute recurrent
+        state: hybrid/RWKV engines refuse the knob (and default it off)."""
+        from repro.config import HYBRID
+        cfg = tiny(HYBRID)
+        scfg = ServeConfig(n_clients=2, max_seq=48)
+        base, bank, _ = symbiosis.init_system(cfg, lora_cfg, 2, key)
+        with pytest.raises(ValueError, match="attention families"):
+            ServingEngine(cfg, lora_cfg, scfg, base, bank,
+                          ragged_prefill=True)
+        eng = ServingEngine(cfg, lora_cfg, scfg, base, bank)
+        assert not eng._ragged
