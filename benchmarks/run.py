@@ -48,6 +48,7 @@ SERVING_SECTIONS = (
     "sec37_serving_continuous_batching",
     "paged_admission_fixed_hbm",
     "compact_decode_sparse_occupancy",
+    "mixed_method_serving",
 )
 
 # training trajectory sections (--json writes them to BENCH_training.json)
@@ -61,6 +62,7 @@ _SCHEMA_OF = {
     "engine": "sec37_serving_continuous_batching",
     "layout": "paged_admission_fixed_hbm",
     "occupancy": "compact_decode_sparse_occupancy",
+    "mix": "mixed_method_serving",
     "workload": "finetune_service_shared_base",
     "bankmix": "finetune_service_bank_mix",
 }

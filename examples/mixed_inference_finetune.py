@@ -10,7 +10,15 @@ with train steps changes when work runs, never its math (each job still
 matches its dedicated run bit-for-bit; see tests/test_finetune_engine.py).
 
   PYTHONPATH=src python examples/mixed_inference_finetune.py
+  PYTHONPATH=src python examples/mixed_inference_finetune.py --serve-mixed
+
+``--serve-mixed`` additionally makes the SERVING side heterogeneous
+(ISSUE 5): the inference clients become one LoRA + one IA3 + one prefix
+bank inside a single paged ServingEngine, every decode tick carrying all
+three methods — so BOTH halves of the service mix PEFT methods over the
+one resident base.
 """
+import argparse
 import time
 
 import jax
@@ -18,10 +26,17 @@ import numpy as np
 
 from repro.config import AdapterConfig, FinetuneConfig, ServeConfig
 from repro.configs import get_config
+from repro.core import adapters as ad_lib
 from repro.core import symbiosis
 from repro.serving.engine import Request, ServingEngine
 from repro.training import (FinetuneEngine, FinetuneJob, SymbiosisEngine,
                             make_job_stream)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--serve-mixed", action="store_true",
+                help="serve LoRA + IA3 + prefix inference banks through one "
+                     "mixed-method engine (paged layout, compacted decode)")
+args = ap.parse_args()
 
 cfg = get_config("jamba-v0.1-52b").reduced(n_layers=4, d_model=256)
 print(f"model: {cfg.name} (hybrid mamba+attn, MoE) reduced to "
@@ -29,13 +44,28 @@ print(f"model: {cfg.name} (hybrid mamba+attn, MoE) reduced to "
 
 N_INF, B, SEQ = 3, 2, 48
 acfg_inf = AdapterConfig(method="lora", rank=8, targets=("q", "v"))
-scfg = ServeConfig(n_clients=N_INF, max_seq=64)
 
 key = jax.random.PRNGKey(0)
-base, inf_bank, _ = symbiosis.init_system(cfg, acfg_inf, N_INF, key)
-
-serving = ServingEngine(cfg, acfg_inf, scfg, base, inf_bank,
-                        max_batch_per_client=B)
+if args.serve_mixed:
+    # three single-client banks, three PEFT methods, ONE serving engine —
+    # mixed banks ride the compacted decode, which needs the paged layout
+    scfg = ServeConfig(n_clients=N_INF, max_seq=64, page_block=8)
+    from repro.models import get_model
+    base = get_model(cfg).init_params(key)
+    serve_cfgs = [acfg_inf,
+                  AdapterConfig(method="ia3", targets=("k", "v", "down")),
+                  AdapterConfig(method="prefix", targets=("q", "v"),
+                                n_prefix=8)]
+    inf_banks = [ad_lib.init_client_bank(cfg, a, 1, jax.random.PRNGKey(5 + i))
+                 for i, a in enumerate(serve_cfgs)]
+    serving = ServingEngine(cfg, serve_cfgs, scfg, base, inf_banks,
+                            max_batch_per_client=B)
+    print("serving: MIXED banks (lora + ia3 + prefix) in one engine")
+else:
+    scfg = ServeConfig(n_clients=N_INF, max_seq=64)
+    base, inf_bank, _ = symbiosis.init_system(cfg, acfg_inf, N_INF, key)
+    serving = ServingEngine(cfg, acfg_inf, scfg, base, inf_bank,
+                            max_batch_per_client=B)
 finetune = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=4))
 engine = SymbiosisEngine(serving=serving, finetune=finetune)
 

@@ -209,11 +209,27 @@ def pre_scale(x, path, ad_slice, acfg: AdapterConfig, cfg: ModelConfig):
 # per row) — byte-identical to the per-client vmapped ``apply_adapter``
 # path, which is the compact-vs-masked exactness contract. IA3 / prefix
 # leaves are gathered per row (elementwise, trivially identical).
+#
+# MIXED-method batches (several serving banks in one engine) additionally
+# pass ``rows_mask`` [n_rows] bool — True where the row belongs to THIS
+# bank. Non-member rows must come out bitwise untouched, so every
+# application is gated with ``jnp.where`` (a select preserves bits exactly,
+# unlike adding a zero delta, which would flip -0.0 to +0.0) and gather
+# indices are clamped into the bank's range (a non-member row's local id
+# belongs to ANOTHER bank and may be out of range here).
+
+
+def _row_shape(mask, ref):
+    """Broadcast a [n_rows] mask along the remaining axes of ``ref``."""
+    return mask.reshape((ref.shape[0],) + (1,) * (ref.ndim - 1))
+
 
 def apply_adapter_rows(y, x, path, ad_slice, acfg: AdapterConfig,
-                       cfg: ModelConfig, rows_client):
+                       cfg: ModelConfig, rows_client, rows_mask=None):
     """Post-hook for a compacted [n_rows, 1, d] batch. ``ad_slice`` leaves
-    are client-stacked [C, ...]; ``rows_client`` [n_rows] int32."""
+    are client-stacked [C, ...]; ``rows_client`` [n_rows] int32 (indices
+    into THIS bank's client axis); ``rows_mask`` [n_rows] bool marks the
+    rows this bank owns (None = all rows, the single-bank fast path)."""
     if ad_slice is None:
         return y
     leaf = ad_slice.get(path) if isinstance(ad_slice, dict) else None
@@ -222,27 +238,40 @@ def apply_adapter_rows(y, x, path, ad_slice, acfg: AdapterConfig,
     if acfg.method == "lora":
         from repro.kernels.sgmv import sgmv   # deferred: kernels import nothing back
         n = x.shape[0]
+        ids = rows_client if rows_mask is None else \
+            jnp.where(rows_mask, rows_client, -1)    # dead blocks emit zeros
         delta = sgmv(x.reshape(n, -1), leaf["A"].astype(x.dtype),
-                     leaf["B"].astype(x.dtype), rows_client, block_t=1,
+                     leaf["B"].astype(x.dtype), ids, block_t=1,
                      scale=acfg.alpha / acfg.rank)
-        return y + delta.reshape(y.shape)
+        out = y + delta.reshape(y.shape)
+        return out if rows_mask is None else jnp.where(_row_shape(rows_mask, y),
+                                                       out, y)
     if acfg.method == "ia3":
         if path == "down":
             return y                          # pre-scaled (see below)
-        s = leaf["scale"][rows_client]        # [n, dout]
-        return y * s.reshape((y.shape[0],) + (1,) * (y.ndim - 2) + (-1,)).astype(y.dtype)
+        C = leaf["scale"].shape[0]
+        ids = rows_client if rows_mask is None else jnp.clip(rows_client, 0, C - 1)
+        s = leaf["scale"][ids]                # [n, dout]
+        out = y * s.reshape((y.shape[0],) + (1,) * (y.ndim - 2) + (-1,)).astype(y.dtype)
+        return out if rows_mask is None else jnp.where(_row_shape(rows_mask, y),
+                                                       out, y)
     return y
 
 
 def pre_scale_rows(x, path, ad_slice, acfg: AdapterConfig, cfg: ModelConfig,
-                   rows_client):
-    """Compacted-batch pre-hook: IA3 'down' input scaling, per row."""
+                   rows_client, rows_mask=None):
+    """Compacted-batch pre-hook: IA3 'down' input scaling, per row (gated
+    by ``rows_mask`` in mixed-method batches)."""
     if ad_slice is None or acfg.method != "ia3":
         return x
     leaf = ad_slice.get(path) if isinstance(ad_slice, dict) else None
     if leaf is not None and path == "down":
-        s = leaf["scale"][rows_client]
-        return x * s.reshape((x.shape[0],) + (1,) * (x.ndim - 2) + (-1,)).astype(x.dtype)
+        C = leaf["scale"].shape[0]
+        ids = rows_client if rows_mask is None else jnp.clip(rows_client, 0, C - 1)
+        s = leaf["scale"][ids]
+        out = x * s.reshape((x.shape[0],) + (1,) * (x.ndim - 2) + (-1,)).astype(x.dtype)
+        return out if rows_mask is None else jnp.where(_row_shape(rows_mask, x),
+                                                       out, x)
     return x
 
 
@@ -276,3 +305,72 @@ def compact_adapter_bank(bank, rows_client):
     return {name: ([fix_flat(d) for d in sub] if isinstance(sub, list)
                    else fix_stacked(sub))
             for name, sub in bank.items()}
+
+
+# ---------------------------------------------------------------------------
+# Mixed-method batches (several serving banks in one compacted tick)
+# ---------------------------------------------------------------------------
+
+def _mixed_stacked(container, rows, mask):
+    """One bank's stacked layer container for a mixed row batch: param
+    leaves go layer-major [L, C, ...] (per-row application happens in the
+    hook, gated by the method mask); prefix leaves are gathered per ROW with
+    clamped local ids and ship the membership mask alongside
+    (``prefix_rows``) so the model can gate the prefix-attention add."""
+    res = {}
+    for path, leaf in container.items():
+        if path in ("prefix_k", "prefix_v"):
+            C = leaf.shape[0]
+            g = leaf[jnp.clip(rows, 0, C - 1)]            # [R, L, P, K, hd]
+            res[path] = jnp.swapaxes(g, 0, 1)             # [L, R, P, K, hd]
+        else:
+            res[path] = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), leaf)
+    if "prefix_k" in res:
+        L, R = res["prefix_k"].shape[:2]
+        res["prefix_rows"] = jnp.broadcast_to(mask[None], (L, R))
+    return res
+
+
+def _mixed_flat(container, rows, mask):
+    """Per-layer (unstacked) variant of ``_mixed_stacked`` for list
+    containers (pre_layers)."""
+    res = {}
+    for path, leaf in container.items():
+        if path in ("prefix_k", "prefix_v"):
+            C = leaf.shape[0]
+            res[path] = leaf[jnp.clip(rows, 0, C - 1)]
+        else:
+            res[path] = leaf
+    if "prefix_k" in res:
+        res["prefix_rows"] = mask
+    return res
+
+
+def compact_mixed_bank(banks, rows_local, rows_method):
+    """Re-lay SEVERAL method banks for one compacted mixed-method row batch.
+
+    ``banks[m]`` is method m's client-stacked adapter tree (a None entry
+    is tolerated defensively and contributes nothing — the engine requires
+    every registered bank to carry a tree); ``rows_local`` [n_rows] maps
+    each row to its index
+    WITHIN its own bank and ``rows_method`` [n_rows] names that bank. The
+    result nests each bank's re-laid containers under an ``m<id>`` key —
+    ``virtlayer.make_mixed_ctx`` applies bank m's hook to exactly the rows
+    whose method id is m, and the model's prefix entries carry their own
+    row masks — so every row computes bitwise what its solo single-method
+    run computes, whatever its neighbours' methods are."""
+    out = {}
+    for m, bank in enumerate(banks):
+        if bank is None:
+            continue
+        key = f"m{m}"
+        mask = rows_method == m
+        for name, sub in bank.items():
+            if isinstance(sub, list):
+                tgt = out.setdefault(name, [{} for _ in sub])
+                for i, d in enumerate(sub):
+                    tgt[i][key] = _mixed_flat(d, rows_local, mask)
+            else:
+                out.setdefault(name, {})[key] = _mixed_stacked(
+                    sub, rows_local, mask)
+    return out

@@ -36,7 +36,8 @@ import jax.numpy as jnp
 from repro.config import (AdapterConfig, ModelConfig, TrainConfig, ServeConfig,
                           DENSE, MOE, VLM, HYBRID, ENCDEC)
 from repro.core import adapters as adapters_lib
-from repro.core.virtlayer import make_client_ctx, make_compact_ctx
+from repro.core.virtlayer import (make_client_ctx, make_compact_ctx,
+                                  make_mixed_ctx)
 from repro.models import get_model
 from repro.models.losses import lm_loss
 from repro.optim import adamw_init, adamw_update, adamw_update_hyper
@@ -270,12 +271,32 @@ def make_compact_train_step(cfg: ModelConfig, acfg: AdapterConfig, *,
         slots = slots.astype(jnp.int32)
         params = jax.tree.map(lambda x: x[slots], bank)
         ostate = jax.tree.map(lambda x: x[slots], opt)
-        losses, grads = jax.vmap(row_grads, in_axes=(0, None, 0))(
-            params, base, batch)
-        lr = warmup_cosine(hyper["step"], hyper["lr"], hyper["warmup"],
-                           hyper["total"])
-        new_p, new_o, gnorms = jax.vmap(adamw_update_hyper)(
-            params, grads, ostate, lr, hyper["wd"], hyper["gnorm"])
+        R = slots.shape[0]
+        if R == 1:
+            # A one-row bucket skips the vmap entirely: vmap-of-1 still
+            # traces a BATCHED program, and for MoE layers XLA fuses that
+            # batched backward differently from the solo baseline program
+            # at some token counts (1-2 ulp drift — see tests/test_moe.py::
+            # TestVmapBitwise). Running the single row through the same
+            # unbatched program the baseline runs keeps the R=1 bucket on
+            # the bitwise contract for every family.
+            one = lambda t: jax.tree.map(lambda x: x[0], t)
+            lift = lambda t: jax.tree.map(lambda x: x[None], t)
+            l1, g1 = row_grads(one(params), base, one(batch))
+            lr1 = warmup_cosine(hyper["step"][0], hyper["lr"][0],
+                                hyper["warmup"][0], hyper["total"][0])
+            p1, o1, gn1 = adamw_update_hyper(one(params), g1, one(ostate),
+                                             lr1, hyper["wd"][0],
+                                             hyper["gnorm"][0])
+            new_p, new_o = lift(p1), lift(o1)
+            losses, gnorms, lr = l1[None], gn1[None], lr1[None]
+        else:
+            losses, grads = jax.vmap(row_grads, in_axes=(0, None, 0))(
+                params, base, batch)
+            lr = warmup_cosine(hyper["step"], hyper["lr"], hyper["warmup"],
+                               hyper["total"])
+            new_p, new_o, gnorms = jax.vmap(adamw_update_hyper)(
+                params, grads, ostate, lr, hyper["wd"], hyper["gnorm"])
         drop = jnp.where(row_mask, slots, cap)       # cap is out of bounds
 
         def scatter(full, rows):
@@ -395,10 +416,16 @@ def make_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     wastes C× base compute per admitted request), this runs the model ONCE
     for the admitted client and scatters the result into the bank caches:
 
-      fn(base, bank, caches, c, tokens, lengths, slot_mask)
+      fn(base, bank, caches, c, a, tokens, lengths, slot_mask)
         -> (logits [max_b, V], new bank caches)
 
-    * ``c``         — traced client index (one compile serves every client).
+    * ``c``         — traced client index into the CACHES (one compile
+                      serves every client).
+    * ``a``         — traced adapter index into ``bank``. A single-bank
+                      engine passes ``a == c``; a mixed-method engine
+                      passes the client's index WITHIN its own method bank
+                      (the caches stay global across banks, the adapter
+                      trees do not).
     * ``tokens``    — [max_b, S_pad]; rows being admitted carry the prompt
                       (right-padded to the engine's jit bucket), other rows
                       are dummies.
@@ -424,8 +451,8 @@ def make_client_prefill(cfg: ModelConfig, acfg: Optional[AdapterConfig],
                  if "page_block" in cache_kw
                  else jax.tree.map(lambda ax: None, slot_axes))
 
-    def prefill_one(base, bank, caches, c, tokens, lengths, slot_mask):
-        adapter = jax.tree.map(lambda x: x[c], bank) if bank is not None else None
+    def prefill_one(base, bank, caches, c, a, tokens, lengths, slot_mask):
+        adapter = jax.tree.map(lambda x: x[a], bank) if bank is not None else None
 
         def slice_c(x, ax, pax):
             # global page pools have no client axis; everything else
@@ -586,13 +613,31 @@ def stack_client_caches(cfg: ModelConfig, max_seq: int, per_client, **cache_kw):
     return caches
 
 
-def make_compact_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
-                             scfg: ServeConfig, **ctx_kw):
+def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
+                             **ctx_kw):
     """Compute-proportional decode tick: run ONLY the actively decoding
     sequence slots, gathered across clients into one dense batch.
 
-    fn(base, bank, caches, tokens, clients, slots, row_mask)
-      -> (logits [n_rows, V], new bank caches)
+    Single-method (``acfg`` an AdapterConfig or None):
+
+      fn(base, bank, caches, tokens, clients, slots, row_mask)
+        -> (logits [n_rows, V], new bank caches)
+
+    MIXED-METHOD (``acfg`` a tuple/list of AdapterConfigs — the serving
+    engine's heterogeneous bank registry):
+
+      fn(base, banks, caches, tokens, clients, slots, methods, locals_,
+         row_mask) -> (logits [n_rows, V], new bank caches)
+
+    where ``banks`` is the matching tuple of client-stacked adapter trees,
+    ``methods[i]`` names row i's bank and ``locals_[i]`` its client index
+    WITHIN that bank (``clients[i]`` stays the GLOBAL cache client index).
+    One tick then carries several PEFT methods at once: LoRA rows keep the
+    SGMV path (dead ids for other rows), IA3/prefix rows get per-row
+    gathers keyed by their method id, and every application is gated by a
+    membership select — so each row's math is byte-identical to its solo
+    single-method run whatever its neighbours' methods are
+    (``virtlayer.make_mixed_ctx`` / ``adapters.compact_mixed_bank``).
 
     * ``tokens``/``clients``/``slots``/``row_mask`` — [n_rows] arrays; row i
       is sequence slot ``slots[i]`` of client ``clients[i]`` feeding
@@ -615,6 +660,8 @@ def make_compact_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
       gathers. FLOPs and HBM traffic of base matmuls, adapter deltas and
       attention all scale with ``n_rows``, not with the bank size.
     """
+    mixed = isinstance(acfg, (tuple, list))
+    acfgs = tuple(acfg) if mixed else None
     model = get_model(cfg)
     cache_kw = serve_cache_kwargs(cfg, scfg, pool_pages=1)
     if "page_block" not in cache_kw:
@@ -628,17 +675,13 @@ def make_compact_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     slot_axes.pop("block_tbl", None)
     page_axes.pop("block_tbl", None)
 
-    def compact(base, bank, caches, tokens, clients, slots, row_mask):
-        C, B = caches["pos"].shape
-        clients = clients.astype(jnp.int32)
-        slots = slots.astype(jnp.int32)
-        rows = clients * B + slots
-        inner = {k: v for k, v in caches.items() if k != "block_tbl"}
+    def _rest(x, lifted):
+        shape = list(x.shape)
+        del shape[lifted], shape[0]
+        return tuple(shape)
 
-        def _rest(x, lifted):
-            shape = list(x.shape)
-            del shape[lifted], shape[0]
-            return tuple(shape)
+    def _gather_caches(caches, rows, C, B):
+        inner = {k: v for k, v in caches.items() if k != "block_tbl"}
 
         def gather(x, ax, pax):
             if pax is not None:      # global pool: flat already, zero copies
@@ -651,14 +694,10 @@ def make_compact_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
         compact_cache = jax.tree.map(gather, inner, slot_axes, page_axes)
         # table rows already hold global page ids (allocator page ranges)
         compact_cache["block_tbl"] = caches["block_tbl"].reshape(C * B, -1)[rows]
+        return inner, compact_cache
 
-        ctx = make_client_ctx(cfg, None, **ctx_kw) if bank is None else \
-            make_compact_ctx(cfg, acfg, clients, **ctx_kw)
-        adapter = adapters_lib.compact_adapter_bank(bank, clients)
-        logits, new_compact = model.decode_step(base, compact_cache, tokens,
-                                                ctx, adapter, active=row_mask)
+    def _scatter_caches(inner, new_compact, rows, row_mask, C, B):
         new_compact = {k: v for k, v in new_compact.items() if k != "block_tbl"}
-
         drop_rows = jnp.where(row_mask, rows, C * B)     # C*B is out of bounds
 
         def scatter(old, new, ax, pax):
@@ -671,11 +710,39 @@ def make_compact_decode_step(cfg: ModelConfig, acfg: Optional[AdapterConfig],
             flat = flat.at[drop_rows].set(vals.astype(flat.dtype), mode="drop")
             return jnp.moveaxis(flat.reshape((C, B) + rest), 1, ax + 1)
 
-        new_inner = jax.tree.map(scatter, inner, new_compact, slot_axes,
-                                 page_axes)
+        return jax.tree.map(scatter, inner, new_compact, slot_axes, page_axes)
+
+    def compact(base, bank, caches, tokens, clients, slots, row_mask):
+        C, B = caches["pos"].shape
+        clients = clients.astype(jnp.int32)
+        slots = slots.astype(jnp.int32)
+        rows = clients * B + slots
+        inner, compact_cache = _gather_caches(caches, rows, C, B)
+        ctx = make_client_ctx(cfg, None, **ctx_kw) if bank is None else \
+            make_compact_ctx(cfg, acfg, clients, **ctx_kw)
+        adapter = adapters_lib.compact_adapter_bank(bank, clients)
+        logits, new_compact = model.decode_step(base, compact_cache, tokens,
+                                                ctx, adapter, active=row_mask)
+        new_inner = _scatter_caches(inner, new_compact, rows, row_mask, C, B)
         return logits, dict(new_inner, block_tbl=caches["block_tbl"])
 
-    return compact
+    def compact_mixed(base, banks, caches, tokens, clients, slots, methods,
+                      locals_, row_mask):
+        C, B = caches["pos"].shape
+        clients = clients.astype(jnp.int32)
+        slots = slots.astype(jnp.int32)
+        methods = methods.astype(jnp.int32)
+        locals_ = locals_.astype(jnp.int32)
+        rows = clients * B + slots
+        inner, compact_cache = _gather_caches(caches, rows, C, B)
+        ctx = make_mixed_ctx(cfg, acfgs, locals_, methods, **ctx_kw)
+        adapter = adapters_lib.compact_mixed_bank(banks, locals_, methods)
+        logits, new_compact = model.decode_step(base, compact_cache, tokens,
+                                                ctx, adapter, active=row_mask)
+        new_inner = _scatter_caches(inner, new_compact, rows, row_mask, C, B)
+        return logits, dict(new_inner, block_tbl=caches["block_tbl"])
+
+    return compact_mixed if mixed else compact
 
 
 def init_client_caches(cfg: ModelConfig, n_clients: int, batch: int, max_seq: int,

@@ -119,6 +119,54 @@ def make_compact_ctx(cfg: ModelConfig, acfg: Optional[AdapterConfig],
     return LinCtx(top=top, for_layer=for_layer)
 
 
+def make_mixed_ctx(cfg: ModelConfig, acfgs, rows_local, rows_method, *,
+                   memory_optimized: bool = True) -> LinCtx:
+    """Client context for a MIXED-METHOD compacted batch: the serving
+    engine's heterogeneous banks (LoRA + IA3 + prefix concurrently) in one
+    decode tick.
+
+    ``acfgs`` is the engine's bank tuple (method id = position; a None
+    entry is tolerated defensively and applies nothing), ``rows_local``
+    [n_rows] each row's client index WITHIN its bank, ``rows_method``
+    [n_rows] its bank id. Per-layer adapter
+    slices arrive as ``{"m<id>": <bank slice>}`` (see
+    ``adapters.compact_mixed_bank``). Every bank's hook runs over the whole
+    batch but is GATED per row: LoRA rows keep the SGMV path (non-member
+    rows get dead adapter ids, so the kernel emits zeros for them), IA3
+    scales are gathered with clamped ids, and every application is merged
+    through ``jnp.where`` on the membership mask — a select preserves the
+    non-member rows' bits exactly, which is what keeps each row
+    byte-identical to its solo single-method run."""
+    base_dense = frozen_dense if memory_optimized else _plain_dense_nohook
+    base_expert = frozen_expert if memory_optimized else _plain_expert_nohook
+    live = [(m, acfg) for m, acfg in enumerate(acfgs) if acfg is not None]
+    masks = {m: rows_method == m for m, _ in live}
+
+    def for_layer(ad_slice) -> LinearFns:
+        def sub(m):
+            return ad_slice.get(f"m{m}") if isinstance(ad_slice, dict) else None
+
+        def dense(x, w, b, path):
+            for m, acfg in live:
+                x = adapters_lib.pre_scale_rows(x, path, sub(m), acfg, cfg,
+                                                rows_local, rows_mask=masks[m])
+            y = base_dense(x, w, b)
+            for m, acfg in live:
+                y = adapters_lib.apply_adapter_rows(y, x, path, sub(m), acfg,
+                                                    cfg, rows_local,
+                                                    rows_mask=masks[m])
+            return y
+
+        def expert(x, w, path):
+            return base_expert(x, w)
+
+        return LinearFns(dense=dense, expert=expert)
+
+    top = LinearFns(dense=lambda x, w, b, path: base_dense(x, w, b),
+                    expert=lambda x, w, path: base_expert(x, w))
+    return LinCtx(top=top, for_layer=for_layer)
+
+
 def _plain_dense_nohook(x, w, b=None):
     y = jnp.einsum("...i,io->...o", x, w)
     return y + b if b is not None else y

@@ -163,28 +163,57 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     wlen = None if lengths is None else jnp.broadcast_to(
         jnp.asarray(lengths, jnp.int32), (B,))
 
-    def body(x, layer_in):
-        p, sk, sv, ad = layer_in
+    # Paged decoder self-attention pools ride the scan as CARRY, fused
+    # [L, P, ..] -> [L*P, ..] with per-layer table offsets (mirroring
+    # decode_step): as xs/ys the whole pool was re-materialized once per
+    # ADMISSION. The cross caches are replaced wholesale and stay ys.
+    paged = tbl is not None
+    if paged:
+        Pl = cache["self_k"].shape[1]
+        fuse = lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:])
+        kv0 = (fuse(cache["self_k"]), fuse(cache["self_v"]))
+    else:
+        kv0 = (cache["self_k"], cache["self_v"])
+
+    def capture(p, x, ad, sk, sv, layer_tbl):
         lin = ctx.for_layer(ad)
         h = blocks.rmsnorm(p["ln1"], x)
         k = lin.dense(h, p["attn"]["wk"], p["attn"].get("bk"), "k").reshape(B, S, kvh, hd)
         v = lin.dense(h, p["attn"]["wv"], p["attn"].get("bv"), "v").reshape(B, S, kvh, hd)
         if cfg.rope_theta > 0:
             k = blocks.apply_rope(k, positions, cfg.rope_theta)
-        if tbl is not None:
-            ck = blocks.paged_prefill_write(sk, tbl, k, wlen)
-            cv = blocks.paged_prefill_write(sv, tbl, v, wlen)
+        if paged:
+            ck = blocks.paged_prefill_write(sk, layer_tbl, k, wlen)
+            cv = blocks.paged_prefill_write(sv, layer_tbl, v, wlen)
         else:
             ck = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, 0, 0, 0))
             cv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, 0, 0, 0))
         xk = lin.dense(enc, p["xattn"]["wk"], p["xattn"].get("bk"), "xattn_k").reshape(B, Te, kvh, hd)
         xv = lin.dense(enc, p["xattn"]["wv"], p["xattn"].get("bv"), "xattn_v").reshape(B, Te, kvh, hd)
         x = _dec_layer(p, cfg, x, positions, enc, lin)
-        return x, (ck, cv, xk.astype(sk.dtype), xv.astype(sk.dtype))
+        return x, ck, cv, xk.astype(sk.dtype), xv.astype(sk.dtype)
 
-    x, (sk, sv, xk, xv) = jax.lax.scan(
-        jax.checkpoint(body), x,
-        (params["dec_layers"], cache["self_k"], cache["self_v"], scan_ad))
+    if paged:
+        def body(carry, layer_in):
+            x, (sk, sv), i = carry
+            p, ad = layer_in
+            x, ck, cv, xk, xv = capture(p, x, ad, sk, sv, tbl + i * Pl)
+            return (x, (ck, cv), i + 1), (xk, xv)
+
+        (x, (sk, sv), _), (xk, xv) = jax.lax.scan(
+            jax.checkpoint(body), (x, kv0, jnp.int32(0)),
+            (params["dec_layers"], scan_ad))
+        sk = sk.reshape(cache["self_k"].shape)
+        sv = sv.reshape(cache["self_v"].shape)
+    else:
+        def body(x, layer_in):
+            p, sk, sv, ad = layer_in
+            x, ck, cv, xk, xv = capture(p, x, ad, sk, sv, None)
+            return x, (ck, cv, xk, xv)
+
+        x, (sk, sv, xk, xv) = jax.lax.scan(
+            jax.checkpoint(body), x,
+            (params["dec_layers"], cache["self_k"], cache["self_v"], scan_ad))
     x = blocks.rmsnorm(params["final_norm"], x)
     if lengths is None:
         logits = ctx.top.dense(x[:, -1:], params["lm_head"], None, "lm_head")[:, 0]

@@ -189,14 +189,39 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     wlen = None if lengths is None else jnp.broadcast_to(
         jnp.asarray(lengths, jnp.int32), (B,))
 
-    def body(x, grp_in):
-        gp, st, ad = grp_in
-        x, _, new_st = _group_forward(gp, cfg, x, positions, ctx.for_layer(ad), st,
-                                      capture_kv=True, tbl=tbl, lengths=wlen)
-        return x, new_st
+    # Paged attention-sublayer pools ride the scan as CARRY, fused
+    # [G, P, ..] -> [G*P, ..] with per-group table offsets (mirroring
+    # decode_step): as xs/ys the whole pool was re-materialized once per
+    # ADMISSION. Mamba/conv state is per-slot and small; it stays xs/ys.
+    grp = cache["groups"]
+    pool_subs = {name for name, sub in grp.items()
+                 if tbl is not None and "k" in sub}
+    pools0 = {n: jax.tree.map(
+        lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]), grp[n])
+        for n in pool_subs}
+    states0 = {n: grp[n] for n in grp if n not in pool_subs}
+    Pg = (jax.tree.leaves(grp[next(iter(pool_subs))])[0].shape[1]
+          if pool_subs else 0)
 
-    x, new_groups = jax.lax.scan(jax.checkpoint(body), x,
-                                 (params["groups"], cache["groups"], scan_adapters))
+    def body(carry, grp_in):
+        x, pools, i = carry
+        gp, st_sliced, ad = grp_in
+        st = dict(pools)
+        st.update(st_sliced)
+        x, _, new_st = _group_forward(gp, cfg, x, positions, ctx.for_layer(ad), st,
+                                      capture_kv=True,
+                                      tbl=None if tbl is None else tbl + i * Pg,
+                                      lengths=wlen)
+        pools = {n: new_st[n] for n in pools}
+        return (x, pools, i + 1), {n: new_st[n] for n in st_sliced}
+
+    (x, pools, _), states = jax.lax.scan(
+        jax.checkpoint(body), (x, pools0, jnp.int32(0)),
+        (params["groups"], states0, scan_adapters))
+    new_groups = {n: (jax.tree.map(lambda t, old: t.reshape(old.shape),
+                                   pools[n], grp[n]) if n in pools
+                      else states[n])
+                  for n in grp}
     x = blocks.rmsnorm(params["final_norm"], x)
     if lengths is None:
         logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]

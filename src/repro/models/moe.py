@@ -93,39 +93,59 @@ def moe_forward(params, cfg, x, lin: LinearFns, *, path_prefix: str = "",
     """x [B,S,d] -> ([B,S,d], aux_loss scalar).
 
     capacity_factor=None (default) is drop-free/exact; pass a float to cap
-    expert buffers at factor * T * k / E (tokens beyond it are dropped)."""
-    B, S, d = x.shape
-    E, k = cfg.n_experts, cfg.top_k
-    T = B * S
-    xt = x.reshape(T, d)
-    cap = _capacity(T, E, k, capacity_factor)
+    expert buffers at factor * T * k / E (tokens beyond it are dropped).
 
-    gate_vals, idx, aux = _route(params, cfg, xt, lin, path_prefix)
-    pos_in_e, keep = _slot_positions(idx, E, cap)
+    The route->dispatch->combine body runs inside ``jax.checkpoint``: its
+    backward is a single self-contained subprogram (recomputed, not stitched
+    from saved forward pieces). Without the boundary, XLA fuses the two
+    cotangent paths that meet at the router probs (the combine-weight path
+    and the aux-loss path) differently in a vmapped bank step than in the
+    solo step — a 1-2 ulp vmap-vs-solo drift that appeared at some token
+    counts and broke the FinetuneEngine's bitwise-faithfulness contract for
+    MoE banks (either cotangent path alone is drift-free; see
+    tests/test_moe.py::TestVmapBitwise). Values the ``lin`` hook closes over
+    (the layer's adapter slice — e.g. a router-targeted LoRA) are hoisted
+    into explicit checkpoint arguments via ``closure_convert``, so their
+    cotangents also flow through the recomputed region instead of a
+    fusion-exposed side path. Forward-only callers (decode) are unaffected —
+    checkpoint is the identity without differentiation."""
 
-    if dispatch == "scatter":
-        dest = idx * cap + pos_in_e                                  # [T,k] in [0, E*cap)
-        dest = jnp.where(keep, dest, E * cap)                        # dropped -> OOB (ignored)
-        src = jnp.repeat(xt, k, axis=0)                              # [T*k,d]
-        xe = jnp.zeros((E * cap, d), x.dtype).at[dest.reshape(-1)].add(
-            src, mode="drop")
-        ye = _expert_ffn(params, xe.reshape(E, cap, d), lin, path_prefix)
-        ye_flat = ye.reshape(E * cap, d)
-        gathered = ye_flat.at[dest.reshape(-1)].get(mode="fill", fill_value=0.0)
-        yt = (gathered.reshape(T, k, d)
-              * (gate_vals * keep).astype(x.dtype)[..., None]).sum(axis=1)
-    elif dispatch == "einsum":
-        disp = (jax.nn.one_hot(idx, E, dtype=x.dtype)[..., :, None]
-                * jax.nn.one_hot(pos_in_e, cap, dtype=x.dtype)[..., None, :]
-                * keep[..., None, None].astype(x.dtype))             # [T,k,E,cap]
-        xe = jnp.einsum("td,tkec->ecd", xt, disp)
-        ye = _expert_ffn(params, xe, lin, path_prefix)
-        combine = disp * gate_vals[..., None, None].astype(x.dtype)
-        yt = jnp.einsum("ecd,tkec->td", ye, combine)
-    else:
-        raise ValueError(f"unknown dispatch {dispatch}")
+    def body(params, x):
+        B, S, d = x.shape
+        E, k = cfg.n_experts, cfg.top_k
+        T = B * S
+        xt = x.reshape(T, d)
+        cap = _capacity(T, E, k, capacity_factor)
 
-    if "shared" in params:
-        yt = yt + blocks.mlp_forward(params["shared"], xt, lin,
-                                     path_prefix=path_prefix + "shared_").astype(yt.dtype)
-    return yt.reshape(B, S, d).astype(x.dtype), aux
+        gate_vals, idx, aux = _route(params, cfg, xt, lin, path_prefix)
+        pos_in_e, keep = _slot_positions(idx, E, cap)
+
+        if dispatch == "scatter":
+            dest = idx * cap + pos_in_e                              # [T,k] in [0, E*cap)
+            dest = jnp.where(keep, dest, E * cap)                    # dropped -> OOB (ignored)
+            src = jnp.repeat(xt, k, axis=0)                          # [T*k,d]
+            xe = jnp.zeros((E * cap, d), x.dtype).at[dest.reshape(-1)].add(
+                src, mode="drop")
+            ye = _expert_ffn(params, xe.reshape(E, cap, d), lin, path_prefix)
+            ye_flat = ye.reshape(E * cap, d)
+            gathered = ye_flat.at[dest.reshape(-1)].get(mode="fill", fill_value=0.0)
+            yt = (gathered.reshape(T, k, d)
+                  * (gate_vals * keep).astype(x.dtype)[..., None]).sum(axis=1)
+        elif dispatch == "einsum":
+            disp = (jax.nn.one_hot(idx, E, dtype=x.dtype)[..., :, None]
+                    * jax.nn.one_hot(pos_in_e, cap, dtype=x.dtype)[..., None, :]
+                    * keep[..., None, None].astype(x.dtype))         # [T,k,E,cap]
+            xe = jnp.einsum("td,tkec->ecd", xt, disp)
+            ye = _expert_ffn(params, xe, lin, path_prefix)
+            combine = disp * gate_vals[..., None, None].astype(x.dtype)
+            yt = jnp.einsum("ecd,tkec->td", ye, combine)
+        else:
+            raise ValueError(f"unknown dispatch {dispatch}")
+
+        if "shared" in params:
+            yt = yt + blocks.mlp_forward(params["shared"], xt, lin,
+                                         path_prefix=path_prefix + "shared_").astype(yt.dtype)
+        return yt.reshape(B, S, d).astype(x.dtype), aux
+
+    closed, hoisted = jax.closure_convert(body, params, x)
+    return jax.checkpoint(closed)(params, x, *hoisted)

@@ -77,19 +77,47 @@ def init_params(cfg: ModelConfig, key):
 # Layer body
 # ---------------------------------------------------------------------------
 
-def _prefix_kv(adapter_slice):
-    if isinstance(adapter_slice, dict) and "prefix_k" in adapter_slice:
-        return adapter_slice["prefix_k"], adapter_slice["prefix_v"]
-    return None
+def _prefix_entries(adapter_slice):
+    """[(prefix_k, prefix_v, rows_mask_or_None), ...] for a per-layer
+    adapter slice. A plain slice carries its prefix leaves at top level
+    (mask None: every row attends the prefix). A MIXED-method slice (the
+    serving engine's per-row-method compacted batch) nests one ``m<id>``
+    sub-dict per bank; prefix banks carry per-row gathered leaves plus a
+    ``prefix_rows`` membership mask that gates the prefix-attention add —
+    rows of other methods stay bitwise untouched."""
+    if not isinstance(adapter_slice, dict):
+        return []
+    out = []
+    if "prefix_k" in adapter_slice:
+        out.append((adapter_slice["prefix_k"], adapter_slice["prefix_v"],
+                    adapter_slice.get("prefix_rows")))
+    for name in sorted(adapter_slice):
+        sub = adapter_slice[name]
+        if isinstance(sub, dict) and "prefix_k" in sub:
+            out.append((sub["prefix_k"], sub["prefix_v"],
+                        sub.get("prefix_rows")))
+    return out
+
+
+def _apply_prefixes(attn, p_attn, cfg, h, adapter_slice, lin):
+    """Fold every prefix adapter's branch into the attention output, gating
+    mixed-method rows by membership (a where-select keeps non-member rows'
+    bits exact — adding a zeroed branch would flip -0.0 to +0.0)."""
+    for pk, pv, rows in _prefix_entries(adapter_slice):
+        pfx = _prefix_attend(p_attn, cfg, h, (pk, pv), lin)
+        if rows is None:
+            attn = attn + pfx
+        else:
+            attn = jnp.where(rows.reshape(rows.shape + (1,) * (attn.ndim - 1)),
+                             attn + pfx, attn)
+    return attn
 
 
 def _layer_forward(p, cfg: ModelConfig, x, positions, lin: LinearFns, adapter_slice,
                    *, moe_dispatch: str = "scatter", capacity_factor=None):
     h = blocks.rmsnorm(p["ln1"], x)
     attn = blocks.mha_forward(p["attn"], cfg, h, positions, lin)
-    pk = _prefix_kv(adapter_slice)
-    if pk is not None:
-        attn = attn + _prefix_attend(p["attn"], cfg, h, pk, lin)
+    attn = _apply_prefixes(attn, p["attn"], cfg, h, adapter_slice, lin)
     x = x + attn
     h = blocks.rmsnorm(p["ln2"], x)
     aux = jnp.zeros((), jnp.float32)
@@ -157,9 +185,7 @@ def _layer_decode(p, cfg: ModelConfig, x, cache, pos, lin: LinearFns, adapter_sl
             attn, ck, cv = blocks.mha_decode(p["attn"], cfg, h, cache["k"],
                                              cache["v"], pos, lin, ring=ring)
         new_cache = {"k": ck, "v": cv}
-    pk = _prefix_kv(adapter_slice)
-    if pk is not None:
-        attn = attn + _prefix_attend(p["attn"], cfg, h, pk, lin)
+    attn = _apply_prefixes(attn, p["attn"], cfg, h, adapter_slice, lin)
     x = x + attn
     h = blocks.rmsnorm(p["ln2"], x)
     if "moe" in p:
@@ -425,16 +451,19 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         x, _ = _layer_forward(p, cfg, x, positions, lin, ad)
         return x, k, v
 
-    def write_kv(c, k, v):
+    def write_kv(c, k, v, layer_tbl=None):
         """Write captured K/V [B, S_total, K, hd] into one layer's cache
-        slice, handling every layout: dense / paged x full / int8."""
+        slice, handling every layout: dense / paged x full / int8.
+        ``layer_tbl`` carries the per-layer page offsets on the fused
+        paged path (see below)."""
         if "k_s" in c:
             parts = zip(("k", "k_s", "v", "v_s"),
                         blocks.quantize_head(k) + blocks.quantize_head(v))
         else:
             parts = (("k", k), ("v", v))
         if tbl is not None:
-            return {n: blocks.paged_prefill_write(c[n], tbl, val, wlen)
+            return {n: blocks.paged_prefill_write(
+                c[n], tbl if layer_tbl is None else layer_tbl, val, wlen)
                     for n, val in parts}
         return {n: jax.lax.dynamic_update_slice(c[n], val.astype(c[n].dtype),
                                                 (0, 0, 0, 0))
@@ -446,13 +475,42 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
         new_pre.append(write_kv(cache["pre_layers"][i], k, v))
 
-    def body(x, layer_in):
-        p, c, ad = layer_in
-        x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
-        return x, write_kv(c, k, v)
+    # Paged pools ride the scan as CARRY with the layer axis fused into the
+    # page axis, exactly like decode_step: scanning the layer-stacked pool
+    # as xs/ys re-materializes the WHOLE pool every prefill — one pool copy
+    # per ADMISSION, a cost proportional to bank size, not prompt length.
+    # As a fused carry ([L, P, ..] -> [L*P, ..], a free reshape; each layer
+    # writes through an offset block table) the admission only touches the
+    # pages the prompt actually fills, and the engine's donated cache
+    # buffer updates in place (no-copy assertion in
+    # tests/test_paged_kvcache.py).
+    if tbl is not None:
+        Pl = jax.tree.leaves(cache["layers"])[0].shape[1]
+        fused = jax.tree.map(
+            lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
+            cache["layers"])
 
-    x, new_layers = jax.lax.scan(jax.checkpoint(body), x,
-                                 (params["layers"], cache["layers"], scan_adapters))
+        def body(carry, layer_in):
+            x, pools, i = carry
+            p, ad = layer_in
+            x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
+            pools = write_kv(pools, k, v, layer_tbl=tbl + i * Pl)
+            return (x, pools, i + 1), None
+
+        (x, fused, _), _ = jax.lax.scan(
+            jax.checkpoint(body), (x, fused, jnp.int32(0)),
+            (params["layers"], scan_adapters))
+        new_layers = jax.tree.map(lambda t, old: t.reshape(old.shape),
+                                  fused, cache["layers"])
+    else:
+        def body(x, layer_in):
+            p, c, ad = layer_in
+            x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
+            return x, write_kv(c, k, v)
+
+        x, new_layers = jax.lax.scan(
+            jax.checkpoint(body), x,
+            (params["layers"], cache["layers"], scan_adapters))
     x = blocks.rmsnorm(params["final_norm"], x)
     if lengths is None:
         logits = lm_head(cfg, params, x[:, -1:], ctx.top)[:, 0]

@@ -12,6 +12,28 @@ Architecture
   prompt row for its lifetime; slots free the moment their request finishes
   and are re-admitted from the queue on the next tick — not after the whole
   bank drains (mid-stream join/leave).
+* **Bank registry (heterogeneous PEFT methods).** One engine may hold
+  SEVERAL serving banks keyed by AdapterConfig — pass ``acfg`` /
+  ``client_bank`` as matching sequences — mirroring
+  ``training.FinetuneEngine``'s bank grouping: LoRA, IA3 and prefix
+  clients (or same-method banks of different rank) served concurrently
+  over one frozen base. Clients carry GLOBAL ids in bank concatenation
+  order; caches, the page allocator and slot bookkeeping stay keyed by
+  the global id (the KV layout is method-independent) while admission
+  prefills through the client's own bank's jitted step and ONE compacted
+  decode tick carries per-row method ids (see "per-row-method contract"
+  below). Mixed banks require the paged layout + compacted decode; a
+  router is charged each bank's resident adapter bytes
+  (``PlacementRouter.route_bank`` / ``release_banks()``).
+* **Per-row-method contract.** In a mixed compacted tick, LoRA rows keep
+  the SGMV path (rows of other banks get dead adapter ids, so the kernel
+  emits zeros for them), IA3 scales and prefix K/V are gathered per row
+  with clamped bank-local ids, and EVERY application — including the
+  prefix-attention add inside the model — is merged through a
+  ``jnp.where`` on the row's membership mask: a select preserves
+  non-member rows' bits exactly, which is what makes each client's stream
+  in a mixed batch byte-identical to its solo single-method run
+  (tests/test_mixed_serving.py).
 * **KV layout.** ``ServeConfig.page_block = 0`` keeps dense fixed-depth
   (``max_seq``) cache rows per slot. ``page_block > 0`` switches to the
   PAGED layout: the device holds ONE global flat pool of
@@ -102,7 +124,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import AdapterConfig, ModelConfig, ServeConfig, DENSE, MOE, VLM
+from repro.config import ModelConfig, ServeConfig, DENSE, MOE, VLM
+from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
 from repro.core.scheduler import ClientSpec, TickPolicy, simulate
 
@@ -164,9 +187,29 @@ class Request:
 
 
 class ServingEngine:
-    """One base model continuously serving a bank of adapter clients."""
+    """One base model continuously serving one or more banks of adapter
+    clients.
 
-    def __init__(self, cfg: ModelConfig, acfg: AdapterConfig, scfg: ServeConfig,
+    BANK REGISTRY (heterogeneous PEFT methods, mirroring
+    ``training.FinetuneEngine``'s bank grouping): pass ``acfg`` as a
+    sequence of AdapterConfigs and ``client_bank`` as the matching sequence
+    of client-stacked adapter trees — e.g. a LoRA bank, an IA3 bank and a
+    prefix bank served CONCURRENTLY by one engine over one frozen base.
+    Clients get GLOBAL ids in bank concatenation order (bank 0's clients
+    first); the KV caches, page allocator and slot bookkeeping stay keyed
+    by the global id (the cache layout is method-independent), while
+    admission routes each request's prefill through its own bank's jitted
+    step and the compacted decode tick carries per-row method ids — LoRA
+    rows keep the SGMV path, IA3/prefix rows get per-row gathers, every
+    application gated by a membership select (see
+    ``symbiosis.make_compact_decode_step``'s mixed mode). A mixed batch is
+    byte-identical to each client's solo single-method run. Mixed banks
+    require the paged KV layout (the compacted tick is the only decode
+    path that can carry per-row methods); an attached ``PlacementRouter``
+    is charged each bank's resident adapter bytes (``route_bank``),
+    released via ``release_banks()``."""
+
+    def __init__(self, cfg: ModelConfig, acfg, scfg: ServeConfig,
                  base_params, client_bank, *, max_batch_per_client: int = 4,
                  router=None, policy: Optional[str] = None,
                  bank_prefill: bool = False,
@@ -176,7 +219,24 @@ class ServingEngine:
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
         self.base = base_params
         self.bank = client_bank
-        self.n_clients = jax.tree.leaves(client_bank)[0].shape[0]
+        self._mixed = isinstance(acfg, (tuple, list))
+        if self._mixed:
+            if not isinstance(client_bank, (tuple, list)) or \
+                    len(client_bank) != len(acfg):
+                raise ValueError("mixed-method serving: client_bank must be "
+                                 "a sequence of adapter trees matching acfg")
+            self.bank_cfgs = tuple(acfg)
+            self.banks = list(client_bank)
+            sizes = [jax.tree.leaves(b)[0].shape[0] for b in self.banks]
+        else:
+            self.bank_cfgs = (acfg,)
+            self.banks = [client_bank]
+            sizes = [jax.tree.leaves(client_bank)[0].shape[0]]
+        self.n_clients = sum(sizes)
+        # global client id -> (bank id, index within the bank's adapter tree)
+        self._method_of = np.repeat(np.arange(len(sizes)), sizes).astype(np.int32)
+        self._local_of = np.concatenate(
+            [np.arange(s) for s in sizes]).astype(np.int32)
         self.max_b = max_batch_per_client
         self.router = router
         self.policy = TickPolicy(policy or scfg.policy)
@@ -188,6 +248,34 @@ class ServingEngine:
         cache_kw = symbiosis.serve_cache_kwargs(cfg, scfg)
         self._paged = "page_block" in cache_kw
         self._quant = bool(cache_kw.get("quant"))
+        if self._mixed and not self._paged:
+            raise ValueError(
+                "mixed-method serving banks require the paged KV layout "
+                "(ServeConfig.page_block > 0): only the compacted decode "
+                "tick can carry per-row methods")
+        if self._mixed and compact_decode is False:
+            raise ValueError("mixed-method serving banks decode through the "
+                             "compacted per-row-method step; the masked "
+                             "bank-wide ablation is single-method only")
+        if self._mixed and bank_prefill:
+            raise ValueError("bank_prefill is a single-method dense-layout "
+                             "ablation")
+        # per-bank HBM charges: the router accounts each bank's resident
+        # adapter weights (released via release_banks()); single-bank
+        # engines keep the pre-registry accounting (KV-only) unchanged
+        self._bank_placements = []
+        if router is not None and self._mixed:
+            try:
+                for m, a in enumerate(self.bank_cfgs):
+                    _, nbytes = adapters_lib.adapter_bytes(cfg, a)
+                    self._bank_placements.append(
+                        router.route_bank(nbytes * sizes[m]))
+            except RuntimeError:
+                # a later bank didn't fit: refund the banks already
+                # committed, or their charges leak (no engine object ever
+                # exists to release them through)
+                self.release_banks()
+                raise
         if self._paged:
             if bank_prefill:
                 raise ValueError("bank_prefill replaces whole cache slices; "
@@ -222,9 +310,13 @@ class ServingEngine:
             self._resv_of: Dict[int, int] = {}
         self.caches = symbiosis.init_client_caches(
             cfg, self.n_clients, max_batch_per_client, scfg.max_seq, **cache_kw)
-        self._prefill_one = _jit_client_prefill(cfg, acfg, scfg)
+        # one jitted masked-prefill per bank (admission runs the admitted
+        # client's OWN method); the masked bank-wide decode exists only for
+        # single-method engines (it vmaps one homogeneous adapter tree)
+        self._prefill_one = [_jit_client_prefill(cfg, a, scfg)
+                             for a in self.bank_cfgs]
         self._prefill_bank = _jit_bank_prefill(cfg, acfg, scfg) if bank_prefill else None
-        self._decode = _jit_masked_decode(cfg, acfg, scfg)
+        self._decode = None if self._mixed else _jit_masked_decode(cfg, acfg, scfg)
         # Compute-proportional decode (ISSUE 3 tentpole): gather the active
         # (client, slot) rows into one dense batch and run ONLY those —
         # FLOPs/HBM scale with active tokens, not bank size. Paged layouts
@@ -235,8 +327,9 @@ class ServingEngine:
             raise ValueError("compact_decode requires the paged KV layout "
                              "(ServeConfig.page_block > 0)")
         self._compact = self._paged if compact_decode is None else compact_decode
-        self._compact_step = (_jit_compact_decode(cfg, acfg, scfg)
-                              if self._compact else None)
+        self._compact_step = (_jit_compact_decode(
+            cfg, self.bank_cfgs if self._mixed else acfg, scfg)
+            if self._compact else None)
         # jit-bucketed row-batch sizes: 4, 8, ... capped at the bank's rows
         total_rows = self.n_clients * self.max_b
         self._buckets = []
@@ -505,8 +598,10 @@ class ServingEngine:
             mask[slots] = True
             self.stats["prefill_tokens"] += B * S
         self._sync_tbl()
-        logits, self.caches = self._prefill_one(
-            self.base, self.bank, self.caches, np.int32(c),
+        m = int(self._method_of[c])
+        logits, self.caches = self._prefill_one[m](
+            self.base, self.banks[m], self.caches, np.int32(c),
+            np.int32(self._local_of[c]),
             jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
         self.stats["prefill_calls"] += 1
         self.stats["ragged_prefill_batches"] += 1
@@ -548,8 +643,10 @@ class ServingEngine:
         # keeps the masked prefill's scatter off other slots' live pages
         lengths = np.where(mask, S, 0).astype(np.int32)
         self._sync_tbl()
-        logits, self.caches = self._prefill_one(
-            self.base, self.bank, self.caches, np.int32(c),
+        m = int(self._method_of[c])
+        logits, self.caches = self._prefill_one[m](
+            self.base, self.banks[m], self.caches, np.int32(c),
+            np.int32(self._local_of[c]),
             jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += B * S
@@ -653,9 +750,18 @@ class ServingEngine:
         for i, (c, s) in enumerate(rows):
             clients[i], slots[i], mask[i] = c, s, True
         toks = self._last_tok[clients, slots]
-        logits, self.caches = self._compact_step(
-            self.base, self.bank, self.caches, jnp.asarray(toks),
-            jnp.asarray(clients), jnp.asarray(slots), jnp.asarray(mask))
+        if self._mixed:
+            # per-row method ids + bank-local adapter indices: one tick
+            # carries every bank's rows through the mixed compact step
+            logits, self.caches = self._compact_step(
+                self.base, tuple(self.banks), self.caches, jnp.asarray(toks),
+                jnp.asarray(clients), jnp.asarray(slots),
+                jnp.asarray(self._method_of[clients]),
+                jnp.asarray(self._local_of[clients]), jnp.asarray(mask))
+        else:
+            logits, self.caches = self._compact_step(
+                self.base, self.bank, self.caches, jnp.asarray(toks),
+                jnp.asarray(clients), jnp.asarray(slots), jnp.asarray(mask))
         lg = np.asarray(logits)
         row_of = {cs: i for i, cs in enumerate(rows)}
         self.stats["compact_rows"] += n
@@ -701,6 +807,13 @@ class ServingEngine:
         placement = self._placement.pop(id(req), None)
         if placement is not None:
             self.router.release(placement)
+
+    def release_banks(self):
+        """Release the per-bank adapter-HBM charges committed at
+        construction (mixed-method engines with a router attached)."""
+        for p in self._bank_placements:
+            self.router.release(p)
+        self._bank_placements = []
 
     # ------------------------------------------------------------------
     def simulate_policy(self, requests: List[Request], *, policy: str = None,

@@ -124,8 +124,24 @@ class PlacementRouter:
             f"no accelerator slot fits {nbytes / 1e9:.2f} GB of training "
             f"state (adapter + optimizer + activations)")
 
+    def route_bank(self, nbytes: float) -> Placement:
+        """Charge one SERVING bank's resident client-side weights: the
+        client-stacked adapter trees a mixed-method engine keeps on the
+        accelerator for its whole lifetime (per-bank HBM accounting of the
+        engine's bank registry). Like training state there is no offload
+        tier — adapters are read every decode tick. The engine releases the
+        charge via ``ServingEngine.release_banks()``."""
+        for s in self.slots.values():
+            if s.fits(nbytes):
+                p = Placement(s.slot_id, "bank", 0.0, int(nbytes))
+                self.commit(p)
+                return p
+        raise RuntimeError(
+            f"no accelerator slot fits {nbytes / 1e9:.3f} GB of serving-bank "
+            f"adapter weights")
+
     def commit(self, p: Placement):
-        if p.slot_id is not None and p.mode in ("gpu", "train"):
+        if p.slot_id is not None and p.mode in ("gpu", "train", "bank"):
             self.slots[p.slot_id].free_hbm -= p.cache_bytes
         elif p.slot_id is not None:
             self.slots[p.slot_id].free_hbm -= p.cache_bytes / self.cfg.n_layers
@@ -134,7 +150,7 @@ class PlacementRouter:
             self.host_free -= p.cache_bytes
 
     def release(self, p: Placement):
-        if p.slot_id is not None and p.mode in ("gpu", "train"):
+        if p.slot_id is not None and p.mode in ("gpu", "train", "bank"):
             self.slots[p.slot_id].free_hbm += p.cache_bytes
         elif p.slot_id is not None:
             self.slots[p.slot_id].free_hbm += p.cache_bytes / self.cfg.n_layers

@@ -6,12 +6,13 @@ Every combination asserts the tentpole contract end to end: each job's
 final adapter params and optimizer state match a dedicated
 ``make_baseline_train_step`` run of that job alone, regardless of which
 bank-mates churned around it or whether inference decode ticks were
-interleaved against the same base. The dense family holds BITWISE; MoE's
-scatter dispatch and the recurrent scans (mamba/RWKV state) are fused
-shape- and compilation-context-dependently by XLA between the vmapped
-bank and the solo program, so those families assert to 1-2 ulp (the
-tier-1 suite carries the strict bitwise contract on dense for every
-method × churn × interleave combination)."""
+interleaved against the same base. Dense and MoE hold BITWISE (MoE since
+the dispatch-body checkpoint + unbatched R=1 bucket — see
+tests/test_moe.py::TestVmapBitwise); the recurrent scans (mamba/RWKV
+state) are still fused shape- and compilation-context-dependently by XLA
+between the vmapped bank and the solo program, so those families assert
+to 1-2 ulp (the tier-1 suite carries the strict bitwise contract on
+dense for every method × churn × interleave combination)."""
 import functools
 
 import jax
@@ -31,10 +32,11 @@ from conftest import tiny
 pytestmark = pytest.mark.tier2
 
 ARCHS = [DENSE, MOE, HYBRID, RWKV]
-# vmapped-bank vs solo bitwise equality is structurally robust for dense;
-# MoE scatter dispatch and the recurrent scans fuse shape- and
+# vmapped-bank vs solo bitwise equality is structurally robust for dense,
+# and for MoE since the dispatch-body checkpoint boundary + unbatched R=1
+# bucket; the recurrent scans (mamba/RWKV) still fuse shape- and
 # compilation-context-dependently, leaving 1-2 ulp between the programs
-BITWISE_ARCHS = {DENSE}
+BITWISE_ARCHS = {DENSE, MOE}
 METHODS = ["lora", "ia3", "prefix"]
 TARGETS = {"lora": ("q", "v"), "ia3": ("k", "v", "down"), "prefix": ("q", "v")}
 

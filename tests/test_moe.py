@@ -1,12 +1,17 @@
-"""MoE dispatch: scatter path vs einsum oracle, capacity, aux loss."""
+"""MoE dispatch: scatter path vs einsum oracle, capacity, aux loss, and the
+bank-vs-solo bitwise contract (vmap drift regression)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.models import moe as moe_lib
+from repro.core import adapters as ad_lib
+from repro.core import symbiosis
+from repro.models import get_model, moe as moe_lib
 from repro.models.blocks import DEFAULT_LIN
+from repro.optim import adamw_init
 from conftest import tiny
-from repro.config import MOE
+from repro.config import MOE, AdapterConfig, TrainConfig
 
 
 def _setup(key, capacity_factor=8.0):
@@ -58,6 +63,89 @@ class TestCapacity:
         cfg, p, x = _setup(key)
         _, aux = moe_lib.moe_forward(p, cfg, x, DEFAULT_LIN, capacity_factor=8.0)
         assert 0.5 < float(aux) < 2.5
+
+
+class TestVmapBitwise:
+    """Regression: MoE bank rows must match their solo run BITWISE (not
+    rtol) — the ROADMAP "Bitwise vmap-vs-solo beyond dense" item.
+
+    Pre-fix, the vmapped bank backward drifted 1-2 ulp from the solo
+    program at some token counts (B=4,S=12 and B=1,S=24 reproduced it
+    reliably): XLA fused the two cotangent paths meeting at the router
+    probs differently between the batched and unbatched programs, and a
+    vmap-of-1 (the R=1 row bucket) still traced the batched variant. The
+    fix is two-sided — ``moe_forward`` runs its route->dispatch->combine
+    body inside a closure-converted ``jax.checkpoint`` so the MoE backward
+    is one self-contained recomputed subprogram, and
+    ``make_compact_train_step`` runs a one-row bucket through the unbatched
+    program the baseline runs."""
+
+    # shapes that reproduced the pre-fix drift, plus a clean control
+    SHAPES = [(4, 12), (1, 24)]
+
+    def _compact_vs_baseline(self, method, targets, R, B, S, n_prefix=4):
+        cfg = tiny(MOE)
+        acfg = AdapterConfig(method=method, rank=4, alpha=8.0,
+                             targets=targets, n_prefix=n_prefix)
+        tcfg = TrainConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                           max_grad_norm=1.0, remat=False, microbatch=0)
+        base = get_model(cfg).init_params(jax.random.PRNGKey(0))
+        compact = jax.jit(symbiosis.make_compact_train_step(
+            cfg, acfg, microbatch=0, remat=False, memory_optimized=True))
+        baseline = jax.jit(symbiosis.make_baseline_train_step(
+            cfg, acfg, tcfg, memory_optimized=True))
+        rng = np.random.default_rng(R * 100 + S)
+        adapters = [ad_lib.init_adapter(cfg, acfg, jax.random.PRNGKey(10 + j))
+                    for j in range(R)]
+        bank = jax.tree.map(lambda *xs: jnp.stack(xs), *adapters)
+        opt = jax.vmap(adamw_init)(bank)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (R, B, S)).astype(np.int32))}
+        batch["labels"] = batch["tokens"]
+        hyper = {"step": jnp.zeros((R,), jnp.int32),
+                 "lr": jnp.full((R,), tcfg.lr, jnp.float32),
+                 "warmup": jnp.full((R,), float(tcfg.warmup_steps), jnp.float32),
+                 "total": jnp.full((R,), float(tcfg.total_steps), jnp.float32),
+                 "wd": jnp.zeros((R,), jnp.float32),
+                 "gnorm": jnp.full((R,), tcfg.max_grad_norm, jnp.float32)}
+        new_bank, new_opt, _ = compact(
+            base, bank, opt, batch, jnp.arange(R, dtype=jnp.int32),
+            jnp.ones((R,), bool), hyper)
+        for j in range(R):
+            ref_a, ref_o, _ = baseline(base, adapters[j],
+                                       adamw_init(adapters[j]),
+                                       jax.tree.map(lambda x: x[j], batch), 0)
+            got = jax.tree.map(lambda x: x[j], (new_bank, new_opt))
+            for a, b in zip(jax.tree.leaves((ref_a, ref_o)),
+                            jax.tree.leaves(got)):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"MoE bank row {j} (R={R}, B={B}, S={S}, "
+                            f"{method}) drifted from its solo run")
+
+    def test_one_row_bucket_bitwise(self):
+        """R=1 (the smallest engine bucket) at a shape that drifted pre-fix."""
+        self._compact_vs_baseline("lora", ("q", "v"), R=1, B=4, S=12)
+
+    def test_vmapped_bucket_bitwise(self):
+        """A genuinely vmapped bucket at the same pre-fix-drifting shape."""
+        self._compact_vs_baseline("lora", ("q", "v"), R=2, B=4, S=12)
+
+    # the two distinct code paths are R=1 (unbatched) and R>1 (vmapped);
+    # lora sweeps both pre-fix-drifting shapes, ia3/prefix one each
+    SWEEP = ([("lora", ("q", "v"), R, shape)
+              for R in (1, 2, 4) for shape in [(4, 12), (1, 24)]]
+             + [(m, t, R, (4, 12))
+                for m, t in [("ia3", ("k", "v", "down")),
+                             ("prefix", ("q", "v"))]
+                for R in (1, 4)])
+
+    @pytest.mark.tier2
+    @pytest.mark.parametrize("method,targets,R,shape", SWEEP)
+    def test_row_bucket_sweep_bitwise(self, method, targets, R, shape):
+        """Row-bucket x shape x method sweep of the bitwise contract."""
+        B, S = shape
+        self._compact_vs_baseline(method, targets, R=R, B=B, S=S)
 
 
 class TestSharedExpert:

@@ -157,6 +157,74 @@ class TestPagedPrimitives:
         assert dense_axes["layers"]["k"] == 1     # dense: slot axis under L
 
 
+class TestPrefillPoolNoCopy:
+    """Regression (PR 3 known issue): prefill used to scan layer-stacked
+    page pools as xs/ys, re-materializing the WHOLE pool once per
+    ADMISSION. Pools must ride the prefill scan as fused CARRY (layer axis
+    folded into the page axis, like decode): asserted structurally — no
+    scan in the prefill jaxpr stacks a pool-sized output — and end-to-end —
+    the engine's donated pool buffer is updated in place across an
+    admission."""
+
+    @pytest.mark.parametrize("arch", [DENSE, HYBRID, ENCDEC])
+    def test_no_pool_sized_scan_output(self, arch):
+        cfg = tiny(arch)
+        model = get_model(cfg)
+        max_seq, B, S = 32, 2, 8
+        cache = jax.eval_shape(
+            lambda: model.init_cache(B, max_seq, page_block=8))
+        # pool leaves = leaves with a page axis (shape scales with the pool);
+        # per-slot leaves (cross caches, mamba state) legitimately ride ys
+        page_axes = symbiosis.cache_page_axes(cfg, max_seq, page_block=8)
+        flat_cache, treedef = jax.tree.flatten(cache)
+        flat_pax = treedef.flatten_up_to(page_axes)
+        pool_shapes = {leaf.shape for leaf, pax in zip(flat_cache, flat_pax)
+                       if pax is not None}
+        base = model.init_params(jax.random.PRNGKey(0))
+        real_cache = model.init_cache(B, max_seq, page_block=8)
+        batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+        if arch == ENCDEC:
+            batch["frames"] = jnp.zeros((B, cfg.n_frontend_tokens, cfg.d_model))
+        jaxpr = jax.make_jaxpr(
+            lambda c, b: model.prefill(base, b, c))(real_cache, batch)
+
+        def scan_ys_shapes(jxp, out):
+            for eqn in jxp.eqns:
+                if eqn.primitive.name == "scan":
+                    nc = eqn.params["num_carry"]
+                    out.update(v.aval.shape for v in eqn.outvars[nc:])
+                for v in eqn.params.values():
+                    if hasattr(v, "jaxpr"):
+                        scan_ys_shapes(v.jaxpr, out)
+            return out
+
+        ys_shapes = scan_ys_shapes(jaxpr.jaxpr, set())
+        stacked = pool_shapes & ys_shapes
+        assert not stacked, (
+            f"{arch}: prefill scan stacks pool-shaped outputs {stacked} — "
+            f"the page pool is being copied per admission")
+
+    def test_admission_updates_pool_in_place(self):
+        from repro.config import AdapterConfig
+        from repro.serving.engine import ServingEngine, Request
+        cfg = tiny(DENSE)
+        scfg = ServeConfig(n_clients=2, max_seq=48, page_block=8)
+        acfg = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+        base, bank, _ = symbiosis.init_system(cfg, acfg, 2,
+                                              jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, acfg, scfg, base, bank,
+                            max_batch_per_client=2)
+        rng = np.random.default_rng(0)
+        ptr = eng.caches["layers"]["k"].unsafe_buffer_pointer()
+        eng.submit(Request(client_id=0,
+                           prompt=rng.integers(0, cfg.vocab, (1, 6)).astype(np.int32),
+                           max_new_tokens=3))
+        eng.service_tick()                       # admission + prefill + decode
+        assert eng.caches["layers"]["k"].unsafe_buffer_pointer() == ptr, (
+            "paged admission produced a fresh pool buffer (pool copied "
+            "instead of donated in-place update)")
+
+
 class TestPagedCostModel:
     def test_cache_bytes_rounds_to_pages(self):
         cfg = tiny(DENSE, dtype="bfloat16")
