@@ -354,7 +354,7 @@ def run(quick: bool = False):
         one_opt = jax.tree.map(lambda x: x[:1], opt)
         one_batch = jax.tree.map(lambda x: x[:1], batch)
 
-        def baseline():
+        def baseline(C=C):
             outs = []
             for _ in range(C):
                 outs.append(one_step(base, one_bank, one_opt, one_batch, 0))

@@ -127,6 +127,19 @@ def main():
         rows = importlib.import_module("benchmarks.bench_multiclient").run_smoke()
         train_rows = importlib.import_module(
             "benchmarks.bench_finetune_service").run_smoke()
+        # Bucket-coverage smoke (docs/invariants.md pass 3): a short REAL
+        # engine workload — serving + live bank admission + finetune churn —
+        # under the trace-count guard, so a hot-path recompile outside the
+        # declared jit bucket sets fails the smoke job. Deliberately NOT
+        # wrapped around the timed sections above: the guard's per-dispatch
+        # cache probing is measurable at tiny-config tick times and would
+        # distort the tok/s ratios the floors assert on.
+        from repro.analysis.runner import run_buckets
+        res = run_buckets()
+        print(f"trace guard: {res.checked}")
+        if not res.ok:
+            raise SystemExit("bench smoke hit hot-path trace violations:\n"
+                             + "\n".join(str(v) for v in res.violations))
         print(f"bench smoke complete in {time.time() - t0:.1f}s")
         if args.json:
             _write_serving_json(args.json, rows)

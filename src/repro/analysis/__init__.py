@@ -1,0 +1,41 @@
+"""repro.analysis — machine-checked performance contracts of the hot path.
+
+Symbiosis's value proposition rests on structural invariants that profiling
+cannot see and unit tests only catch one instance at a time: the frozen base
+is never copied, gathered, or updated; pools/caches/optimizer state are
+rebound in place (true XLA input-output aliases, not silent copies); the
+jitted hot path compiles a closed, declared set of shapes (no recompiles
+mid-service); and client state never leaks across clients. This package
+turns each of those contracts into a named static-analysis pass over the
+jaxprs and compiled HLO of every hot-path step:
+
+* ``donation``    — every donated pool/cache/opt buffer survives as a true
+                    input-output alias in the compiled executable
+                    (``analysis.aliasing``); the frozen base is never
+                    aliased (never overwritten in place).
+* ``poolcopy``    — no op materializes a pool-sized intermediate outside
+                    in-place scatter/dynamic-update-slice/carry threading
+                    (``analysis.jaxpr_passes``), generalizing the PR-5
+                    "no scan stacks a pool-shaped ys" assertion; plus the
+                    MoE-body-checkpointed structural contract.
+* ``buckets``     — engines declare their closed set of legal jit cache
+                    keys; a trace-count guard flags any compile outside it
+                    (``analysis.tracecount``).
+* ``collectives`` — compiled-HLO audit flagging collectives whose operand
+                    or result is base-weight-sized — the "no accidental
+                    all-gather of the base" precondition for sharding
+                    (``analysis.collectives`` over ``launch.hlo_analysis``).
+* ``taint``       — jaxpr-level frozen-base taint (no step output is an
+                    updated base-weight tensor) and differential
+                    client-isolation probes (perturbing one client's
+                    adapter/job state leaves every other client's outputs
+                    and state bit-identical) (``analysis.taint``).
+
+Run locally:  ``PYTHONPATH=src python -m repro.analysis --all``
+(see docs/invariants.md). Every pass ships a mutation self-test in
+tests/test_analysis.py: a deliberately broken program the pass must catch,
+next to the real engine step it must pass.
+"""
+from repro.analysis.report import PassResult, Violation
+
+__all__ = ["PassResult", "Violation"]

@@ -1,0 +1,154 @@
+"""Donation/aliasing pass: donated state must survive as a true alias.
+
+The hidden-copy class PR 3 hit: a buffer is donated to ``jax.jit`` but XLA
+cannot alias it (dtype/shape mismatch with any output, or the argument is
+silently pruned as unused), so every step materializes a fresh pool-sized
+allocation — with **no** compile-time warning on the default
+``keep_unused=False`` path. This pass parses the compiled HLO header and
+proves, per donated leaf, that an ``input_output_alias`` entry consumes a
+parameter of exactly that shape/dtype. It also proves the converse for the
+frozen base: no base-weight parameter may be aliased (aliasing the base
+would mean the step overwrites shared weights in place).
+
+Identification is by (hlo dtype, dims) multiset matching against the
+``entry_computation_layout`` parameter list — parameter numbering cannot be
+trusted because XLA prunes unused (even donated) arguments from the entry
+layout entirely; a donated leaf whose shape is absent from the aliased-
+parameter multiset is exactly the silently-dropped-donation failure mode.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.analysis.report import PassResult
+
+# f32[2,16,8]{...} — reuse the dims; layout suffix optional.
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\](?:\{[^}]*\})?")
+# { {out_index}: (param_number, {}, may-alias) } entries.
+_ALIAS_ENTRY_RE = re.compile(r"\{[0-9, ]*\}:\s*\((\d+),\s*\{[^}]*\}(?:,\s*[\w-]+)?\)")
+_ENTRY_LAYOUT_RE = re.compile(r"entry_computation_layout=\{\((.*?)\)->", re.S)
+
+
+def _balanced_block(text: str, key: str):
+    """Contents of the brace block following ``key`` (entries themselves
+    contain nested ``{}`` so a non-greedy regex can't delimit it)."""
+    i = text.find(key)
+    if i < 0:
+        return None
+    i = text.index("{", i + len(key))
+    depth, start = 0, i + 1
+    for j in range(i, len(text)):
+        depth += {"{": 1, "}": -1}.get(text[j], 0)
+        if depth == 0:
+            return text[start:j]
+    return None
+
+_HLO_DTYPE = {
+    "float32": "f32", "float64": "f64", "float16": "f16", "bfloat16": "bf16",
+    "int8": "s8", "int16": "s16", "int32": "s32", "int64": "s64",
+    "uint8": "u8", "uint16": "u16", "uint32": "u32", "uint64": "u64",
+    "bool": "pred",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+}
+
+
+def hlo_dtype(dtype: Any) -> str:
+    """numpy/jax dtype -> HLO element-type string (e.g. float32 -> f32)."""
+    return _HLO_DTYPE.get(np.dtype(dtype).name, np.dtype(dtype).name)
+
+
+def leaf_sig(leaf: Any) -> tuple[str, tuple[int, ...]]:
+    """(hlo dtype, dims) signature of an array(-like) leaf."""
+    return hlo_dtype(leaf.dtype), tuple(leaf.shape)
+
+
+def parse_entry_params(hlo_text: str) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (dtype, dims) of the entry computation's *kept* parameters."""
+    m = _ENTRY_LAYOUT_RE.search(hlo_text)
+    if not m:
+        return []
+    out = []
+    for dt, dims in _SHAPE_RE.findall(m.group(1)):
+        out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def parse_aliased_params(hlo_text: str) -> list[int]:
+    """Parameter numbers consumed by input_output_alias entries."""
+    block = _balanced_block(hlo_text, "input_output_alias=")
+    if block is None:
+        return []
+    return [int(p) for p in _ALIAS_ENTRY_RE.findall(block)]
+
+
+def compile_text(fn, args, donate_argnums=()) -> str:
+    """Compiled-HLO text of ``jit(fn)`` on ``args`` (abstract compile only)."""
+    jitted = jax.jit(fn, donate_argnums=tuple(donate_argnums))
+    return jitted.lower(*args).compile().as_text()
+
+
+def check_donation(
+    hlo_text: str,
+    donated_leaves,
+    *,
+    target: str,
+    frozen_leaves=(),
+    pass_name: str = "donation",
+) -> PassResult:
+    """Check donated leaves alias through; frozen leaves never do.
+
+    ``donated_leaves``: (path, leaf) pairs that were donated and must each
+    map onto a distinct aliased parameter of identical (dtype, dims).
+    ``frozen_leaves``: (path, leaf) pairs (the base) that must account for
+    zero of the aliased parameters.
+    """
+    res = PassResult(pass_name, target)
+    params = parse_entry_params(hlo_text)
+    aliased = parse_aliased_params(hlo_text)
+    sig_budget: Counter = Counter()
+    for p in aliased:
+        if p >= len(params):
+            res.add(f"alias entry references parameter {p} outside entry layout "
+                    f"({len(params)} params)", param=p)
+            continue
+        sig_budget[params[p]] += 1
+    res.checked["aliased_params"] = len(aliased)
+    res.checked["donated_leaves"] = len(donated_leaves)
+
+    for path, leaf in donated_leaves:
+        sig = leaf_sig(leaf)
+        if sig_budget[sig] > 0:
+            sig_budget[sig] -= 1
+        else:
+            res.add(
+                f"donated buffer {path} {sig[0]}{list(sig[1])} has no "
+                "input-output alias in the compiled executable — the donation "
+                "was silently dropped (unused-arg pruning or shape mismatch) "
+                "and each step will materialize a fresh copy",
+                path=str(path), dtype=sig[0], dims=list(sig[1]),
+            )
+
+    # Whatever alias budget remains must not be explainable only by a frozen
+    # (base) leaf: an aliased parameter with a base-weight signature that no
+    # donated leaf claimed means the executable overwrites the shared base.
+    frozen_sigs = Counter(leaf_sig(leaf) for _, leaf in frozen_leaves)
+    for sig, n in sig_budget.items():
+        if n > 0 and frozen_sigs[sig] > 0:
+            res.add(
+                f"{n} aliased parameter(s) of frozen-base shape "
+                f"{sig[0]}{list(sig[1])} not claimed by any donated buffer — "
+                "the step aliases (overwrites) shared base weights",
+                dtype=sig[0], dims=list(sig[1]), count=n,
+            )
+    return res
+
+
+def donated_leaf_paths(tree) -> list[tuple[str, Any]]:
+    """Flatten a pytree into (path-string, leaf) pairs."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]

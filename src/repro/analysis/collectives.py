@@ -1,0 +1,83 @@
+"""Collective audit: no collective may move a base-weight-sized tensor.
+
+The precondition for the sharding tentpole (ROADMAP): once hot-path steps
+compile under a real mesh, an accidental replication of the frozen base —
+XLA inserting an ``all-gather`` whose destination is a full base weight —
+would silently multiply the dominant HBM/ICI cost per step. This pass
+compiles a step under a mesh spec, walks the partitioned HLO with
+``launch.hlo_analysis.find_collectives`` (loop-aware, async pairs counted
+once), and flags:
+
+* **error** — a collective whose result (any tuple element) has exactly a
+  base-leaf (dtype, dims) signature: the step gathers/reduces a full base
+  weight;
+* **warning** — a collective moving at least ``threshold_bytes`` (default:
+  the largest base leaf) without an exact signature match: not provably
+  the base, but base-scale traffic worth a look.
+
+Expected, legal traffic — activation collectives, adapter-sized
+reductions — passes untouched. ``allow_kinds`` downgrades exact-base hits
+of those kinds to warnings: the FSDP executor mode deliberately
+``all-gather``\\ s frozen weights per layer (see ``launch.shardings``), so
+gather-type collectives at base shape are design, while a reduce-type
+collective at base shape is always gradient sync of the frozen base — an
+error no mode permits.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import numpy as np
+
+from repro.analysis.report import ERROR, PassResult, WARNING
+from repro.launch import hlo_analysis
+
+
+def base_leaf_sigs(base_params) -> set:
+    """(hlo dtype, dims) signatures of every frozen-base leaf."""
+    from repro.analysis.aliasing import hlo_dtype
+    return {(hlo_dtype(leaf.dtype), tuple(leaf.shape))
+            for leaf in jax.tree.leaves(base_params)}
+
+
+def audit_collectives(hlo_text: str, base_params, *, target: str,
+                      threshold_bytes: int | None = None,
+                      allow_kinds: Iterable[str] = (),
+                      pass_name: str = "collectives") -> PassResult:
+    """Audit one partitioned module's collectives against the base tree."""
+    res = PassResult(pass_name, target)
+    sigs = base_leaf_sigs(base_params)
+    leaf_bytes = [int(np.asarray(leaf).nbytes)
+                  for leaf in jax.tree.leaves(base_params)]
+    if threshold_bytes is None:
+        threshold_bytes = max(leaf_bytes) if leaf_bytes else 1 << 30
+    ops = hlo_analysis.find_collectives(hlo_text)
+    res.checked["collectives"] = len(ops)
+    res.checked["threshold_bytes"] = int(threshold_bytes)
+    for op in ops:
+        hit = [s for s in op.shapes if s in sigs]
+        if hit:
+            dt, dims = hit[0]
+            allowed = op.kind in allow_kinds
+            res.add(
+                f"{op.kind} (x{op.mult} in {op.computation}) moves a tensor "
+                f"of exact base-weight shape {dt}{list(dims)} — "
+                + ("a per-layer frozen-weight gather (allowed FSDP mode, "
+                   "flagged for visibility)" if allowed else
+                   "the step gathers or reduces a full frozen-base leaf "
+                   "per execution"),
+                WARNING if allowed else ERROR,
+                kind=op.kind, dtype=dt, dims=list(dims), mult=op.mult,
+                hlo=op.line[:200],
+            )
+        elif op.bytes >= threshold_bytes:
+            res.add(
+                f"{op.kind} (x{op.mult} in {op.computation}) moves "
+                f"{op.bytes} bytes >= largest base leaf "
+                f"({threshold_bytes}B) without matching a base shape — "
+                "base-scale collective traffic",
+                WARNING, kind=op.kind, bytes=int(op.bytes), mult=op.mult,
+                hlo=op.line[:200],
+            )
+    return res

@@ -1,0 +1,238 @@
+"""Standard hot-path step targets the analysis passes run over.
+
+A ``StepTarget`` bundles one hot-path jitted step exactly as an engine
+calls it: the unjitted builder output from ``core.symbiosis``, concrete
+tiny-config arguments, the donation signature the engine's own memoized
+``jax.jit`` wrapper uses, and the protected-state metadata each pass needs
+(donated leaves, frozen-base leaves, pool-sized signatures). The CLI and
+the tier-1 mutation tests both consume these bundles, so what gets
+analyzed IS the program the engines run — just at test-sized shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.analysis.aliasing import donated_leaf_paths
+from repro.analysis.jaxpr_passes import leaf_size_sigs
+from repro.config import (AdapterConfig, ModelConfig, ServeConfig,
+                          TrainConfig, DENSE, MOE)
+from repro.core import adapters as adapters_lib
+from repro.core import symbiosis
+
+
+def tiny_config(arch: str = DENSE, **kw) -> ModelConfig:
+    """Analysis-sized model config (mirrors the tier-1 test shapes)."""
+    base = {"name": f"analysis-{arch}", "arch": arch, "n_layers": 2,
+            "d_model": 64, "n_heads": 4, "n_kv_heads": 2, "d_ff": 128,
+            "vocab": 128, "dtype": "float32", "param_dtype": "float32"}
+    if arch == MOE:
+        base.update(n_experts=4, top_k=2, n_shared_experts=1, d_expert=32,
+                    first_dense_layers=1, n_layers=3)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@dataclasses.dataclass
+class StepTarget:
+    """One hot-path step + everything the passes need to judge it."""
+
+    name: str
+    fn: Callable                      # unjitted step
+    args: tuple
+    donate_argnums: tuple             # the engine's donation signature
+    base_argnum: int = 0
+    # pool-copy protection: leaves that must only be written in place
+    protected_leaves: list = dataclasses.field(default_factory=list)
+    kind: str = "serving"             # serving | train
+    arch: str = DENSE
+    # runtime isolation-probe hook (None = jaxpr/HLO passes only)
+    isolation: Any = None
+
+    @property
+    def donated(self):
+        out = []
+        for i in self.donate_argnums:
+            out.extend((f"arg{i}{p}", leaf)
+                       for p, leaf in donated_leaf_paths(self.args[i]))
+        return out
+
+    @property
+    def frozen(self):
+        return donated_leaf_paths(self.args[self.base_argnum])
+
+    @property
+    def protected_sigs(self):
+        return leaf_size_sigs(self.protected_leaves)
+
+    def jaxpr(self):
+        return jax.make_jaxpr(self.fn)(*self.args)
+
+
+def _pool_leaves(cfg, scfg, caches):
+    """The global-pool cache leaves, identified structurally (never by
+    shape heuristics): leaves with a non-None page axis."""
+    cache_kw = symbiosis.serve_cache_kwargs(cfg, scfg)
+    page_axes = symbiosis.cache_page_axes(cfg, scfg.max_seq, **cache_kw)
+    flat_c = jax.tree.leaves(caches)
+    flat_p = jax.tree.leaves(page_axes, is_leaf=lambda x: x is None)
+    return [leaf for leaf, pax in zip(flat_c, flat_p) if pax is not None]
+
+
+def _serving_state(cfg, acfg, scfg, *, n_clients=2, max_b=2, seed=0):
+    base, bank, _ = symbiosis.init_system(
+        cfg, acfg, n_clients, jax.random.PRNGKey(seed))
+    cache_kw = symbiosis.serve_cache_kwargs(cfg, scfg)
+    caches = symbiosis.init_client_caches(
+        cfg, n_clients, max_b, scfg.max_seq, **cache_kw)
+    if "page_block" in cache_kw:
+        # disjoint global page assignment per (client, slot) — what the
+        # engine's allocator would have pushed: client c owns [c*P, (c+1)*P)
+        n_blocks = -(-scfg.max_seq // scfg.page_block)
+        P = max_b * n_blocks
+        tbl = np.zeros((n_clients, max_b, n_blocks), np.int32)
+        for c in range(n_clients):
+            for s in range(max_b):
+                tbl[c, s] = c * P + s * n_blocks + np.arange(n_blocks)
+        caches = dict(caches, block_tbl=jax.numpy.asarray(tbl))
+    return base, bank, caches
+
+
+def serving_targets(arch: str = DENSE) -> list:
+    """Prefill, masked decode (dense layout), compact decode (paged),
+    mixed-bank compact decode — the ServingEngine's jitted surface."""
+    cfg = tiny_config(arch)
+    lora = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+    C, B = 2, 2
+    out = []
+
+    # --- paged layout: prefill + compact decode -------------------------
+    scfg_p = ServeConfig(n_clients=C, max_seq=32, page_block=8)
+    base, bank, caches = _serving_state(cfg, lora, scfg_p, n_clients=C, max_b=B)
+    pool = _pool_leaves(cfg, scfg_p, caches)
+
+    S_pad = 8
+    toks = np.zeros((B, S_pad), np.int32)
+    toks[0, :6] = np.arange(1, 7)
+    lengths = np.array([6, 0], np.int32)
+    mask = np.array([True, False])
+    out.append(StepTarget(
+        name=f"serving_prefill[{arch}-paged]",
+        fn=symbiosis.make_client_prefill(cfg, lora, scfg_p),
+        args=(base, bank, caches, np.int32(0), np.int32(0),
+              jax.numpy.asarray(toks), jax.numpy.asarray(lengths),
+              jax.numpy.asarray(mask)),
+        donate_argnums=(2,), protected_leaves=pool, arch=arch))
+
+    nb = 4
+    clients = np.array([0, 0, 1, 0], np.int32)
+    slots = np.array([0, 1, 0, 0], np.int32)
+    rmask = np.array([True, True, True, False])
+    dtoks = np.ones((nb,), np.int32)
+    out.append(StepTarget(
+        name=f"compact_decode[{arch}-paged]",
+        fn=symbiosis.make_compact_decode_step(cfg, lora, scfg_p),
+        args=(base, bank, caches, jax.numpy.asarray(dtoks),
+              jax.numpy.asarray(clients), jax.numpy.asarray(slots),
+              jax.numpy.asarray(rmask)),
+        donate_argnums=(2,), protected_leaves=pool, arch=arch,
+        isolation={"clients": clients, "victim": 1,
+                   "scfg": scfg_p, "extra": (dtoks, clients, slots, rmask)}))
+
+    # --- dense layout: the masked bank-wide decode path -----------------
+    scfg_d = ServeConfig(n_clients=C, max_seq=32)
+    base_d, bank_d, caches_d = _serving_state(cfg, lora, scfg_d,
+                                              n_clients=C, max_b=B)
+    active = np.zeros((C, B), bool)
+    active[0, 0] = active[1, 1] = True
+    out.append(StepTarget(
+        name=f"masked_decode[{arch}-dense]",
+        fn=symbiosis.make_masked_decode_step(cfg, lora, scfg_d),
+        args=(base_d, bank_d, caches_d,
+              jax.numpy.asarray(np.ones((C, B), np.int32)),
+              jax.numpy.asarray(active)),
+        donate_argnums=(2,), arch=arch))
+
+    # --- mixed-method registry: lora + ia3 through one compact tick -----
+    if arch == DENSE:
+        ia3 = AdapterConfig(method="ia3", targets=("k", "v", "down"))
+        bank_i = adapters_lib.init_client_bank(cfg, ia3, 1,
+                                               jax.random.PRNGKey(3))
+        bank_l = jax.tree.map(lambda x: x[:1], bank)
+        caches_m = symbiosis.init_client_caches(
+            cfg, 2, B, scfg_p.max_seq,
+            **symbiosis.serve_cache_kwargs(cfg, scfg_p))
+        pool_m = _pool_leaves(cfg, scfg_p, caches_m)
+        methods = np.array([0, 1, 0, 0], np.int32)
+        locs = np.array([0, 0, 0, 0], np.int32)
+        out.append(StepTarget(
+            name="compact_decode[mixed-lora+ia3]",
+            fn=symbiosis.make_compact_decode_step(cfg, (lora, ia3), scfg_p),
+            args=(base, (bank_l, bank_i), caches_m,
+                  jax.numpy.asarray(dtoks), jax.numpy.asarray(clients),
+                  jax.numpy.asarray(slots), jax.numpy.asarray(methods),
+                  jax.numpy.asarray(locs), jax.numpy.asarray(rmask)),
+            donate_argnums=(2,), protected_leaves=pool_m, arch=arch))
+    return out
+
+
+def train_targets(arch: str = DENSE) -> list:
+    """Compact multi-job train step + the solo baseline oracle — the
+    FinetuneEngine's jitted surface and its byte-identity reference."""
+    cfg = tiny_config(arch)
+    lora = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+    cap, R, Bt, St = 4, 2, 2, 8
+    base, bank, opt = symbiosis.init_system(
+        cfg, lora, cap, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jax.numpy.asarray(
+            rng.integers(0, cfg.vocab, (R, Bt, St)).astype(np.int32)),
+        "labels": jax.numpy.asarray(
+            rng.integers(0, cfg.vocab, (R, Bt, St)).astype(np.int32)),
+    }
+    slots = jax.numpy.asarray(np.array([0, 2], np.int32))
+    rmask = jax.numpy.asarray(np.array([True, True]))
+    hyper = {
+        "step": jax.numpy.asarray(np.array([0, 5], np.int32)),
+        "lr": jax.numpy.asarray(np.array([1e-3, 2e-3], np.float32)),
+        "warmup": jax.numpy.asarray(np.array([2.0, 2.0], np.float32)),
+        "total": jax.numpy.asarray(np.array([10.0, 10.0], np.float32)),
+        "wd": jax.numpy.asarray(np.array([0.0, 0.01], np.float32)),
+        "gnorm": jax.numpy.asarray(np.array([np.inf, 1.0], np.float32)),
+    }
+    # protect the full-capacity bank/opt leaves: R < cap, so any op that
+    # materializes a full bank-sized tensor outside the scatter-back is a
+    # hidden copy (the gathered rows are strictly smaller)
+    protected = jax.tree.leaves(bank) + jax.tree.leaves(opt)
+    out = [StepTarget(
+        name=f"compact_train[{arch}-lora]",
+        fn=symbiosis.make_compact_train_step(cfg, lora),
+        args=(base, bank, opt, batch, slots, rmask, hyper),
+        donate_argnums=(1, 2), protected_leaves=protected,
+        kind="train", arch=arch,
+        isolation={"perturb_row": 1, "victim_slot": int(np.asarray(slots)[1]),
+                   "perturb_argnums": (3, 6)})]
+
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    adapter = jax.tree.map(lambda x: x[0], bank)
+    opt_one = jax.tree.map(lambda x: x[0], opt)
+    solo_batch = jax.tree.map(lambda x: x[0], batch)
+    out.append(StepTarget(
+        name=f"baseline_train[{arch}-lora]",
+        fn=symbiosis.make_baseline_train_step(cfg, lora, tcfg,
+                                              memory_optimized=True),
+        args=(base, adapter, opt_one, solo_batch, jax.numpy.int32(0)),
+        donate_argnums=(1, 2), kind="train", arch=arch))
+    return out
+
+
+def all_targets() -> list:
+    """The CLI's standard bundle: serving + train on dense, MoE train for
+    the checkpoint-structure contract."""
+    return (serving_targets(DENSE)
+            + train_targets(DENSE)
+            + train_targets(MOE))

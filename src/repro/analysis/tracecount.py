@@ -1,0 +1,151 @@
+"""Retrace/bucket-coverage pass: the hot path compiles a closed key set.
+
+Engines declare their legal jit cache keys per step family via
+``trace_domain()`` — e.g. compact decode may compile exactly the row
+buckets ``{4, 8, ..., total_rows}``, prefill exactly the power-of-two
+prompt buckets — and every jitted hot-path call goes through
+``dispatch(owner, family, key, fn, *args)``. When a ``TraceGuard`` is
+active (the analysis CLI, or the tier-1 autouse fixture in
+tests/conftest.py), dispatch compares ``fn._cache_size()`` around the call:
+an actual XLA compile outside the declared domain, or a second compile of
+an already-compiled (engine, family, key) — a recompile on the hot path —
+is a violation naming the offending shape key. With no guard active the
+dispatch indirection is a plain call (no per-tick overhead).
+
+Families may be declared ``unbounded`` (recurrent-family prefill runs at
+true prompt length by design; the ``bank_prefill`` seed ablation): their
+compiles are counted, never flagged. Engines that grow or register banks
+at admission time bump ``_trace_epoch`` so the legitimately-new shapes
+after growth don't read as hot-path recompiles.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Iterable, Optional
+
+from repro.analysis.report import ERROR, PassResult, Violation
+
+OK = "ok"
+UNBOUNDED = "unbounded"
+UNDECLARED = "undeclared"
+OUT_OF_DOMAIN = "out_of_domain"
+
+
+class TraceDomain:
+    """A closed (or declared-open) set of legal jit keys per step family."""
+
+    def __init__(self):
+        self._fams: dict[str, tuple] = {}
+
+    def declare(self, family: str, keys: Optional[Iterable] = None, *,
+                predicate: Optional[Callable[[Any], bool]] = None,
+                unbounded: bool = False) -> "TraceDomain":
+        self._fams[family] = (
+            frozenset(keys) if keys is not None else None, predicate, unbounded)
+        return self
+
+    def families(self) -> dict[str, Any]:
+        return {f: (sorted(ks, key=repr) if ks is not None else
+                    ("unbounded" if ub else "predicate"))
+                for f, (ks, _, ub) in self._fams.items()}
+
+    def check(self, family: str, key: Any) -> str:
+        if family not in self._fams:
+            return UNDECLARED
+        keys, predicate, unbounded = self._fams[family]
+        if unbounded:
+            return UNBOUNDED
+        if keys is not None and key in keys:
+            return OK
+        if predicate is not None and predicate(key):
+            return OK
+        return OUT_OF_DOMAIN
+
+
+class TraceGuard:
+    """Records hot-path compiles and turns the illegal ones into violations."""
+
+    def __init__(self, target: str = "engine"):
+        self.target = target
+        self.violations: list[Violation] = []
+        self.n_calls = 0
+        self.n_compiles = 0
+        self.n_unbounded = 0
+        self._compiled: set[tuple] = set()
+
+    def on_call(self) -> None:
+        self.n_calls += 1
+
+    def on_compile(self, owner, family: str, key: Any) -> None:
+        self.n_compiles += 1
+        domain = owner.trace_domain()
+        status = domain.check(family, key)
+        if status == UNBOUNDED:
+            self.n_unbounded += 1
+            return
+        if status == UNDECLARED:
+            self.violations.append(Violation(
+                "buckets", self.target,
+                f"compile in undeclared step family {family!r} (key={key!r}) "
+                f"on {type(owner).__name__} — the engine's trace_domain() "
+                "does not cover this jitted step",
+                ERROR, {"family": family, "key": repr(key)}))
+            return
+        ident = (id(owner), getattr(owner, "_trace_epoch", 0), family, key)
+        if status == OUT_OF_DOMAIN:
+            self.violations.append(Violation(
+                "buckets", self.target,
+                f"hot-path compile outside the declared bucket set: family "
+                f"{family!r} key={key!r} not in "
+                f"{owner.trace_domain().families().get(family)}",
+                ERROR, {"family": family, "key": repr(key)}))
+        elif ident in self._compiled:
+            self.violations.append(Violation(
+                "buckets", self.target,
+                f"RECOMPILE of already-compiled key {key!r} in family "
+                f"{family!r} — a shape outside the declared bucket leaked "
+                "into the hot path",
+                ERROR, {"family": family, "key": repr(key)}))
+        self._compiled.add(ident)
+
+    def result(self, pass_name: str = "buckets") -> PassResult:
+        res = PassResult(pass_name, self.target)
+        res.violations = list(self.violations)
+        res.checked = {"calls": self.n_calls, "compiles": self.n_compiles,
+                       "unbounded_compiles": self.n_unbounded}
+        return res
+
+
+_ACTIVE: Optional[TraceGuard] = None
+
+
+def active_guard() -> Optional[TraceGuard]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def guard(target: str = "engine"):
+    """Activate a TraceGuard for the dynamic extent of the block."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, TraceGuard(target)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def dispatch(owner, family: str, key: Any, fn: Callable, *args):
+    """Run a jitted hot-path step, reporting any compile to the active guard.
+
+    ``owner`` must expose ``trace_domain()``; ``fn`` must be a ``jax.jit``
+    callable (its ``_cache_size()`` detects whether this call compiled).
+    """
+    g = _ACTIVE
+    if g is None:
+        return fn(*args)
+    g.on_call()
+    before = fn._cache_size()
+    out = fn(*args)
+    if fn._cache_size() > before:
+        g.on_compile(owner, family, key)
+    return out

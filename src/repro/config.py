@@ -97,18 +97,18 @@ class ModelConfig:
         kv = max(1, min(self.n_kv_heads, heads))
         while heads % kv:
             kv -= 1
-        changes = dict(
-            name=self.name + "-smoke",
-            n_layers=n_layers,
-            d_model=d_model,
-            n_heads=heads,
-            n_kv_heads=kv,
-            head_dim=64 if self.head_dim else 0,
-            d_ff=d_model * 3,
-            vocab=vocab,
-            dtype="float32",
-            param_dtype="float32",
-        )
+        changes = {
+            "name": self.name + "-smoke",
+            "n_layers": n_layers,
+            "d_model": d_model,
+            "n_heads": heads,
+            "n_kv_heads": kv,
+            "head_dim": 64 if self.head_dim else 0,
+            "d_ff": d_model * 3,
+            "vocab": vocab,
+            "dtype": "float32",
+            "param_dtype": "float32",
+        }
         if self.n_experts:
             changes.update(
                 n_experts=min(self.n_experts, n_experts),

@@ -27,7 +27,7 @@ import jax
 from repro.config import SHAPES
 from repro.configs import ASSIGNED, get_config
 from repro.launch import hlo_analysis, specs
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.common.tree import tree_bytes
 
 
@@ -55,9 +55,9 @@ def run_one(arch: str, shape: str, *, multi_pod: bool = False,
     # Donate the mutable state: caches for serve steps, bank+opt for train —
     # decode must update its KV cache in place or HBM doubles.
     donate = (1, 2) if shape == "train_4k" else (2,)
-    # jax.set_mesh makes the soft sharding constraints in model code
-    # (repro.common.constrain) bind to the production mesh.
-    with jax.set_mesh(mesh):
+    # The ambient mesh makes the soft sharding constraints in model
+    # code (repro.common.constrain) bind to the production mesh.
+    with mesh_context(mesh):
         lowered = jax.jit(bundle.fn, donate_argnums=donate).lower(*bundle.args)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -99,6 +99,15 @@ def run_one(arch: str, shape: str, *, multi_pod: bool = False,
     coll = hlo_analysis.collective_bytes(hlo)
     walker = hlo_analysis.analyze_module(hlo)
 
+    # ---- base-collective audit (docs/invariants.md pass 4) ------------
+    # Per-layer frozen-weight all-gathers are the FSDP executor mode;
+    # a reduce-type collective at an exact base-leaf shape is an error.
+    from repro.analysis.collectives import audit_collectives
+    audit = audit_collectives(
+        hlo, bundle.args[0], target=f"{arch}x{shape}x{mesh_name}",
+        allow_kinds=("all-gather", "all-gather-start"))
+    rec["base_collective_audit"] = audit.to_dict()
+
     flops = walker["flops"]
     hbm_bytes = walker["hbm_bytes"]
     rl = hlo_analysis.Roofline(flops=flops, hbm_bytes=hbm_bytes,
@@ -128,6 +137,9 @@ def run_one(arch: str, shape: str, *, multi_pod: bool = False,
         print(f"  collectives: {coll}")
         print(f"  roofline: compute={rl.compute_s:.4f}s memory={rl.memory_s:.4f}s "
               f"collective={rl.collective_s:.4f}s dominant={rl.dominant}")
+        if not audit.ok:
+            for v in audit.violations:
+                print(f"  base-collective audit: {v}")
         print(f"  MODEL_FLOPS/HLO_FLOPS = {rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)}")
 
     if out_dir:

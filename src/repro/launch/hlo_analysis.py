@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from typing import Dict
 
 from repro.common.hardware import V5E, Chip
@@ -25,13 +26,37 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 # e.g.  bf16[16,1024,512]{2,1,0}   or   f32[] (scalar)
 _SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?|pred)\[([0-9,]*)\]")
 
+_warned_dtypes: set = set()
+
 
 def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES and dtype not in _warned_dtypes:
+        _warned_dtypes.add(dtype)
+        warnings.warn(
+            f"hlo_analysis: unknown HLO element type {dtype!r}; assuming "
+            "4 bytes/element — add it to _DTYPE_BYTES for exact accounting",
+            stacklevel=3)
     n = 1
     if dims:
         for d in dims.split(","):
             n *= int(d)
     return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _collective_result_bytes(result_str: str, *, async_start: bool) -> int:
+    """Traffic bytes of one collective's result string.
+
+    Sync collectives (and variadic tuple results) sum every tuple element.
+    An async ``-start`` returns a tuple carrying BOTH the operand alias and
+    the destination buffer (plus context scalars on some backends); summing
+    it would double-count the pair, so only the largest element — the
+    destination a device receives — is charged, and the matching ``-done``
+    (a read of that same buffer) is charged nothing by the callers.
+    """
+    sizes = [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_str)]
+    if not sizes:
+        return 0
+    return max(sizes) if async_start and len(sizes) > 1 else sum(sizes)
 
 
 _OP_RE = re.compile(
@@ -105,9 +130,8 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
             m = _OP_RE.search(line)
             if m and m.group(3) != "-done":
                 kind = m.group(2)
-                result = m.group(1)
-                total = sum(_shape_bytes(d, dims)
-                            for d, dims in _SHAPE_RE.findall(result))
+                total = _collective_result_bytes(
+                    m.group(1), async_start=m.group(3) == "-start")
                 out[kind] += total * mult
                 out["n_ops"] += mult
             wm = _WHILE_RE.search(line)
@@ -123,6 +147,65 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         walk(entry, 1)
     out["total"] = sum(out[k] for k in _COLLECTIVES)
     return out
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    """One collective instruction found in a module, loop-aware.
+
+    ``shapes`` lists every (dtype, dims) element of the result (async
+    ``-start`` tuples carry both the operand alias and the destination);
+    ``bytes`` is the de-duplicated traffic charge of the op."""
+    kind: str
+    bytes: int
+    shapes: list
+    mult: int
+    computation: str
+    line: str
+
+
+def find_collectives(hlo_text: str) -> list:
+    """Structured listing of every collective (``-done`` halves skipped),
+    with while-loop multipliers — the walk ``collective_bytes`` totals."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    found: list = []
+    seen = set()
+
+    def walk(comp: str, mult: int):
+        if comp not in comps or (comp, mult) in seen:
+            return
+        seen.add((comp, mult))
+        for line in comps[comp]:
+            m = _OP_RE.search(line)
+            if m and m.group(3) != "-done":
+                shapes = [(d, tuple(int(x) for x in dims.split(",") if x))
+                          for d, dims in _SHAPE_RE.findall(m.group(1))]
+                found.append(CollectiveOp(
+                    kind=m.group(2),
+                    bytes=_collective_result_bytes(
+                        m.group(1), async_start=m.group(3) == "-start"),
+                    shapes=shapes, mult=mult, computation=comp,
+                    line=line.strip()))
+            wm = _WHILE_RE.search(line)
+            if wm:
+                trips = _trip_count(comps.get(wm.group(1), []))
+                walk(wm.group(2), mult * trips)
+            elif "fusion(" in line or "call(" in line or "custom-call(" in line:
+                for callee in _CALL_RE.findall(line):
+                    walk(callee, mult)
+
+    if entry:
+        walk(entry, 1)
+    return found
 
 
 # ---------------------------------------------------------------------------
@@ -220,7 +303,9 @@ def analyze_module(hlo_text: str) -> Dict[str, float]:
             base_op = opcode.replace("-start", "").replace("-done", "")
             if base_op in _COLLECTIVES:
                 if not opcode.endswith("-done"):
-                    out[base_op] += _result_bytes(result_str) * mult
+                    out[base_op] += _collective_result_bytes(
+                        result_str,
+                        async_start=opcode.endswith("-start")) * mult
                     out["coll_ops"] += mult
                 continue
             if opcode == "dot":

@@ -31,6 +31,16 @@ def make_host_mesh():
     return _make_mesh((1, 1), ("data", "model"))
 
 
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` across jax versions: releases without it fall
+    back to the ``Mesh`` object's own context manager (the legacy ambient
+    mesh), which is what ``with_sharding_constraint`` binds to there."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def batch_axes(mesh) -> tuple:
     """The axes a leading batch/client dimension shards over."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

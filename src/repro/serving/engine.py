@@ -111,6 +111,14 @@ Seed-engine ablation knobs: ``bank_prefill=True`` restores the bank-wide
 prefill path and ``max_inflight_per_client=1`` the one-request-per-client
 admission rule — used by benchmarks/bench_multiclient.py to quantify what
 continuous batching buys over the seed behaviour.
+
+Machine-checked invariants (docs/invariants.md): the engine's hot-path
+contracts — cache pools donated and written in place, jitted steps
+compiling only the closed bucket set declared by ``trace_domain()``, no
+base-sized collectives, client isolation — are enforced by
+``python -m repro.analysis`` and the tier-1 trace guard in
+tests/conftest.py; jitted dispatch routes through
+``repro.analysis.tracecount.dispatch``.
 """
 from __future__ import annotations
 
@@ -124,6 +132,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import tracecount
 from repro.config import ModelConfig, ServeConfig, DENSE, MOE, VLM
 from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
@@ -170,6 +179,16 @@ class SamplingParams:
     temperature: float = 1.0
     top_k: int = 0
     seed: int = 0
+
+
+@dataclasses.dataclass
+class BankAdmission:
+    """Handle for one ``admit_bank()`` call: the bank it joined (or
+    created), the new clients' global ids, and the router charge to release
+    at ``retire_bank()``."""
+    bank_id: int
+    client_ids: List[int]
+    placement: object = None
 
 
 @dataclasses.dataclass(eq=False)       # identity eq: queues hold np arrays
@@ -302,8 +321,10 @@ class ServingEngine:
             # the global pool a zero would alias client 0's first page, and
             # any stray write through a stale entry would corrupt it; the
             # sentinel makes such writes scatter-drop (reads through it are
-            # clamped and always position-masked)
-            self._tbl_oob = np.int32(self.n_clients * self._pool_pages)
+            # clamped and always position-masked). A fixed huge constant —
+            # NOT n_clients * pool_pages, which would become a valid page id
+            # the moment admit_bank() grows the pool.
+            self._tbl_oob = np.int32(1 << 30)
             self._tbl = np.full((self.n_clients, self.max_b, self._n_blocks),
                                 self._tbl_oob, np.int32)
             self._tbl_dirty = True
@@ -349,6 +370,11 @@ class ServingEngine:
                              "bucket; attention families only (and not the "
                              "bank_prefill ablation)")
         self._ragged = can_ragged if ragged_prefill is None else ragged_prefill
+        # jit-key bookkeeping for the analysis bucket-coverage pass: the
+        # epoch is bumped whenever admit_bank() legitimately changes hot-
+        # path shapes, so post-growth compiles aren't read as recompiles
+        self._trace_epoch = 0
+        self._dead_clients: set = set()       # clients of retired banks
         self._queue: List[Request] = []
         # incremental service loop state: SymbiosisEngine interleaves
         # service_tick() with a FinetuneEngine's train ticks; run() is the
@@ -379,6 +405,9 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         assert 0 <= req.client_id < self.n_clients
+        if req.client_id in self._dead_clients:
+            raise ValueError(f"client {req.client_id} belongs to a retired "
+                             "bank (see retire_bank)")
         B, S = req.prompt.shape
         assert B <= self.max_b, f"request rows {B} > {self.max_b} slots"
         assert req.max_new_tokens >= 1
@@ -599,7 +628,8 @@ class ServingEngine:
             self.stats["prefill_tokens"] += B * S
         self._sync_tbl()
         m = int(self._method_of[c])
-        logits, self.caches = self._prefill_one[m](
+        logits, self.caches = tracecount.dispatch(
+            self, "prefill", (m, S_pad), self._prefill_one[m],
             self.base, self.banks[m], self.caches, np.int32(c),
             np.int32(self._local_of[c]),
             jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
@@ -644,7 +674,8 @@ class ServingEngine:
         lengths = np.where(mask, S, 0).astype(np.int32)
         self._sync_tbl()
         m = int(self._method_of[c])
-        logits, self.caches = self._prefill_one[m](
+        logits, self.caches = tracecount.dispatch(
+            self, "prefill", (m, S_pad), self._prefill_one[m],
             self.base, self.banks[m], self.caches, np.int32(c),
             np.int32(self._local_of[c]),
             jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
@@ -660,8 +691,9 @@ class ServingEngine:
         B, S = req.prompt.shape
         toks = np.zeros((self.n_clients, self.max_b, S), np.int32)
         toks[c, slots] = req.prompt
-        logits, new_caches = self._prefill_bank(self.base, self.bank, self.caches,
-                                               {"tokens": jnp.asarray(toks)})
+        logits, new_caches = tracecount.dispatch(
+            self, "bank_prefill", (S,), self._prefill_bank,
+            self.base, self.bank, self.caches, {"tokens": jnp.asarray(toks)})
         sel = np.zeros((self.n_clients,), bool)
         sel[c] = True
         sel = jnp.asarray(sel)
@@ -717,7 +749,8 @@ class ServingEngine:
             serve_sel = np.zeros((self.n_clients, 1), bool)
             serve_sel[sorted(serve)] = True
             active = self._active_mask & serve_sel
-            logits, self.caches = self._decode(
+            logits, self.caches = tracecount.dispatch(
+                self, "decode", (), self._decode,
                 self.base, self.bank, self.caches,
                 jnp.asarray(self._last_tok), jnp.asarray(active))
             lg = np.asarray(logits)
@@ -753,13 +786,15 @@ class ServingEngine:
         if self._mixed:
             # per-row method ids + bank-local adapter indices: one tick
             # carries every bank's rows through the mixed compact step
-            logits, self.caches = self._compact_step(
+            logits, self.caches = tracecount.dispatch(
+                self, "compact_decode", nb, self._compact_step,
                 self.base, tuple(self.banks), self.caches, jnp.asarray(toks),
                 jnp.asarray(clients), jnp.asarray(slots),
                 jnp.asarray(self._method_of[clients]),
                 jnp.asarray(self._local_of[clients]), jnp.asarray(mask))
         else:
-            logits, self.caches = self._compact_step(
+            logits, self.caches = tracecount.dispatch(
+                self, "compact_decode", nb, self._compact_step,
                 self.base, self.bank, self.caches, jnp.asarray(toks),
                 jnp.asarray(clients), jnp.asarray(slots), jnp.asarray(mask))
         lg = np.asarray(logits)
@@ -814,6 +849,158 @@ class ServingEngine:
         for p in self._bank_placements:
             self.router.release(p)
         self._bank_placements = []
+
+    # ------------------------------------------------------------------
+    # dynamic bank admission (ROADMAP carry-over: the registry is no
+    # longer fixed at construction)
+    # ------------------------------------------------------------------
+    def admit_bank(self, acfg, client_bank) -> BankAdmission:
+        """Admit a bank of clients while the engine is live.
+
+        ``acfg`` matching an existing bank GROWS that bank's client axis;
+        a new ``acfg`` registers a new bank (a single-method engine grows
+        into the mixed registry: the masked bank-wide decode can't carry
+        two methods, so the compacted per-row-method tick becomes the only
+        decode path). New clients take the global ids after the current
+        ones; the global flat pool appends exactly their page ranges, so
+        ``[c*P, (c+1)*P)`` stays the ownership rule and no existing page
+        id, table entry or in-flight request moves. The attached router is
+        charged the bank's resident adapter bytes HERE (``route_bank``) —
+        admission backpressure happens before any state grows — and the
+        charge is released by ``retire_bank``. Requires the paged layout +
+        compacted decode. The jit keys this creates (grown row buckets,
+        the new bank's prefill) are re-declared through ``trace_domain()``
+        and a new ``_trace_epoch``, so the analysis bucket-coverage pass
+        treats post-growth compiles as legal."""
+        if not (self._paged and self._compact):
+            raise ValueError("dynamic bank admission requires the paged KV "
+                             "layout + compacted decode")
+        if self.bank_prefill:
+            raise ValueError("bank_prefill is a fixed-registry ablation")
+        k = jax.tree.leaves(client_bank)[0].shape[0]
+        placement = None
+        if self.router is not None:
+            _, nbytes = adapters_lib.adapter_bytes(self.cfg, acfg)
+            placement = self.router.route_bank(nbytes * k)  # raises: no fit
+        old_C = self.n_clients
+        if acfg in self.bank_cfgs:
+            m = self.bank_cfgs.index(acfg)
+            old_local = jax.tree.leaves(self.banks[m])[0].shape[0]
+            self.banks[m] = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b.astype(a.dtype)]),
+                self.banks[m], client_bank)
+            if not self._mixed:
+                self.bank = self.banks[m]
+            locs = np.arange(old_local, old_local + k, dtype=np.int32)
+        else:
+            if not self._mixed:
+                self._mixed = True
+                self._decode = None
+                self.bank = None
+            m = len(self.banks)
+            self.bank_cfgs = self.bank_cfgs + (acfg,)
+            self.banks.append(client_bank)
+            self._prefill_one.append(
+                _jit_client_prefill(self.cfg, acfg, self.scfg))
+            locs = np.arange(k, dtype=np.int32)
+        if self._mixed:
+            self._compact_step = _jit_compact_decode(
+                self.cfg, self.bank_cfgs, self.scfg)
+        self._method_of = np.concatenate(
+            [self._method_of, np.full((k,), m, np.int32)])
+        self._local_of = np.concatenate([self._local_of, locs])
+        self.n_clients = old_C + k
+
+        # grow the device caches: per-client leaves concat along the leading
+        # client axis, pool leaves along the global page axis — the appended
+        # pages ARE the new clients' ranges
+        cache_kw = symbiosis.serve_cache_kwargs(self.cfg, self.scfg)
+        cache_kw["pool_pages"] = self._pool_pages
+        fresh = symbiosis.init_client_caches(
+            self.cfg, k, self.max_b, self.scfg.max_seq, **cache_kw)
+        page_axes = symbiosis.cache_page_axes(
+            self.cfg, self.scfg.max_seq, **cache_kw)
+        self.caches = jax.tree.map(
+            lambda old, new, pax: jnp.concatenate(
+                [old, new.astype(old.dtype)], axis=0 if pax is None else pax),
+            self.caches, fresh, page_axes)
+
+        # allocator + slot bookkeeping for the new clients
+        self._free_pages.extend(
+            [list(range(c * self._pool_pages, (c + 1) * self._pool_pages))
+             for c in range(old_C, self.n_clients)])
+        self._reserved.extend([0] * k)
+        self._wpos = np.concatenate(
+            [self._wpos, np.zeros((k, self.max_b), np.int64)])
+        self._tbl = np.concatenate(
+            [self._tbl, np.full((k, self.max_b, self._n_blocks),
+                                self._tbl_oob, np.int32)])
+        self._tbl_dirty = True
+        self._slot_owner.extend([[None] * self.max_b for _ in range(k)])
+        self._last_tok = np.concatenate(
+            [self._last_tok, np.zeros((k, self.max_b), np.int32)])
+        self._active_mask = np.concatenate(
+            [self._active_mask, np.zeros((k, self.max_b), bool)])
+        self._active_slots.extend([[] for _ in range(k)])
+
+        total_rows = self.n_clients * self.max_b
+        self._buckets = []
+        b = 4
+        while b < total_rows:
+            self._buckets.append(b)
+            b *= 2
+        self._buckets.append(total_rows)
+        self._trace_epoch += 1
+        return BankAdmission(bank_id=m,
+                             client_ids=list(range(old_C, self.n_clients)),
+                             placement=placement)
+
+    def retire_bank(self, admission: BankAdmission):
+        """Retire a dynamically admitted bank: its clients stop accepting
+        requests and the ``route_bank`` charge taken at ``admit_bank`` is
+        released. Clients must be idle (nothing in flight). Their adapter
+        rows, cache slots and pages stay allocated as dead capacity — global
+        ids never move, so live clients are untouched."""
+        busy = [c for c in admission.client_ids
+                if any(o is not None for o in self._slot_owner[c])]
+        if busy:
+            raise RuntimeError(
+                f"bank clients {busy} still have requests in flight")
+        self._dead_clients.update(admission.client_ids)
+        if admission.placement is not None:
+            self.router.release(admission.placement)
+            admission.placement = None
+
+    # ------------------------------------------------------------------
+    def trace_domain(self) -> tracecount.TraceDomain:
+        """The closed set of legal jit cache keys (analysis 'buckets' pass).
+
+        Computed live so ``admit_bank`` growth re-declares itself: prefill
+        compiles (bank, prompt-bucket) pairs — a closed power-of-two set
+        for attention families, unbounded for recurrent families which
+        prefill at true length by design; the masked decode has one shape;
+        compact decode compiles exactly the row buckets; the
+        ``bank_prefill`` seed ablation is declared unbounded."""
+        d = tracecount.TraceDomain()
+        if self.cfg.arch in (DENSE, MOE, VLM):
+            sbuckets = set()
+            b = 8
+            while True:
+                sbuckets.add(min(b, self.scfg.max_seq))
+                if b >= self.scfg.max_seq:
+                    break
+                b *= 2
+            d.declare("prefill", {(m, s) for m in range(len(self.bank_cfgs))
+                                  for s in sbuckets})
+        else:
+            d.declare("prefill", unbounded=True)
+        if self._prefill_bank is not None:
+            d.declare("bank_prefill", unbounded=True)
+        if self._decode is not None:
+            d.declare("decode", {()})
+        if self._compact_step is not None:
+            d.declare("compact_decode", set(self._buckets))
+        return d
 
     # ------------------------------------------------------------------
     def simulate_policy(self, requests: List[Request], *, policy: str = None,

@@ -42,6 +42,13 @@ Architecture
 Driven standalone via ``run()``, or interleaved tick-by-tick with a
 ``ServingEngine`` against the same donated base by
 ``training.SymbiosisEngine``.
+
+Machine-checked invariants (docs/invariants.md): frozen-base taint (a
+train step must never produce a base-shaped output that isn't a declared
+update), donation of bank/optimizer state, per-row isolation, and closed
+jit bucket coverage via ``trace_domain()`` +
+``repro.analysis.tracecount.dispatch`` are enforced by
+``python -m repro.analysis`` and tested in tests/test_analysis.py.
 """
 from __future__ import annotations
 
@@ -53,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import tracecount
 from repro.config import AdapterConfig, FinetuneConfig, ModelConfig
 from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
@@ -263,7 +271,8 @@ class FinetuneEngine:
                                      bank.key.microbatch,
                                      self.fcfg.memory_optimized,
                                      self.fcfg.remat)
-        bank.params, bank.opt, metrics = step_fn(
+        bank.params, bank.opt, metrics = tracecount.dispatch(
+            self, "compact_train", (bank.key, R), step_fn,
             self.base, bank.params, bank.opt, batch, jnp.asarray(slots),
             jnp.asarray(mask), {k: jnp.asarray(v) for k, v in hyper.items()})
         losses = np.asarray(metrics["loss"])
@@ -274,6 +283,18 @@ class FinetuneEngine:
         self.stats["compact_rows"] += n
         self.stats["compact_padded"] += R - n
         self.stats["train_tokens"] += n * bank.key.batch * bank.key.seq
+
+    def trace_domain(self) -> tracecount.TraceDomain:
+        """Legal jit keys (analysis 'buckets' pass): one compile per
+        (bank key, row bucket) with the bucket a power of two — capacity
+        doubles, membership gathers into power-of-two buckets, so any other
+        row count compiling is a hot-path recompile."""
+        d = tracecount.TraceDomain()
+        d.declare("compact_train",
+                  predicate=lambda key: (isinstance(key, tuple) and
+                                         len(key) == 2 and key[1] >= 1 and
+                                         key[1] & (key[1] - 1) == 0))
+        return d
 
     def train_tick(self) -> bool:
         """Admit due jobs, run one optimizer step for every active job

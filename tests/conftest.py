@@ -6,16 +6,32 @@ dry-run (repro.launch.dryrun) forces 512 placeholder devices.
 import jax
 import pytest
 
+from repro.analysis import tracecount
 from repro.config import (ModelConfig, AdapterConfig, DENSE, MOE, RWKV, HYBRID,
                           ENCDEC, VLM)
 
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(autouse=True)
+def _trace_guard(request):
+    """Tier-1 bucket-coverage guard (see repro.analysis.tracecount): any
+    engine driven during a test dispatches its jitted steps through
+    ``tracecount.dispatch``, and every compile must land inside the
+    engine's declared trace domain. Tests that deliberately break
+    bucketing open their own inner ``tracecount.guard`` — nested guards
+    shadow this one, so their intentional violations stay local."""
+    with tracecount.guard(request.node.nodeid) as g:
+        yield
+    res = g.result()
+    assert res.ok, ("hot-path trace-count violations:\n"
+                    + "\n".join(v.message for v in res.violations))
+
+
 def tiny(arch=DENSE, **kw):
-    base = dict(name=f"tiny-{arch}", arch=arch, n_layers=2, d_model=64,
-                n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
-                dtype="float32", param_dtype="float32")
+    base = {"name": f"tiny-{arch}", "arch": arch, "n_layers": 2,
+            "d_model": 64, "n_heads": 4, "n_kv_heads": 2, "d_ff": 128,
+            "vocab": 128, "dtype": "float32", "param_dtype": "float32"}
     if arch == MOE:
         base.update(n_experts=4, top_k=2, n_shared_experts=1, d_expert=32,
                     first_dense_layers=1, n_layers=3)

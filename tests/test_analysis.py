@@ -1,0 +1,251 @@
+"""Mutation self-tests for the repro.analysis invariant passes (ISSUE 6).
+
+Every pass is demonstrated BOTH ways: clean on the real engine step and
+firing on a deliberately broken variant — a dropped donation, an inserted
+pool copy, a scan that stacks the pool, an un-checkpointed MoE body, a
+step that "trains" the frozen base, and an un-bucketed prefill shape.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import aliasing, jaxpr_passes, taint, tracecount
+from repro.analysis.targets import serving_targets, tiny_config, train_targets
+from repro.config import DENSE, MOE, AdapterConfig, ServeConfig
+from repro.core import symbiosis
+
+LORA = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+
+
+@pytest.fixture(scope="module")
+def decode_target():
+    return next(t for t in serving_targets(DENSE)
+                if t.name == "compact_decode[dense-paged]")
+
+
+@pytest.fixture(scope="module")
+def train_target():
+    return next(t for t in train_targets(DENSE)
+                if t.name.startswith("compact_train"))
+
+
+@pytest.fixture(scope="module")
+def moe_train_target():
+    return next(t for t in train_targets(MOE)
+                if t.name.startswith("compact_train"))
+
+
+# --------------------------------------------------------------- donation
+def test_donation_clean_on_real_step(decode_target):
+    t = decode_target
+    hlo = aliasing.compile_text(t.fn, t.args, t.donate_argnums)
+    res = aliasing.check_donation(hlo, t.donated, target=t.name,
+                                  frozen_leaves=t.frozen)
+    assert res.ok, [str(v) for v in res.violations]
+    assert res.checked["aliased_params"] == len(t.donated)
+
+
+def test_donation_mutation_dropped_donation_fires(decode_target):
+    t = decode_target
+    hlo = aliasing.compile_text(t.fn, t.args, ())   # mutation: no donation
+    res = aliasing.check_donation(hlo, t.donated, target="mutated")
+    assert not res.ok
+    assert all("no input-output alias" in v.message for v in res.violations)
+    assert len(res.violations) == len(t.donated)
+
+
+def test_donation_mutation_base_alias_fires():
+    # mutation: a step donates and overwrites the FROZEN base in place
+    base = {"w": jnp.ones((8, 8)), "b": jnp.ones((8,))}
+
+    def bad(b):
+        return jax.tree.map(lambda x: x * 2.0, b)
+
+    hlo = aliasing.compile_text(bad, (base,), (0,))
+    res = aliasing.check_donation(
+        hlo, [], target="mutated",
+        frozen_leaves=aliasing.donated_leaf_paths(base))
+    assert not res.ok
+    assert any("base" in v.message for v in res.violations)
+
+
+# --------------------------------------------------------------- poolcopy
+def test_poolcopy_clean_on_real_step(decode_target):
+    t = decode_target
+    res = jaxpr_passes.check_pool_copies(t.jaxpr(), t.protected_sigs,
+                                         target=t.name)
+    assert res.ok, [str(v) for v in res.violations]
+    assert res.checked["inplace_writes"] >= 1
+
+
+def test_poolcopy_mutation_arithmetic_fires(decode_target):
+    t = decode_target
+
+    def bad(*args):            # mutation: full-pool arithmetic after the tick
+        logits, caches = t.fn(*args)
+        return logits, jax.tree.map(lambda x: x * jnp.asarray(2, x.dtype),
+                                    caches)
+
+    jx = jax.make_jaxpr(bad)(*t.args)
+    res = jaxpr_passes.check_pool_copies(jx, t.protected_sigs,
+                                         target="mutated")
+    assert not res.ok
+    assert any("materializes a pool-sized" in v.message
+               for v in res.violations)
+
+
+def test_poolcopy_mutation_scan_ys_fires(decode_target):
+    t = decode_target
+    caches = t.args[2]
+
+    def bad(caches):           # mutation: a loop stacking the pool (PR 5 bug)
+        def body(c, _):
+            return c, c["layers"]["k"]
+        return jax.lax.scan(body, caches, None, length=2)
+
+    jx = jax.make_jaxpr(bad)(caches)
+    res = jaxpr_passes.check_pool_copies(jx, t.protected_sigs,
+                                         target="mutated")
+    assert any("scan stacks a pool-sized ys" in v.message
+               for v in res.violations)
+
+
+def test_poolcopy_reshape_alias_still_protected(decode_target):
+    """A reshape of the pool is benign, but ops at the reshaped shape are
+    still pool-sized — the signature set must follow the bitcast."""
+    t = decode_target
+    caches = t.args[2]
+
+    def bad(caches):
+        k = caches["layers"]["k"]
+        folded = k.reshape((-1,) + k.shape[2:])     # benign layer fold
+        return folded + 1.0                         # ...then a full copy
+
+    jx = jax.make_jaxpr(bad)(caches)
+    res = jaxpr_passes.check_pool_copies(jx, t.protected_sigs,
+                                         target="mutated")
+    assert any(v.detail.get("primitive") == "add" for v in res.violations)
+
+
+# --------------------------------------------------------------- moe remat
+def test_moe_remat_clean_on_real_step(moe_train_target):
+    res = jaxpr_passes.check_moe_checkpointed(moe_train_target.jaxpr(),
+                                              target=moe_train_target.name)
+    assert res.ok
+    assert res.checked["top_k_eqns"] >= 1
+    assert res.checked["remat_regions"] >= 1
+
+
+def test_moe_remat_mutation_fires(monkeypatch, moe_train_target):
+    # mutation: jax.checkpoint becomes the identity — the MoE routing body
+    # is no longer rematerialized anywhere in the step
+    monkeypatch.setattr(jax, "checkpoint", lambda f, *a, **k: f)
+    fn = symbiosis.make_compact_train_step(tiny_config(MOE), LORA)
+    jx = jax.make_jaxpr(fn)(*moe_train_target.args)
+    res = jaxpr_passes.check_moe_checkpointed(jx, target="mutated")
+    assert not res.ok
+    assert any("outside any jax.checkpoint" in v.message
+               for v in res.violations)
+
+
+# --------------------------------------------------------------- taint
+def test_frozen_base_taint_clean_on_real_step(train_target):
+    t = train_target
+    res = taint.check_frozen_base(t.fn, t.args,
+                                  update_argnums=t.donate_argnums,
+                                  target=t.name)
+    assert res.ok, [str(v) for v in res.violations]
+
+
+def test_frozen_base_taint_mutation_fires(train_target):
+    t = train_target
+
+    def bad(base, bank, opt, batch, slots, rmask, hyper):
+        nb, no, metrics = t.fn(base, bank, opt, batch, slots, rmask, hyper)
+        # mutation: the step also "updates" the frozen base
+        new_base = jax.tree.map(lambda w: w - 1e-4 * w, base)
+        return new_base, nb, no, metrics
+
+    res = taint.check_frozen_base(bad, t.args, update_argnums=(1, 2),
+                                  target="mutated")
+    assert not res.ok
+    assert any("updated base" in v.message for v in res.violations)
+
+
+def test_row_isolation_probe_clean(train_target):
+    t = train_target
+    iso = t.isolation
+    res = taint.check_row_isolation(
+        t.fn, t.args, perturb_row=iso["perturb_row"],
+        victim_slot=iso["victim_slot"],
+        perturb_argnums=iso["perturb_argnums"], target=t.name)
+    assert res.ok, [str(v) for v in res.violations]
+    assert res.checked["row_leaves_checked"] >= 1
+
+
+# --------------------------------------------------------------- buckets
+def test_trace_domain_check_states():
+    d = tracecount.TraceDomain()
+    d.declare("prefill", {(0, 8), (0, 16)})
+    d.declare("train", predicate=lambda k: k[1] % 2 == 0)
+    d.declare("misc", unbounded=True)
+    assert d.check("prefill", (0, 8)) == tracecount.OK
+    assert d.check("prefill", (0, 6)) == tracecount.OUT_OF_DOMAIN
+    assert d.check("train", ("bank", 4)) == tracecount.OK
+    assert d.check("train", ("bank", 3)) == tracecount.OUT_OF_DOMAIN
+    assert d.check("misc", object()) == tracecount.UNBOUNDED
+    assert d.check("never-declared", 1) == tracecount.UNDECLARED
+
+
+def test_trace_guard_flags_out_of_domain_and_recompile():
+    class Owner:
+        _trace_epoch = 0
+
+        def trace_domain(self):
+            return tracecount.TraceDomain().declare("step", {8})
+
+    owner = Owner()
+    fn = jax.jit(lambda x: x * 2)
+    with tracecount.guard("unit") as g:
+        tracecount.dispatch(owner, "step", 8, fn, jnp.ones((8,)))   # legal
+        tracecount.dispatch(owner, "step", 8, fn, jnp.ones((8,)))   # cached
+        tracecount.dispatch(owner, "step", 6, fn, jnp.ones((6,)))   # illegal
+        # same declared key compiled AGAIN (dtype leaked past the bucket)
+        tracecount.dispatch(owner, "step", 8, fn,
+                            jnp.ones((8,), jnp.int32))
+    res = g.result()
+    assert res.checked["calls"] == 4
+    assert res.checked["compiles"] == 3
+    msgs = [v.message for v in res.violations]
+    assert any("outside the declared bucket set" in m for m in msgs)
+    assert any("RECOMPILE" in m for m in msgs)
+
+
+def test_bucket_guard_fires_on_unbucketed_prefill(monkeypatch):
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = tiny_config(DENSE)
+    scfg = ServeConfig(n_clients=2, max_seq=32, page_block=8)
+    base, bank, _ = symbiosis.init_system(cfg, LORA, 2, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, LORA, scfg, base, bank, max_batch_per_client=2)
+    # mutation: prompt bucketing disabled — prefill compiles raw lengths
+    monkeypatch.setattr(ServingEngine, "_bucket", lambda self, S: S)
+    with tracecount.guard("mutated-engine") as g:
+        eng.submit(Request(client_id=0, prompt=np.ones((1, 6), np.int32),
+                           max_new_tokens=2))
+        eng.run()
+    res = g.result()
+    assert not res.ok
+    assert any("outside the declared bucket set" in v.message
+               for v in res.violations)
+
+
+def test_dispatch_without_guard_is_plain_call(monkeypatch):
+    # the tier-1 autouse fixture keeps a guard active for every test, so
+    # explicitly clear it: unguarded dispatch must not touch the owner at
+    # all (the owner here has no trace_domain())
+    monkeypatch.setattr(tracecount, "_ACTIVE", None)
+    fn = jax.jit(lambda x: x + 1)
+    out = tracecount.dispatch(object(), "step", 1, fn, jnp.ones((3,)))
+    np.testing.assert_allclose(np.asarray(out), 2.0)

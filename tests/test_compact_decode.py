@@ -47,7 +47,7 @@ def _bank_caches_after_prefill(cfg, acfg, scfg, C, B, S, seed=0):
         if cfg.arch == ENCDEC:
             batch["frames"] = jnp.asarray(rng.normal(
                 size=(B, cfg.n_frontend_tokens, cfg.d_model)).astype(np.float32)) * 0.1
-        adapter = jax.tree.map(lambda x: x[c], bank)
+        adapter = jax.tree.map(lambda x, c=c: x[c], bank)
         _, cache = model.prefill(base, batch, cache, ctx, adapter)
         per.append(cache)
     caches = symbiosis.stack_client_caches(cfg, scfg.max_seq, per, **cache_kw)

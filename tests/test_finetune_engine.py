@@ -28,7 +28,7 @@ def _job(cfg, method="lora", seed=0, steps=4, batch=2, seq=16, **kw):
                "prefix": ("q", "v")}[method]
     acfg = kw.pop("acfg", None) or AdapterConfig(method=method, rank=4,
                                                  alpha=8.0, targets=targets)
-    defaults = dict(lr=1e-2, warmup_steps=1, max_grad_norm=1.0)
+    defaults = {"lr": 1e-2, "warmup_steps": 1, "max_grad_norm": 1.0}
     defaults.update(kw)
     return FinetuneJob(acfg=acfg, data=make_job_stream(cfg, batch, seq, seed=seed),
                        batch_size=batch, seq_len=seq, steps=steps, seed=seed,

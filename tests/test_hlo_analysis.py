@@ -1,0 +1,134 @@
+"""Golden-HLO fixtures for launch.hlo_analysis (ISSUE 6 satellite).
+
+Hand-written HLO text exercising the parser paths that real modules hit:
+tuple-result collectives, async -start/-done pairs (counted once, charged
+the destination element only), while-loop trip multiplication, fusion
+walk-through, and the unknown-dtype warning.
+"""
+import warnings
+
+import pytest
+
+from repro.analysis.aliasing import parse_aliased_params, parse_entry_params
+from repro.launch import hlo_analysis
+
+WHILE_HLO = """\
+HloModule golden_while, is_scheduled=true
+
+%body.1 (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[64,128]) %p), index=0
+  %x = f32[64,128] get-tuple-element((s32[], f32[64,128]) %p), index=1
+  %ag = f32[64,128]{1,0} all-gather(f32[64,32]{1,0} %x), dimensions={1}
+  %one = s32[] constant(1)
+  %next = s32[] add(s32[] %i, s32[] %one)
+  ROOT %out = (s32[], f32[64,128]) tuple(s32[] %next, f32[64,128] %ag)
+}
+
+%cond.1 (p.2: (s32[], f32[64,128])) -> pred[] {
+  %p.2 = (s32[], f32[64,128]) parameter(0)
+  %i.2 = s32[] get-tuple-element((s32[], f32[64,128]) %p.2), index=0
+  %t = s32[] constant(3)
+  ROOT %lt = pred[] compare(s32[] %i.2, s32[] %t), direction=LT
+}
+
+ENTRY %main (arg: f32[64,128]) -> f32[64,128] {
+  %arg = f32[64,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64,128]) tuple(s32[] %zero, f32[64,128] %arg)
+  %w = (s32[], f32[64,128]) while((s32[], f32[64,128]) %init), condition=%cond.1, body=%body.1
+  ROOT %res = f32[64,128] get-tuple-element((s32[], f32[64,128]) %w), index=1
+}
+"""
+
+ASYNC_HLO = """\
+HloModule golden_async, is_scheduled=true
+
+ENTRY %main (arg: f32[8,16]) -> f32[32,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %ag-start = (f32[8,16]{1,0}, f32[32,16]{1,0}) all-gather-start(f32[8,16]{1,0} %arg), dimensions={0}
+  %ag-done = f32[32,16]{1,0} all-gather-done((f32[8,16]{1,0}, f32[32,16]{1,0}) %ag-start)
+  %ar = f32[32,16]{1,0} all-reduce(f32[32,16]{1,0} %ag-done), to_apply=%add.1
+  ROOT %out = f32[32,16]{1,0} copy(f32[32,16]{1,0} %ar)
+}
+"""
+
+TUPLE_HLO = """\
+HloModule golden_tuple, is_scheduled=true
+
+ENTRY %main (a: f32[4,4], b: s32[8]) -> (f32[4,4], s32[8]) {
+  %a = f32[4,4]{1,0} parameter(0)
+  %b = s32[8]{0} parameter(1)
+  %ar = (f32[4,4]{1,0}, s32[8]{0}) all-reduce(f32[4,4]{1,0} %a, s32[8]{0} %b), to_apply=%add.2
+  %g0 = f32[4,4]{1,0} get-tuple-element((f32[4,4]{1,0}, s32[8]{0}) %ar), index=0
+  %g1 = s32[8]{0} get-tuple-element((f32[4,4]{1,0}, s32[8]{0}) %ar), index=1
+  ROOT %t = (f32[4,4]{1,0}, s32[8]{0}) tuple(f32[4,4]{1,0} %g0, s32[8]{0} %g1)
+}
+"""
+
+
+def test_while_trip_multiplication():
+    coll = hlo_analysis.collective_bytes(WHILE_HLO)
+    # one all-gather of f32[64,128] = 32768 B, x3 loop trips
+    assert coll["all-gather"] == 3 * 64 * 128 * 4
+    assert coll["n_ops"] == 3
+    ops = hlo_analysis.find_collectives(WHILE_HLO)
+    assert len(ops) == 1 and ops[0].mult == 3
+    assert ops[0].kind == "all-gather"
+    assert ("f32", (64, 128)) in ops[0].shapes
+
+
+def test_async_pair_counted_once_destination_only():
+    coll = hlo_analysis.collective_bytes(ASYNC_HLO)
+    # -start charged max(tuple elements) = the f32[32,16] destination;
+    # -done charged nothing; the sync all-reduce charged its full result.
+    dest = 32 * 16 * 4
+    assert coll["all-gather"] == dest
+    assert coll["all-reduce"] == dest
+    assert coll["n_ops"] == 2
+    ops = hlo_analysis.find_collectives(ASYNC_HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce"]
+    start = next(o for o in ops if o.kind == "all-gather")
+    # both tuple elements are listed (shape audit sees operand + dest)...
+    assert ("f32", (8, 16)) in start.shapes
+    assert ("f32", (32, 16)) in start.shapes
+    # ...but only the destination is charged
+    assert start.bytes == dest
+
+
+def test_variadic_tuple_result_sums_all_elements():
+    coll = hlo_analysis.collective_bytes(TUPLE_HLO)
+    assert coll["all-reduce"] == 4 * 4 * 4 + 8 * 4
+    ops = hlo_analysis.find_collectives(TUPLE_HLO)
+    assert len(ops) == 1
+    assert set(ops[0].shapes) == {("f32", (4, 4)), ("s32", (8,))}
+
+
+def test_unknown_dtype_warns_once_and_assumes_4_bytes():
+    hlo_analysis._warned_dtypes.discard("f6e9")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        b1 = hlo_analysis._shape_bytes("f6e9", "2,3")
+        b2 = hlo_analysis._shape_bytes("f6e9", "5")
+    assert b1 == 2 * 3 * 4 and b2 == 5 * 4      # 4 B/elem fallback
+    assert len([x for x in w if "unknown HLO element type" in str(x.message)]) == 1
+
+
+def test_analyze_module_loop_aware_collectives():
+    walker = hlo_analysis.analyze_module(WHILE_HLO)
+    assert walker["all-gather"] == 3 * 64 * 128 * 4
+    assert walker["coll_bytes"] == walker["all-gather"]
+
+
+def test_alias_header_parsing_nested_braces():
+    header = (
+        "HloModule jit_step, is_scheduled=true, input_output_alias={ "
+        "{0}: (2, {}, may-alias), {1, 0}: (3, {}, must-alias) }, "
+        "entry_computation_layout={(f32[4,4]{1,0}, s32[8]{0}, "
+        "f32[2,16,8]{2,1,0}, pred[3]{0})->(f32[4,4]{1,0})}\n"
+    )
+    assert parse_aliased_params(header) == [2, 3]
+    params = parse_entry_params(header)
+    assert params == [("f32", (4, 4)), ("s32", (8,)),
+                      ("f32", (2, 16, 8)), ("pred", (3,))]

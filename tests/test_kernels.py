@@ -14,8 +14,8 @@ DTYPES = [jnp.float32, jnp.bfloat16]
 
 
 def _tol(dtype):
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
-           dict(rtol=2e-4, atol=2e-4)
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.bfloat16 else \
+           {"rtol": 2e-4, "atol": 2e-4}
 
 
 class TestSGMV:

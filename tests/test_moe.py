@@ -114,8 +114,8 @@ class TestVmapBitwise:
         for j in range(R):
             ref_a, ref_o, _ = baseline(base, adapters[j],
                                        adamw_init(adapters[j]),
-                                       jax.tree.map(lambda x: x[j], batch), 0)
-            got = jax.tree.map(lambda x: x[j], (new_bank, new_opt))
+                                       jax.tree.map(lambda x, j=j: x[j], batch), 0)
+            got = jax.tree.map(lambda x, j=j: x[j], (new_bank, new_opt))
             for a, b in zip(jax.tree.leaves((ref_a, ref_o)),
                             jax.tree.leaves(got)):
                 np.testing.assert_array_equal(

@@ -55,7 +55,7 @@ class TestEngine:
         model = get_model(cfg)
         ctx = make_client_ctx(cfg, lora_cfg)
         for c in range(3):
-            adapter = jax.tree.map(lambda x: x[c], bank)
+            adapter = jax.tree.map(lambda x, c=c: x[c], bank)
             cache = model.init_cache(2, scfg.max_seq)
             logits, cache = model.prefill(base, {"tokens": jnp.asarray(prompts[c])},
                                           cache, ctx, adapter)

@@ -28,9 +28,9 @@ class TestMultiClientEquivalence:
         bank_s, opt_s, m = shared_step(base, bank, opt, batch, 0)
 
         for c in range(3):
-            one_bank = jax.tree.map(lambda x: x[c:c + 1], bank)
-            one_opt = jax.tree.map(lambda x: x[c:c + 1], opt)
-            one_batch = jax.tree.map(lambda x: x[c:c + 1], batch)
+            one_bank = jax.tree.map(lambda x, c=c: x[c:c + 1], bank)
+            one_opt = jax.tree.map(lambda x, c=c: x[c:c + 1], opt)
+            one_batch = jax.tree.map(lambda x, c=c: x[c:c + 1], batch)
             b1, o1, m1 = shared_step(base, one_bank, one_opt, one_batch, 0)
             np.testing.assert_allclose(np.asarray(m1["loss"][0]),
                                        np.asarray(m["loss"][c]), rtol=1e-5)
