@@ -141,15 +141,88 @@ def run_bank_mix(quick: bool = False):
     return emit("finetune_service_bank_mix", rows)
 
 
+def run_sharded_service(quick: bool = False, mesh=None):
+    """ISSUE 7: the fine-tuning service on a device mesh via EngineSpec.
+
+    The same job set through an unsharded FinetuneEngine and one placed on
+    a mesh (``--mesh``, default 2x2 when >= 4 devices else the 1-device
+    host mesh): final adapter + optimizer state must match bitwise
+    (replicated base, bank-row partitioning only); steps/s reported next
+    to the unsharded row. Rows land in the ``sharded_serving`` section of
+    ``BENCH_serving.json``."""
+    from repro.core.engine_spec import BankSpec, EngineSpec
+    from repro.launch.mesh import _make_mesh, make_host_mesh
+
+    if mesh is None:
+        mesh = (_make_mesh((2, 2), ("data", "model"))
+                if jax.device_count() >= 4 else make_host_mesh())
+    cfg = get_config("symbiosis-llama2-13b").reduced(
+        n_layers=2, d_model=256 if quick else 512)
+    N, batch, seq = 2, 2, 32 if quick else 64
+    steps = 4 if quick else 8
+    base = get_model(cfg).init_params(jax.random.PRNGKey(0))
+
+    def measure(m):
+        spec = EngineSpec(cfg=cfg,
+                          banks=(BankSpec("jobs", ACFG, capacity=N),),
+                          finetune=FinetuneConfig(max_jobs=N), mesh=m,
+                          replicate_base=m is not None)
+        eng = FinetuneEngine(spec, base)
+        jobs = _jobs(cfg, N, steps, batch, seq)
+        for j in jobs:
+            eng.submit(j)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        assert len(done) == N
+        return N * steps / dt, jobs
+
+    plain_sps, plain_jobs = measure(None)
+    mesh_sps, mesh_jobs = measure(mesh)
+    for a, b in zip(jax.tree.leaves([j.result.adapter for j in plain_jobs]),
+                    jax.tree.leaves([j.result.adapter for j in mesh_jobs])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg="sharded train state diverged")
+    rows = [
+        {"sharded": "finetune_unsharded", "tok_s": round(plain_sps, 2),
+         "devices": 1, "identity": "-"},
+        {"sharded": f"finetune_mesh{dict(mesh.shape)}",
+         "tok_s": round(mesh_sps, 2), "devices": mesh.devices.size,
+         "identity": "bitwise"},
+    ]
+    return emit("sharded_serving", rows)
+
+
 def run(quick: bool = False):
-    return run_shared_vs_replicas(quick) + run_bank_mix(quick)
+    return (run_shared_vs_replicas(quick) + run_bank_mix(quick)
+            + run_sharded_service(quick))
 
 
 def run_smoke():
     """CI bench-smoke entry: the shared-vs-replicas section (with its >=3x
-    base-HBM assertion) plus the heterogeneous bank mix, on tiny configs."""
+    base-HBM assertion), the heterogeneous bank mix, and the sharded
+    service identity, on tiny configs."""
     return run(quick=True)
 
 
+def main():
+    import argparse
+
+    from repro.launch.mesh import _make_mesh
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mesh", nargs=2, type=int, default=None,
+                    metavar=("DATA", "MODEL"),
+                    help="run the sharded service section on a "
+                         "(data, model) device mesh (e.g. --mesh 2 2)")
+    args = ap.parse_args()
+    if args.mesh:
+        mesh = _make_mesh(tuple(args.mesh), ("data", "model"))
+        run_sharded_service(quick=args.quick, mesh=mesh)
+    else:
+        run(quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    main()

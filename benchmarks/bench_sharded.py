@@ -28,12 +28,12 @@ from repro.configs import get_config
 from repro.core import symbiosis
 from repro.launch import shardings
 from repro.launch.hlo_analysis import analyze_module
-from repro.launch.mesh import _auto
+from repro.launch.mesh import _make_mesh
 from repro.models import get_model
 from repro.models.losses import lm_loss
 from repro.optim import adamw_init
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=_auto(2))
+mesh = _make_mesh((4, 2), ("data", "model"))
 cfg = get_config("symbiosis-llama2-13b").reduced(n_layers=2, d_model=512)
 acfg = AdapterConfig(method="lora", rank=8, targets=("q", "k", "v", "o"))
 C = 4

@@ -49,6 +49,7 @@ SERVING_SECTIONS = (
     "paged_admission_fixed_hbm",
     "compact_decode_sparse_occupancy",
     "mixed_method_serving",
+    "sharded_serving",
 )
 
 # training trajectory sections (--json writes them to BENCH_training.json)
@@ -65,6 +66,7 @@ _SCHEMA_OF = {
     "mix": "mixed_method_serving",
     "workload": "finetune_service_shared_base",
     "bankmix": "finetune_service_bank_mix",
+    "sharded": "sharded_serving",
 }
 
 
@@ -142,7 +144,11 @@ def main():
                              + "\n".join(str(v) for v in res.violations))
         print(f"bench smoke complete in {time.time() - t0:.1f}s")
         if args.json:
-            _write_serving_json(args.json, rows)
+            # sharded_serving rows come from BOTH benches (serving identity
+            # from bench_multiclient, finetune identity from
+            # bench_finetune_service) — route the combined list so all of
+            # them land in the serving document's section
+            _write_serving_json(args.json, rows + train_rows)
             _write_training_json(args.json, train_rows)
         return
 
@@ -166,7 +172,7 @@ def main():
             failures.append(name)
             traceback.print_exc()
     if args.json and serving_rows:
-        _write_serving_json(args.json, serving_rows)
+        _write_serving_json(args.json, serving_rows + training_rows)
     if args.json and training_rows:
         _write_training_json(args.json, training_rows)
     if failures:

@@ -28,6 +28,7 @@ from repro.config import AdapterConfig, FinetuneConfig, ServeConfig
 from repro.configs import get_config
 from repro.core import adapters as ad_lib
 from repro.core import symbiosis
+from repro.core.engine_spec import BankSpec, EngineSpec
 from repro.serving.engine import Request, ServingEngine
 from repro.training import (FinetuneEngine, FinetuneJob, SymbiosisEngine,
                             make_job_stream)
@@ -58,15 +59,20 @@ if args.serve_mixed:
                                 n_prefix=8)]
     inf_banks = [ad_lib.init_client_bank(cfg, a, 1, jax.random.PRNGKey(5 + i))
                  for i, a in enumerate(serve_cfgs)]
-    serving = ServingEngine(cfg, serve_cfgs, scfg, base, inf_banks,
-                            max_batch_per_client=B)
+    spec = EngineSpec(cfg=cfg, serve=scfg, max_batch_per_client=B,
+                      banks=tuple(BankSpec(a.method, a, capacity=1)
+                                  for a in serve_cfgs))
+    serving = ServingEngine(spec, base, inf_banks)
     print("serving: MIXED banks (lora + ia3 + prefix) in one engine")
 else:
     scfg = ServeConfig(n_clients=N_INF, max_seq=64)
     base, inf_bank, _ = symbiosis.init_system(cfg, acfg_inf, N_INF, key)
-    serving = ServingEngine(cfg, acfg_inf, scfg, base, inf_bank,
-                            max_batch_per_client=B)
-finetune = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=4))
+    spec = EngineSpec(cfg=cfg, serve=scfg, max_batch_per_client=B,
+                      banks=(BankSpec("tenants", acfg_inf, capacity=N_INF),))
+    serving = ServingEngine(spec, base, [inf_bank])
+finetune = FinetuneEngine(EngineSpec(cfg=cfg,
+                                     finetune=FinetuneConfig(max_jobs=4)),
+                          base)
 engine = SymbiosisEngine(serving=serving, finetune=finetune)
 
 # three PEFT METHODS fine-tuning concurrently -> three banks, one base

@@ -67,6 +67,7 @@ print("privacy demo OK")
 # ---------------------------------------------------------------------------
 from repro.config import ServeConfig
 from repro.core import symbiosis
+from repro.core.engine_spec import BankSpec, EngineSpec
 from repro.serving.engine import ServingEngine, Request
 
 n_tenants = 3
@@ -91,14 +92,16 @@ rng = np.random.default_rng(0)
 prompts = [rng.integers(0, cfg.vocab, (1, 8 + 4 * t)).astype(np.int32)
            for t in range(n_tenants)]
 
-eng = ServingEngine(cfg, acfg, scfg, base, bank, max_batch_per_client=2)
+spec = EngineSpec(cfg=cfg, serve=scfg, max_batch_per_client=2,
+                  banks=(BankSpec("tenants", acfg, capacity=n_tenants),))
+eng = ServingEngine(spec, base, [bank])
 for t in range(n_tenants):
     eng.submit(Request(client_id=t, prompt=prompts[t], max_new_tokens=8,
                        arrive_tick=3 * t))     # tenants join mid-stream
 served = {r.client_id: r.generated for r in eng.run()}
 
 for t in range(n_tenants):
-    solo_eng = ServingEngine(cfg, acfg, scfg, base, bank, max_batch_per_client=2)
+    solo_eng = ServingEngine(spec, base, [bank])
     solo_eng.submit(Request(client_id=t, prompt=prompts[t], max_new_tokens=8))
     (solo,) = solo_eng.run()
     assert np.array_equal(served[t], solo.generated), f"tenant {t} diverged"

@@ -48,7 +48,10 @@ def audit_collectives(hlo_text: str, base_params, *, target: str,
     """Audit one partitioned module's collectives against the base tree."""
     res = PassResult(pass_name, target)
     sigs = base_leaf_sigs(base_params)
-    leaf_bytes = [int(np.asarray(leaf).nbytes)
+    # From shape/dtype, not np.asarray: the dry-run passes ShapeDtypeStruct
+    # stand-ins, which asarray would box into a 0-d object array (8 bytes)
+    # and collapse the threshold to noise.
+    leaf_bytes = [int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
                   for leaf in jax.tree.leaves(base_params)]
     if threshold_bytes is None:
         threshold_bytes = max(leaf_bytes) if leaf_bytes else 1 << 30

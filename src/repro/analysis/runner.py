@@ -81,6 +81,7 @@ def run_buckets() -> PassResult:
     fine-tuning churn — every compile must land in the declared domains."""
     import jax
     from repro.core import symbiosis
+    from repro.core.engine_spec import BankSpec, EngineSpec
     from repro.serving.engine import Request, ServingEngine
     from repro.training.engine import FinetuneEngine
     from repro.training.job import FinetuneJob, make_job_stream
@@ -91,8 +92,10 @@ def run_buckets() -> PassResult:
         scfg = ServeConfig(n_clients=2, max_seq=32, page_block=8)
         base, bank, _ = symbiosis.init_system(cfg, lora, 2,
                                               jax.random.PRNGKey(0))
-        eng = ServingEngine(cfg, lora, scfg, base, bank,
-                            max_batch_per_client=2)
+        spec = EngineSpec(cfg=cfg,
+                          banks=(BankSpec("tenants", lora, capacity=2),),
+                          serve=scfg, max_batch_per_client=2)
+        eng = ServingEngine(spec, base, [bank])
         rng = np.random.default_rng(0)
         for c in range(2):
             eng.submit(Request(client_id=c,
@@ -109,7 +112,8 @@ def run_buckets() -> PassResult:
         eng.run()
         eng.retire_bank(adm)
 
-        ft = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=4))
+        ft = FinetuneEngine(
+            EngineSpec(cfg=cfg, finetune=FinetuneConfig(max_jobs=4)), base)
         for i in range(2):
             ft.submit(FinetuneJob(acfg=lora,
                                   data=make_job_stream(cfg, 2, 8, seed=i),

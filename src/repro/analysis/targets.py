@@ -19,7 +19,7 @@ import numpy as np
 from repro.analysis.aliasing import donated_leaf_paths
 from repro.analysis.jaxpr_passes import leaf_size_sigs
 from repro.config import (AdapterConfig, ModelConfig, ServeConfig,
-                          TrainConfig, DENSE, MOE)
+                          TrainConfig, DENSE, ENCDEC, HYBRID, MOE, RWKV, VLM)
 from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
 
@@ -32,6 +32,16 @@ def tiny_config(arch: str = DENSE, **kw) -> ModelConfig:
     if arch == MOE:
         base.update(n_experts=4, top_k=2, n_shared_experts=1, d_expert=32,
                     first_dense_layers=1, n_layers=3)
+    if arch == RWKV:
+        base.update(n_heads=4, n_kv_heads=4, head_dim=16)
+    if arch == HYBRID:
+        base.update(n_layers=4, attn_every=2, n_experts=4, top_k=2,
+                    moe_every=2, moe_offset=1, d_state=8, d_conv=4)
+    if arch == ENCDEC:
+        base.update(n_enc_layers=2, n_frontend_tokens=8, rope_theta=0.0,
+                    n_kv_heads=4)
+    if arch == VLM:
+        base.update(n_frontend_tokens=8)
     base.update(kw)
     return ModelConfig(**base)
 
@@ -103,44 +113,62 @@ def _serving_state(cfg, acfg, scfg, *, n_clients=2, max_b=2, seed=0):
 
 def serving_targets(arch: str = DENSE) -> list:
     """Prefill, masked decode (dense layout), compact decode (paged),
-    mixed-bank compact decode — the ServingEngine's jitted surface."""
+    mixed-bank compact decode — the ServingEngine's jitted surface.
+
+    Family-aware: attention-bearing families (dense/MoE/VLM, plus the
+    hybrid and enc-dec stacks whose attention layers page) register the
+    paged prefill + compact-decode pair; pure-recurrent RWKV has no paged
+    layout, so it registers the dense-layout prefill instead, at TRUE
+    prompt length — recurrent families never right-pad (engine
+    ``_bucket``) because pads would pollute the state."""
     cfg = tiny_config(arch)
     lora = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
     C, B = 2, 2
     out = []
 
-    # --- paged layout: prefill + compact decode -------------------------
     scfg_p = ServeConfig(n_clients=C, max_seq=32, page_block=8)
-    base, bank, caches = _serving_state(cfg, lora, scfg_p, n_clients=C, max_b=B)
-    pool = _pool_leaves(cfg, scfg_p, caches)
+    paged = "page_block" in symbiosis.serve_cache_kwargs(cfg, scfg_p)
 
-    S_pad = 8
+    # attention families right-pad to the engine's jit bucket (8 for a
+    # 6-token prompt); recurrent-bearing families prefill at true length
+    S_pad = 8 if arch in (DENSE, MOE, VLM) else 6
     toks = np.zeros((B, S_pad), np.int32)
     toks[0, :6] = np.arange(1, 7)
     lengths = np.array([6, 0], np.int32)
     mask = np.array([True, False])
-    out.append(StepTarget(
-        name=f"serving_prefill[{arch}-paged]",
-        fn=symbiosis.make_client_prefill(cfg, lora, scfg_p),
-        args=(base, bank, caches, np.int32(0), np.int32(0),
-              jax.numpy.asarray(toks), jax.numpy.asarray(lengths),
-              jax.numpy.asarray(mask)),
-        donate_argnums=(2,), protected_leaves=pool, arch=arch))
 
     nb = 4
     clients = np.array([0, 0, 1, 0], np.int32)
     slots = np.array([0, 1, 0, 0], np.int32)
     rmask = np.array([True, True, True, False])
     dtoks = np.ones((nb,), np.int32)
-    out.append(StepTarget(
-        name=f"compact_decode[{arch}-paged]",
-        fn=symbiosis.make_compact_decode_step(cfg, lora, scfg_p),
-        args=(base, bank, caches, jax.numpy.asarray(dtoks),
-              jax.numpy.asarray(clients), jax.numpy.asarray(slots),
-              jax.numpy.asarray(rmask)),
-        donate_argnums=(2,), protected_leaves=pool, arch=arch,
-        isolation={"clients": clients, "victim": 1,
-                   "scfg": scfg_p, "extra": (dtoks, clients, slots, rmask)}))
+
+    if paged:
+        # --- paged layout: prefill + compact decode ---------------------
+        base, bank, caches = _serving_state(cfg, lora, scfg_p,
+                                            n_clients=C, max_b=B)
+        pool = _pool_leaves(cfg, scfg_p, caches)
+        if arch != ENCDEC:
+            # enc-dec admission threads encoder frames outside the engine
+            # prefill path (see tests/test_compact_decode.py); its engine
+            # hot-path surface is the decode pair below
+            out.append(StepTarget(
+                name=f"serving_prefill[{arch}-paged]",
+                fn=symbiosis.make_client_prefill(cfg, lora, scfg_p),
+                args=(base, bank, caches, np.int32(0), np.int32(0),
+                      jax.numpy.asarray(toks), jax.numpy.asarray(lengths),
+                      jax.numpy.asarray(mask)),
+                donate_argnums=(2,), protected_leaves=pool, arch=arch))
+
+        out.append(StepTarget(
+            name=f"compact_decode[{arch}-paged]",
+            fn=symbiosis.make_compact_decode_step(cfg, lora, scfg_p),
+            args=(base, bank, caches, jax.numpy.asarray(dtoks),
+                  jax.numpy.asarray(clients), jax.numpy.asarray(slots),
+                  jax.numpy.asarray(rmask)),
+            donate_argnums=(2,), protected_leaves=pool, arch=arch,
+            isolation={"clients": clients, "victim": 1, "scfg": scfg_p,
+                       "extra": (dtoks, clients, slots, rmask)}))
 
     # --- dense layout: the masked bank-wide decode path -----------------
     scfg_d = ServeConfig(n_clients=C, max_seq=32)
@@ -156,23 +184,42 @@ def serving_targets(arch: str = DENSE) -> list:
               jax.numpy.asarray(active)),
         donate_argnums=(2,), arch=arch))
 
-    # --- mixed-method registry: lora + ia3 through one compact tick -----
+    if not paged:
+        # pure-recurrent family: admission runs the dense-layout masked
+        # prefill (the only prefill path RWKV has)
+        out.append(StepTarget(
+            name=f"serving_prefill[{arch}-dense]",
+            fn=symbiosis.make_client_prefill(cfg, lora, scfg_d),
+            args=(base_d, bank_d, caches_d, np.int32(0), np.int32(0),
+                  jax.numpy.asarray(toks), jax.numpy.asarray(lengths),
+                  jax.numpy.asarray(mask)),
+            donate_argnums=(2,), arch=arch))
+
+    # --- mixed-method registry: lora + ia3 + prefix, one compact tick ---
     if arch == DENSE:
+        base, bank, _ = symbiosis.init_system(
+            cfg, lora, C, jax.random.PRNGKey(0))
         ia3 = AdapterConfig(method="ia3", targets=("k", "v", "down"))
+        prefix = AdapterConfig(method="prefix", targets=("q", "v"),
+                               n_prefix=4)
         bank_i = adapters_lib.init_client_bank(cfg, ia3, 1,
                                                jax.random.PRNGKey(3))
+        bank_p = adapters_lib.init_client_bank(cfg, prefix, 1,
+                                               jax.random.PRNGKey(4))
         bank_l = jax.tree.map(lambda x: x[:1], bank)
         caches_m = symbiosis.init_client_caches(
-            cfg, 2, B, scfg_p.max_seq,
+            cfg, 3, B, scfg_p.max_seq,
             **symbiosis.serve_cache_kwargs(cfg, scfg_p))
         pool_m = _pool_leaves(cfg, scfg_p, caches_m)
-        methods = np.array([0, 1, 0, 0], np.int32)
+        mclients = np.array([0, 1, 2, 0], np.int32)
+        methods = np.array([0, 1, 2, 0], np.int32)
         locs = np.array([0, 0, 0, 0], np.int32)
         out.append(StepTarget(
-            name="compact_decode[mixed-lora+ia3]",
-            fn=symbiosis.make_compact_decode_step(cfg, (lora, ia3), scfg_p),
-            args=(base, (bank_l, bank_i), caches_m,
-                  jax.numpy.asarray(dtoks), jax.numpy.asarray(clients),
+            name="compact_decode[mixed-lora+ia3+prefix]",
+            fn=symbiosis.make_compact_decode_step(
+                cfg, (lora, ia3, prefix), scfg_p),
+            args=(base, (bank_l, bank_i, bank_p), caches_m,
+                  jax.numpy.asarray(dtoks), jax.numpy.asarray(mclients),
                   jax.numpy.asarray(slots), jax.numpy.asarray(methods),
                   jax.numpy.asarray(locs), jax.numpy.asarray(rmask)),
             donate_argnums=(2,), protected_leaves=pool_m, arch=arch))
@@ -206,8 +253,11 @@ def train_targets(arch: str = DENSE) -> list:
     }
     # protect the full-capacity bank/opt leaves: R < cap, so any op that
     # materializes a full bank-sized tensor outside the scatter-back is a
-    # hidden copy (the gathered rows are strictly smaller)
-    protected = jax.tree.leaves(bank) + jax.tree.leaves(opt)
+    # hidden copy (the gathered rows are strictly smaller). Only row-matrix
+    # leaves — the (cap,) int32 step counter is 16 bytes and its signature
+    # collides with conv-window index vectors in the hybrid family.
+    protected = [x for x in jax.tree.leaves(bank) + jax.tree.leaves(opt)
+                 if x.ndim > 1]
     out = [StepTarget(
         name=f"compact_train[{arch}-lora]",
         fn=symbiosis.make_compact_train_step(cfg, lora),
@@ -231,8 +281,16 @@ def train_targets(arch: str = DENSE) -> list:
 
 
 def all_targets() -> list:
-    """The CLI's standard bundle: serving + train on dense, MoE train for
-    the checkpoint-structure contract."""
+    """The CLI's standard bundle: serving across every family the engines
+    serve (dense + hybrid/RWKV/enc-dec, ROADMAP carry-over), train on
+    dense plus MoE (checkpoint-structure contract) and the recurrent
+    families. Enc-dec/VLM train is excluded only because their batches
+    carry frontend extras the synthetic train harness here doesn't build."""
     return (serving_targets(DENSE)
+            + serving_targets(HYBRID)
+            + serving_targets(RWKV)
+            + serving_targets(ENCDEC)
             + train_targets(DENSE)
-            + train_targets(MOE))
+            + train_targets(MOE)
+            + train_targets(HYBRID)
+            + train_targets(RWKV))

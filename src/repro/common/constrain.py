@@ -1,8 +1,15 @@
 """Soft sharding constraints: no-ops without an ambient mesh.
 
 Model code stays mesh-agnostic — constraints only bind when the launcher
-established a mesh via ``jax.set_mesh`` (the dry-run / production path); CPU
-unit tests and single-device runs are untouched.
+established a mesh via ``launch.mesh.mesh_context`` (the dry-run /
+production / sharded-engine path); CPU unit tests and single-device runs
+are untouched.
+
+Two ambient-mesh mechanisms exist across jax versions: the abstract mesh
+set by ``jax.set_mesh`` (newer releases) and the legacy resource env bound
+by the ``Mesh`` object's own context manager (this tree's pinned jax).
+``_ambient_mesh`` reads whichever is active, so ``constrain`` binds under
+both.
 """
 from __future__ import annotations
 
@@ -10,14 +17,29 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 
-def _ambient_axes():
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
+def _ambient_mesh():
+    """The active mesh (abstract or legacy resource-env), or None."""
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        try:
+            mesh = get_am()
+        except Exception:
+            mesh = None
+        if mesh is not None and getattr(mesh, "axis_names", None):
+            return mesh
+    try:        # legacy ambient mesh: ``with mesh:`` binds the resource env
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
     except Exception:
-        return ()
-    if mesh is None or not getattr(mesh, "axis_names", None):
-        return ()
-    return tuple(mesh.axis_names)
+        pass
+    return None
+
+
+def _ambient_axes():
+    mesh = _ambient_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
 
 
 def constrain(x, *spec):
@@ -34,3 +56,26 @@ def constrain(x, *spec):
         return jax.lax.with_sharding_constraint(x, P(*spec))
     except Exception:
         return x
+
+
+def constrain_batch(x, ax: int = 0):
+    """Constrain axis ``ax`` of ``x`` over the ambient BATCH axes — the
+    (pod, data) subset of the active mesh. The gather/scatter boundaries of
+    the compacted steps use this: compacted rows, per-row state and logits
+    partition over the batch axes while the frozen base stays on its own
+    tensor/FSDP plan. Identity when no mesh is ambient, when the mesh has
+    no batch axis, or when the axis length doesn't divide."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    baxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if not baxes:
+        return x
+    size = 1
+    for a in baxes:
+        size *= dict(mesh.shape)[a]
+    if size <= 1 or x.ndim <= ax or x.shape[ax] % size:
+        return x
+    spec = [None] * x.ndim
+    spec[ax] = baxes if len(baxes) > 1 else baxes[0]
+    return constrain(x, *spec)

@@ -7,9 +7,11 @@ packing       — token-budget ragged packing (§3.7)
 scheduler     — opportunistic batching policies (§3.7)
 privacy       — activation-noise protocol (§3.8)
 base_executor — host-level packed frozen-layer service (§3.2)
+engine_spec   — declarative EngineSpec/BankSpec engine construction
 symbiosis     — multi-client train/serve step composition
 """
 from repro.core.frozen_linear import frozen_dense, frozen_expert
+from repro.core.engine_spec import BankSpec, EngineSpec
 from repro.core.virtlayer import make_client_ctx, attach_privacy
 from repro.core import adapters, packing, privacy, scheduler, symbiosis
 from repro.core.base_executor import BaseExecutor, calibrate_layer_cost

@@ -1,0 +1,116 @@
+"""Declarative engine construction: ``EngineSpec`` + ``BankSpec``.
+
+One spec describes everything the symbiotic engines need to come up — the
+model, the adapter banks (named entries with a PEFT config, a capacity and
+a placement hint), the serving/fine-tuning configs, and the device mesh —
+and is consumed by ``serving.ServingEngine``, ``training.FinetuneEngine``
+and ``training.SymbiosisEngine.from_spec`` alike:
+
+    spec = EngineSpec(
+        cfg=model_cfg,
+        banks=(BankSpec("lora8", lora_cfg, capacity=4),
+               BankSpec("ia3",   ia3_cfg,  capacity=2)),
+        serve=ServeConfig(n_clients=6, max_seq=256, page_block=16),
+        finetune=FinetuneConfig(max_jobs=8),
+        mesh=make_host_mesh(),            # None = single-device (default)
+    )
+    engine = ServingEngine(spec, base, banks)
+
+This replaces the old parallel-sequence constructor
+(``ServingEngine(cfg, acfg=[...], scfg, base, client_bank=[...])``) and
+``FinetuneEngine``'s implicit bank grouping; the old signatures remain as
+thin shims that emit a ``DeprecationWarning``.
+
+``mesh`` is a ``jax.sharding.Mesh`` (see ``launch.mesh``). When set, the
+engines shard their state onto it: the frozen base by
+``launch.shardings.base_param_specs`` (tensor-parallel over ``model``,
+FSDP fallback for oversized leaves — or fully replicated with
+``replicate_base=True``), and the global page pool / adapter banks /
+optimizer state with their client/page axes over ``(pod, data)``.
+``mesh=None`` keeps today's single-device behavior exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.config import (AdapterConfig, FinetuneConfig, ModelConfig,
+                          ServeConfig)
+
+_PLACEMENTS = ("auto", "replicated")
+
+
+@dataclasses.dataclass(frozen=True)
+class BankSpec:
+    """One named adapter bank: clients (serving) or job slots (training)
+    sharing a PEFT method/rank.
+
+    ``placement`` is the mesh hint for the bank's client axis: ``"auto"``
+    shards it over the batch axes when divisible, ``"replicated"`` keeps
+    the bank replicated on every device (tiny banks where the gather
+    traffic outweighs the memory win)."""
+
+    name: str
+    acfg: AdapterConfig
+    capacity: int
+    placement: str = "auto"
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("BankSpec needs a name")
+        if self.capacity < 1:
+            raise ValueError(f"bank {self.name!r}: capacity must be >= 1")
+        if self.placement not in _PLACEMENTS:
+            raise ValueError(f"bank {self.name!r}: placement "
+                             f"{self.placement!r} not in {_PLACEMENTS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Declarative description of one symbiotic engine deployment."""
+
+    cfg: ModelConfig
+    banks: Tuple[BankSpec, ...] = ()
+    serve: Optional[ServeConfig] = None
+    finetune: Optional[FinetuneConfig] = None
+    mesh: object = None                   # jax.sharding.Mesh | None
+    replicate_base: bool = False
+    max_batch_per_client: int = 4
+
+    def __post_init__(self):
+        object.__setattr__(self, "banks", tuple(self.banks))
+        names = [b.name for b in self.banks]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate bank names: {names}")
+        if self.max_batch_per_client < 1:
+            raise ValueError("max_batch_per_client must be >= 1")
+        if self.serve is None and self.finetune is None:
+            raise ValueError("EngineSpec needs at least one of serve= / "
+                             "finetune=")
+
+    # ------------------------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return sum(b.capacity for b in self.banks)
+
+    def bank(self, name: str) -> BankSpec:
+        for b in self.banks:
+            if b.name == name:
+                return b
+        raise KeyError(f"no bank named {name!r}; have "
+                       f"{[b.name for b in self.banks]}")
+
+    def bank_cfgs(self) -> tuple:
+        return tuple(b.acfg for b in self.banks)
+
+    def init_banks(self, key) -> list:
+        """Freshly initialized client-stacked adapter trees, one per bank
+        (convenience for drivers/tests; production tenants bring their
+        own adapter state)."""
+        import jax
+
+        from repro.core import adapters as adapters_lib
+
+        return [adapters_lib.init_client_bank(
+                    self.cfg, b.acfg, b.capacity, jax.random.fold_in(key, i))
+                for i, b in enumerate(self.banks)]

@@ -33,6 +33,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.common.constrain import constrain_batch
 from repro.config import (AdapterConfig, ModelConfig, TrainConfig, ServeConfig,
                           DENSE, MOE, VLM, HYBRID, ENCDEC)
 from repro.core import adapters as adapters_lib
@@ -269,8 +270,15 @@ def make_compact_train_step(cfg: ModelConfig, acfg: AdapterConfig, *,
     def train_step(base, bank, opt, batch, slots, row_mask, hyper):
         cap = jax.tree.leaves(bank)[0].shape[0]
         slots = slots.astype(jnp.int32)
-        params = jax.tree.map(lambda x: x[slots], bank)
-        ostate = jax.tree.map(lambda x: x[slots], opt)
+        # gather boundary: the compacted job rows (and their batches)
+        # partition over the mesh batch axes, NOT over the base's
+        # tensor-parallel axes — the scatter below returns to the bank's
+        # own layout. No-ops without an ambient mesh.
+        params = jax.tree.map(constrain_batch, jax.tree.map(
+            lambda x: x[slots], bank))
+        ostate = jax.tree.map(constrain_batch, jax.tree.map(
+            lambda x: x[slots], opt))
+        batch = jax.tree.map(constrain_batch, batch)
         R = slots.shape[0]
         if R == 1:
             # A one-row bucket skips the vmap entirely: vmap-of-1 still
@@ -688,12 +696,15 @@ def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
                 return x
             if ax is not None:       # per-slot leaf: [C, .., B@ax, ..] -> rows
                 y = jnp.moveaxis(x, ax + 1, 1).reshape((C * B,) + _rest(x, ax + 1))
-                return jnp.moveaxis(y[rows], 0, ax)
+                # gather boundary: compacted rows partition over the mesh
+                # batch axes (never the base's tensor axes) — no-op off-mesh
+                return constrain_batch(jnp.moveaxis(y[rows], 0, ax), ax)
             raise ValueError("paged cache leaf with neither slot nor page axis")
 
         compact_cache = jax.tree.map(gather, inner, slot_axes, page_axes)
         # table rows already hold global page ids (allocator page ranges)
-        compact_cache["block_tbl"] = caches["block_tbl"].reshape(C * B, -1)[rows]
+        compact_cache["block_tbl"] = constrain_batch(
+            caches["block_tbl"].reshape(C * B, -1)[rows])
         return inner, compact_cache
 
     def _scatter_caches(inner, new_compact, rows, row_mask, C, B):
@@ -721,10 +732,12 @@ def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
         ctx = make_client_ctx(cfg, None, **ctx_kw) if bank is None else \
             make_compact_ctx(cfg, acfg, clients, **ctx_kw)
         adapter = adapters_lib.compact_adapter_bank(bank, clients)
-        logits, new_compact = model.decode_step(base, compact_cache, tokens,
+        logits, new_compact = model.decode_step(base, compact_cache,
+                                                constrain_batch(tokens),
                                                 ctx, adapter, active=row_mask)
         new_inner = _scatter_caches(inner, new_compact, rows, row_mask, C, B)
-        return logits, dict(new_inner, block_tbl=caches["block_tbl"])
+        return constrain_batch(logits), dict(new_inner,
+                                             block_tbl=caches["block_tbl"])
 
     def compact_mixed(base, banks, caches, tokens, clients, slots, methods,
                       locals_, row_mask):
@@ -737,10 +750,12 @@ def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
         inner, compact_cache = _gather_caches(caches, rows, C, B)
         ctx = make_mixed_ctx(cfg, acfgs, locals_, methods, **ctx_kw)
         adapter = adapters_lib.compact_mixed_bank(banks, locals_, methods)
-        logits, new_compact = model.decode_step(base, compact_cache, tokens,
+        logits, new_compact = model.decode_step(base, compact_cache,
+                                                constrain_batch(tokens),
                                                 ctx, adapter, active=row_mask)
         new_inner = _scatter_caches(inner, new_compact, rows, row_mask, C, B)
-        return logits, dict(new_inner, block_tbl=caches["block_tbl"])
+        return constrain_batch(logits), dict(new_inner,
+                                             block_tbl=caches["block_tbl"])
 
     return compact_mixed if mixed else compact
 

@@ -19,7 +19,15 @@ import numpy as np
 from repro.config import AdapterConfig, ServeConfig
 from repro.configs import ARCHS, get_config
 from repro.core import symbiosis
+from repro.core.engine_spec import BankSpec, EngineSpec
 from repro.serving.engine import ServingEngine, Request
+
+
+def _mesh_from(dims):
+    if dims is None:
+        return None
+    from repro.launch.mesh import _make_mesh
+    return _make_mesh(tuple(dims), ("data", "model"))
 
 
 def main(argv=None):
@@ -43,6 +51,10 @@ def main(argv=None):
                     help="pages per client pool (0 = full provisioning)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 KV cache entries + per-head f32 scales")
+    ap.add_argument("--mesh", nargs=2, type=int, default=None,
+                    metavar=("DATA", "MODEL"),
+                    help="place the engine on a (data, model) device mesh "
+                         "(replicated base, client axes partitioned)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -56,7 +68,13 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(scfg.seed)
     base, bank, _ = symbiosis.init_system(cfg, acfg, args.clients, key)
-    eng = ServingEngine(cfg, acfg, scfg, base, bank, max_batch_per_client=args.batch)
+    spec = EngineSpec(cfg=cfg,
+                      banks=(BankSpec("tenants", acfg,
+                                      capacity=args.clients),),
+                      serve=scfg, mesh=_mesh_from(args.mesh),
+                      replicate_base=args.mesh is not None,
+                      max_batch_per_client=args.batch)
+    eng = ServingEngine(spec, base, [bank])
 
     rng = np.random.default_rng(0)
     reqs = [Request(client_id=i % args.clients,

@@ -39,6 +39,32 @@ def _div(n: int, m: int) -> bool:
     return m > 0 and n % m == 0
 
 
+def _canon_specs(mesh, spec_tree):
+    """Drop size-1 mesh axes from every PartitionSpec entry.
+
+    XLA canonicalizes shardings: a jit OUTPUT partitioned over a trivial
+    axis comes back as replicated (``P()``), and trailing ``None`` entries
+    are dropped — so a ``device_put`` input spec that still carries them
+    would differ from the output spec of the previous tick, a signature
+    flip that recompiles the donated-state hot loop on every call.
+    Canonicalizing here keeps placements and constraints in the same
+    normal form on any mesh (host (1,1) included)."""
+    def entry(e):
+        if e is None:
+            return None
+        names = e if isinstance(e, tuple) else (e,)
+        names = tuple(n for n in names if mesh.shape[n] > 1)
+        return None if not names else (names if len(names) > 1 else names[0])
+
+    def canon(p):
+        es = [entry(e) for e in p]
+        while es and es[-1] is None:
+            es.pop()
+        return P(*es)
+
+    return jax.tree.map(canon, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
 # A frozen base leaf whose model-sharded size still exceeds this gets an
 # additional data-axis shard (the paper's FSDP-sharded base executor mode —
 # frozen weights are all-gathered per layer, never gradient-synced).
@@ -103,7 +129,8 @@ def base_param_specs(cfg: ModelConfig, mesh, params_shape) -> object:
                 spec[nd - 2] = "model"          # row-parallel (odd vocab)
         return P(*spec)
 
-    return jax.tree_util.tree_map_with_path(rule, params_shape)
+    return _canon_specs(mesh, jax.tree_util.tree_map_with_path(
+        rule, params_shape))
 
 
 def client_state_specs(cfg: ModelConfig, mesh, tree_shape,
@@ -163,7 +190,8 @@ def client_state_specs(cfg: ModelConfig, mesh, tree_shape,
                 spec[nd - 1] = "model"
         return P(*spec)
 
-    return jax.tree_util.tree_map_with_path(rule, tree_shape)
+    return _canon_specs(mesh, jax.tree_util.tree_map_with_path(
+        rule, tree_shape))
 
 
 def attach(mesh, shape_tree, spec_tree):
@@ -172,3 +200,102 @@ def attach(mesh, shape_tree, spec_tree):
         lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
                                           sharding=NamedSharding(mesh, p)),
         shape_tree, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Engine-state placement (the sharded symbiotic engines — EngineSpec.mesh)
+# ---------------------------------------------------------------------------
+
+def put_tree(mesh, tree, spec_tree):
+    """``device_put`` a concrete tree onto the mesh per its spec tree.
+
+    Idempotent AND identity-preserving: a leaf already committed with the
+    target sharding is returned as-is (same array object) — which is what
+    lets ``SymbiosisEngine.from_spec`` shard the base ONCE and have both
+    engines' constructors re-run this as a no-op, keeping the leaf-identity
+    shared-base check intact."""
+    def put(x, p):
+        ns = NamedSharding(mesh, p)
+        if getattr(x, "sharding", None) == ns:
+            return x
+        return jax.device_put(x, ns)
+
+    return jax.tree.map(put, tree, spec_tree)
+
+
+def shard_base_params(cfg: ModelConfig, mesh, params, *,
+                      replicate: bool = False):
+    """Place the frozen base onto the mesh: ``base_param_specs`` (tensor-
+    parallel + FSDP fallback) or fully replicated (``replicate=True`` —
+    bitwise-safe pure batch partitioning for models that fit per-chip)."""
+    shape = jax.eval_shape(lambda: params)
+    specs = (jax.tree.map(lambda s: P(), shape) if replicate
+             else base_param_specs(cfg, mesh, shape))
+    return put_tree(mesh, params, specs)
+
+
+def serving_cache_specs(cfg: ModelConfig, scfg, mesh, caches) -> object:
+    """Spec tree for a ServingEngine cache tree (concrete OR traced).
+
+    Per-client leaves (positions, block tables, dense KV rows, recurrent
+    state) shard their leading client axis over (pod, data); the GLOBAL
+    flat page pools have no client axis and shard their PAGE axis over the
+    same — client c owns pages [c*P, (c+1)*P), so the page partition IS the
+    client partition. Anything indivisible replicates."""
+    from repro.core import symbiosis
+
+    cache_kw = symbiosis.serve_cache_kwargs(cfg, scfg, pool_pages=1)
+    baxes = batch_axes(mesh)
+    bsize = batch_size(mesh)
+    name = baxes if len(baxes) > 1 else baxes[0]
+
+    flat_c, treedef = jax.tree_util.tree_flatten(caches)
+    if "page_block" in cache_kw:
+        page_axes = symbiosis.cache_page_axes(cfg, scfg.max_seq, **cache_kw)
+        flat_p = jax.tree_util.tree_flatten(
+            page_axes, is_leaf=lambda x: x is None)[0]
+    else:
+        flat_p = [None] * len(flat_c)
+
+    def rule(x, pax):
+        ax = 0 if pax is None else pax
+        spec = [None] * x.ndim
+        if x.ndim > ax and _div(x.shape[ax], bsize):
+            spec[ax] = name
+        return P(*spec)
+
+    return _canon_specs(mesh, jax.tree_util.tree_unflatten(
+        treedef, [rule(x, pax) for x, pax in zip(flat_c, flat_p)]))
+
+
+def bank_state_specs(cfg: ModelConfig, mesh, tree, *,
+                     replicated: bool = False) -> object:
+    """Spec tree for adapter banks / stacked optimizer state: the leading
+    client (bank-slot) axis over (pod, data) — or fully replicated (the
+    ``BankSpec.placement == "replicated"`` hint)."""
+    if replicated:
+        return jax.tree.map(lambda x: P(), tree)
+    return client_state_specs(cfg, mesh, tree)
+
+
+def _constrain_tree(mesh, tree, spec_tree):
+    return jax.tree.map(
+        lambda x, p: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, p)),
+        tree, spec_tree)
+
+
+def serving_cache_constrain(cfg: ModelConfig, scfg, mesh, caches):
+    """``with_sharding_constraint`` the cache tree to its canonical specs —
+    the in/out pin the engines wrap around their jitted steps so donated
+    cache state keeps ONE placement across ticks (no resharding copies, no
+    per-tick executable churn)."""
+    return _constrain_tree(mesh, caches,
+                           serving_cache_specs(cfg, scfg, mesh, caches))
+
+
+def bank_state_constrain(cfg: ModelConfig, mesh, tree, *,
+                         replicated: bool = False):
+    """The training-side twin: pin bank params / optimizer state."""
+    return _constrain_tree(
+        mesh, tree, bank_state_specs(cfg, mesh, tree, replicated=replicated))

@@ -179,3 +179,62 @@ def input_specs(arch_id: str, shape_name: str, mesh, *,
     tokens = shardings.attach(mesh, tok_struct, cs(tok_struct))["tokens"]
     args = (base, bank, caches, tokens)
     return SpecBundle(arch_id, shape_name, fn, args, C, B, meta)
+
+
+def service_specs(arch_id: str, mesh, *, n_jobs: int = 20,
+                  capacity: int = 32, batch: int = 1, seq_len: int = 4096,
+                  acfg: AdapterConfig = DEFAULT_ADAPTER,
+                  memory_optimized: bool = True, remat: bool = True,
+                  microbatch: int = 0,
+                  replicate_base: bool = False) -> SpecBundle:
+    """The paper's headline service case: ``n_jobs`` fine-tuning adapters
+    time-sharing ONE frozen base (Table 3's 20 × Gemma2-27B demo) — the
+    FinetuneEngine's compact train step at bank scale, as sharded
+    ShapeDtypeStruct stand-ins for the dry-run collective audit.
+
+    The compacted row count is the engine's row bucket
+    (``min(next_pow2(n_jobs), capacity)``), so the audited program is
+    byte-for-byte the executable the service would compile."""
+    cfg = get_config(arch_id)
+    R = 1
+    while R < n_jobs:
+        R *= 2
+    R = min(R, capacity)                    # FinetuneEngine._row_bucket
+
+    sys_shape = jax.eval_shape(
+        lambda: symbiosis.init_system(cfg, acfg, capacity,
+                                      jax.random.PRNGKey(0)))
+    base_s, bank_s, opt_s = sys_shape
+    if replicate_base:
+        base_spec = jax.tree.map(lambda s: P(), base_s)
+        cs = lambda t: shardings.client_state_specs(cfg, mesh, t,
+                                                    full_mesh=True)
+    else:
+        base_spec = shardings.base_param_specs(cfg, mesh, base_s)
+        cs = lambda t: shardings.client_state_specs(cfg, mesh, t)
+    base = shardings.attach(mesh, base_s, base_spec)
+    bank = shardings.attach(mesh, bank_s, cs(bank_s))
+    opt = shardings.attach(mesh, opt_s, cs(opt_s))
+
+    batch_struct = {
+        "tokens": jax.ShapeDtypeStruct((R, batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((R, batch, seq_len), jnp.int32),
+    }
+    batch_t = shardings.attach(mesh, batch_struct, cs(batch_struct))
+    row = lambda dt: jax.ShapeDtypeStruct((R,), dt)
+    ctrl_s = {"slots": row(jnp.int32), "mask": row(jnp.bool_)}
+    hyper_s = {"step": row(jnp.int32)}
+    hyper_s.update({k: row(jnp.float32)
+                    for k in ("lr", "warmup", "total", "wd", "gnorm")})
+    ctrl = shardings.attach(mesh, ctrl_s, cs(ctrl_s))
+    hyper = shardings.attach(mesh, hyper_s, cs(hyper_s))
+
+    fn = symbiosis.make_compact_train_step(
+        cfg, acfg, microbatch=microbatch, remat=remat,
+        memory_optimized=memory_optimized)
+    args = (base, bank, opt, batch_t, ctrl["slots"], ctrl["mask"], hyper)
+    meta = {"n_jobs": n_jobs, "capacity": capacity, "row_bucket": R,
+            "batch_per_job": batch, "seq_len": seq_len,
+            "replicate_base": replicate_base, "kind": "service"}
+    return SpecBundle(arch_id, f"service{n_jobs}", fn, args, n_jobs, batch,
+                      meta)

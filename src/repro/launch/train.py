@@ -24,6 +24,7 @@ from repro.config import AdapterConfig, FinetuneConfig
 from repro.configs import ARCHS, get_config
 from repro.checkpoint import save_job_state
 from repro.core.adapters import DEFAULT_TARGETS
+from repro.core.engine_spec import EngineSpec
 from repro.models import get_model
 from repro.training import FinetuneEngine, FinetuneJob, make_job_stream
 
@@ -48,6 +49,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--mesh", nargs=2, type=int, default=None,
+                    metavar=("DATA", "MODEL"),
+                    help="place the engine on a (data, model) device mesh "
+                         "(replicated base, job rows partitioned)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -56,9 +61,15 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(0)
     base = get_model(cfg).init_params(key)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import _make_mesh
+        mesh = _make_mesh(tuple(args.mesh), ("data", "model"))
     fcfg = FinetuneConfig(max_jobs=args.clients,
                           memory_optimized=not args.no_memory_optimized)
-    engine = FinetuneEngine(cfg, base, fcfg=fcfg)
+    spec = EngineSpec(cfg=cfg, finetune=fcfg, mesh=mesh,
+                      replicate_base=mesh is not None)
+    engine = FinetuneEngine(spec, base)
 
     methods = (("lora", "ia3", "prefix") if args.peft == "mixed"
                else (args.peft,))

@@ -1,3 +1,4 @@
 from repro.serving.kvcache import cache_bytes, CacheSpec, make_cache_spec
+from repro.core.engine_spec import BankSpec, EngineSpec
 from repro.serving.engine import ServingEngine, Request, SamplingParams
 from repro.serving.router import PlacementRouter, Slot, Placement

@@ -122,9 +122,11 @@ tests/conftest.py; jitted dispatch routes through
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
+import warnings
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -136,37 +138,66 @@ from repro.analysis import tracecount
 from repro.config import ModelConfig, ServeConfig, DENSE, MOE, VLM
 from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
+from repro.core.engine_spec import EngineSpec
 from repro.core.scheduler import ClientSpec, TickPolicy, simulate
+
+
+def _pin_serving(fn, cfg, scfg, mesh, *, cache_arg=2):
+    """Sharded hot path: pin the donated cache tree to its canonical specs
+    on the way IN and OUT of a jitted step (``launch.shardings.
+    serving_cache_constrain``). Donated state then keeps ONE placement
+    across ticks — no per-tick resharding copies, no executable churn —
+    and the compiler is told the client/page partition survives the step,
+    so compaction never round-trips through a replicated (base-sized)
+    layout. ``mesh=None`` returns ``fn`` untouched."""
+    if mesh is None:
+        return fn
+    from repro.launch import shardings
+
+    def pinned(*a):
+        a = list(a)
+        a[cache_arg] = shardings.serving_cache_constrain(
+            cfg, scfg, mesh, a[cache_arg])
+        out, caches = fn(*a)
+        return out, shardings.serving_cache_constrain(cfg, scfg, mesh, caches)
+
+    return pinned
 
 
 # Jitted step builders are memoized on the (frozen, hashable) configs so
 # every engine instance over the same model shares one compile cache —
 # constructing an engine is cheap and benchmarks don't re-pay compilation.
-# The cache tree (arg 2) is DONATED in every step that replaces it: the
-# engine always rebinds ``self.caches`` to the result, and donation lets
-# XLA update the (potentially multi-GB) bank cache in place instead of
-# copying it once per tick — without it, per-tick cost grows with bank
-# size no matter how few slots decode.
+# ``mesh`` joins the key (jax Meshes hash by shape + axis names + devices):
+# a sharded engine gets its own jitted wrapper, keeping the per-engine
+# trace accounting clean. The cache tree (arg 2) is DONATED in every step
+# that replaces it: the engine always rebinds ``self.caches`` to the
+# result, and donation lets XLA update the (potentially multi-GB) bank
+# cache in place instead of copying it once per tick — without it,
+# per-tick cost grows with bank size no matter how few slots decode.
 @functools.lru_cache(maxsize=None)
-def _jit_client_prefill(cfg, acfg, scfg):
-    return jax.jit(symbiosis.make_client_prefill(cfg, acfg, scfg),
+def _jit_client_prefill(cfg, acfg, scfg, mesh=None):
+    return jax.jit(_pin_serving(symbiosis.make_client_prefill(cfg, acfg, scfg),
+                                cfg, scfg, mesh),
                    donate_argnums=2)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_masked_decode(cfg, acfg, scfg):
-    return jax.jit(symbiosis.make_masked_decode_step(cfg, acfg, scfg),
+def _jit_masked_decode(cfg, acfg, scfg, mesh=None):
+    return jax.jit(_pin_serving(
+        symbiosis.make_masked_decode_step(cfg, acfg, scfg), cfg, scfg, mesh),
                    donate_argnums=2)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_bank_prefill(cfg, acfg, scfg):
-    return jax.jit(symbiosis.make_multi_client_prefill(cfg, acfg, scfg))
+def _jit_bank_prefill(cfg, acfg, scfg, mesh=None):
+    return jax.jit(_pin_serving(
+        symbiosis.make_multi_client_prefill(cfg, acfg, scfg), cfg, scfg, mesh))
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_compact_decode(cfg, acfg, scfg):
-    return jax.jit(symbiosis.make_compact_decode_step(cfg, acfg, scfg),
+def _jit_compact_decode(cfg, acfg, scfg, mesh=None):
+    return jax.jit(_pin_serving(
+        symbiosis.make_compact_decode_step(cfg, acfg, scfg), cfg, scfg, mesh),
                    donate_argnums=2)
 
 
@@ -226,16 +257,93 @@ class ServingEngine:
     require the paged KV layout (the compacted tick is the only decode
     path that can carry per-row methods); an attached ``PlacementRouter``
     is charged each bank's resident adapter bytes (``route_bank``),
-    released via ``release_banks()``."""
+    released via ``release_banks()``.
 
-    def __init__(self, cfg: ModelConfig, acfg, scfg: ServeConfig,
-                 base_params, client_bank, *, max_batch_per_client: int = 4,
-                 router=None, policy: Optional[str] = None,
-                 bank_prefill: bool = False,
-                 max_inflight_per_client: Optional[int] = None,
-                 compact_decode: Optional[bool] = None,
-                 ragged_prefill: Optional[bool] = None):
+    CONSTRUCTION (``core.engine_spec.EngineSpec``)::
+
+        spec = EngineSpec(cfg=cfg, banks=(BankSpec("lora8", lora, 4),),
+                          serve=scfg, mesh=None)
+        engine = ServingEngine(spec, base_params, banks)
+
+    where ``banks`` is one client-stacked adapter tree per ``spec.banks``
+    entry (a bare tree for a single bank). ``spec.mesh`` set to a
+    ``jax.sharding.Mesh`` shards the engine: the frozen base by
+    ``launch.shardings.base_param_specs`` (or replicated with
+    ``spec.replicate_base``), caches/page pools/banks with their
+    client/page axes over the batch axes; ``mesh=None`` is byte-identical
+    to today's single-device engine.
+
+    DEPRECATED: the parallel-sequence positional form
+    ``ServingEngine(cfg, acfg, scfg, base_params, client_bank, ...)``
+    still works but emits a ``DeprecationWarning`` — migrate to the
+    EngineSpec form above (see docs/sharding.md)."""
+
+    def __init__(self, spec, *args, **kwargs):
+        if isinstance(spec, EngineSpec):
+            self._init_from_spec(spec, *args, **kwargs)
+        else:
+            warnings.warn(
+                "ServingEngine(cfg, acfg, scfg, base_params, client_bank) is "
+                "deprecated; construct an EngineSpec and call "
+                "ServingEngine(spec, base_params, banks) (docs/sharding.md)",
+                DeprecationWarning, stacklevel=2)
+            self._setup(spec, *args, **kwargs)
+
+    def _init_from_spec(self, spec: EngineSpec, base_params, banks, *,
+                        router=None, policy: Optional[str] = None,
+                        bank_prefill: bool = False,
+                        max_inflight_per_client: Optional[int] = None,
+                        compact_decode: Optional[bool] = None,
+                        ragged_prefill: Optional[bool] = None):
+        if spec.serve is None:
+            raise ValueError("ServingEngine needs EngineSpec.serve")
+        if not spec.banks:
+            raise ValueError("ServingEngine needs at least one BankSpec")
+        banks = list(banks) if isinstance(banks, (tuple, list)) else [banks]
+        if len(banks) != len(spec.banks):
+            raise ValueError(f"{len(banks)} adapter trees for "
+                             f"{len(spec.banks)} declared banks")
+        for bs, tree in zip(spec.banks, banks):
+            k = jax.tree.leaves(tree)[0].shape[0]
+            if k != bs.capacity:
+                raise ValueError(f"bank {bs.name!r}: adapter tree holds {k} "
+                                 f"clients, spec capacity is {bs.capacity}")
+        single = len(spec.banks) == 1
+        self._setup(spec.cfg,
+                    spec.banks[0].acfg if single else spec.bank_cfgs(),
+                    spec.serve, base_params,
+                    banks[0] if single else banks,
+                    max_batch_per_client=spec.max_batch_per_client,
+                    router=router, policy=policy, bank_prefill=bank_prefill,
+                    max_inflight_per_client=max_inflight_per_client,
+                    compact_decode=compact_decode,
+                    ragged_prefill=ragged_prefill,
+                    mesh=spec.mesh, replicate_base=spec.replicate_base,
+                    bank_repl=tuple(b.placement == "replicated"
+                                    for b in spec.banks),
+                    spec=spec)
+
+    def _setup(self, cfg: ModelConfig, acfg, scfg: ServeConfig,
+               base_params, client_bank, *, max_batch_per_client: int = 4,
+               router=None, policy: Optional[str] = None,
+               bank_prefill: bool = False,
+               max_inflight_per_client: Optional[int] = None,
+               compact_decode: Optional[bool] = None,
+               ragged_prefill: Optional[bool] = None,
+               mesh=None, replicate_base: bool = False,
+               bank_repl: tuple = (), spec: Optional[EngineSpec] = None):
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
+        self.spec = spec
+        self.mesh = mesh
+        self._replicate_base = replicate_base
+        self._bank_repl = bank_repl
+        if mesh is not None:
+            from repro.launch import shardings
+            # idempotent + identity-preserving: SymbiosisEngine.from_spec
+            # shards the base ONCE and both engines re-run this as a no-op,
+            # keeping the shared-base leaf-identity check intact
+            base_params = shardings.shard_base_params(
+                cfg, mesh, base_params, replicate=replicate_base)
         self.base = base_params
         self.bank = client_bank
         self._mixed = isinstance(acfg, (tuple, list))
@@ -331,13 +439,16 @@ class ServingEngine:
             self._resv_of: Dict[int, int] = {}
         self.caches = symbiosis.init_client_caches(
             cfg, self.n_clients, max_batch_per_client, scfg.max_seq, **cache_kw)
+        self._place_on_mesh()
         # one jitted masked-prefill per bank (admission runs the admitted
         # client's OWN method); the masked bank-wide decode exists only for
         # single-method engines (it vmaps one homogeneous adapter tree)
-        self._prefill_one = [_jit_client_prefill(cfg, a, scfg)
+        self._prefill_one = [_jit_client_prefill(cfg, a, scfg, mesh)
                              for a in self.bank_cfgs]
-        self._prefill_bank = _jit_bank_prefill(cfg, acfg, scfg) if bank_prefill else None
-        self._decode = None if self._mixed else _jit_masked_decode(cfg, acfg, scfg)
+        self._prefill_bank = (_jit_bank_prefill(cfg, acfg, scfg, mesh)
+                              if bank_prefill else None)
+        self._decode = (None if self._mixed
+                        else _jit_masked_decode(cfg, acfg, scfg, mesh))
         # Compute-proportional decode (ISSUE 3 tentpole): gather the active
         # (client, slot) rows into one dense batch and run ONLY those —
         # FLOPs/HBM scale with active tokens, not bank size. Paged layouts
@@ -349,7 +460,7 @@ class ServingEngine:
                              "(ServeConfig.page_block > 0)")
         self._compact = self._paged if compact_decode is None else compact_decode
         self._compact_step = (_jit_compact_decode(
-            cfg, self.bank_cfgs if self._mixed else acfg, scfg)
+            cfg, self.bank_cfgs if self._mixed else acfg, scfg, mesh)
             if self._compact else None)
         # jit-bucketed row-batch sizes: 4, 8, ... capped at the bank's rows
         total_rows = self.n_clients * self.max_b
@@ -628,11 +739,12 @@ class ServingEngine:
             self.stats["prefill_tokens"] += B * S
         self._sync_tbl()
         m = int(self._method_of[c])
-        logits, self.caches = tracecount.dispatch(
-            self, "prefill", (m, S_pad), self._prefill_one[m],
-            self.base, self.banks[m], self.caches, np.int32(c),
-            np.int32(self._local_of[c]),
-            jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
+        with self._mesh_ctx():
+            logits, self.caches = tracecount.dispatch(
+                self, "prefill", (m, S_pad), self._prefill_one[m],
+                self.base, self.banks[m], self.caches, np.int32(c),
+                np.int32(self._local_of[c]),
+                jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
         self.stats["prefill_calls"] += 1
         self.stats["ragged_prefill_batches"] += 1
         return np.asarray(logits)
@@ -648,11 +760,50 @@ class ServingEngine:
             b *= 2
         return min(b, self.scfg.max_seq)
 
+    def _mesh_ctx(self):
+        """Ambient-mesh context for jitted dispatch: binds the engine mesh
+        while tracing/running a step so the soft constraints inside the hot
+        path (``common.constrain``) resolve; a no-op single-device."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.launch.mesh import mesh_context
+        return mesh_context(self.mesh)
+
+    def _place_on_mesh(self):
+        """``device_put`` the engine's mutable state onto the mesh: caches
+        (page pools by their page axis, per-slot leaves by the client axis)
+        and each adapter bank (client axis; ``BankSpec.placement ==
+        "replicated"`` keeps a bank whole on every device). Idempotent —
+        re-run after ``admit_bank`` growth to place the appended state."""
+        if self.mesh is None:
+            return
+        from repro.launch import shardings
+        self._cache_specs = shardings.serving_cache_specs(
+            self.cfg, self.scfg, self.mesh, self.caches)
+        self.caches = shardings.put_tree(self.mesh, self.caches,
+                                         self._cache_specs)
+        for m, b in enumerate(self.banks):
+            repl = m < len(self._bank_repl) and self._bank_repl[m]
+            self.banks[m] = shardings.put_tree(
+                self.mesh, b,
+                shardings.bank_state_specs(self.cfg, self.mesh, b,
+                                           replicated=repl))
+        if not self._mixed:
+            self.bank = self.banks[0]
+
     def _sync_tbl(self):
         """Push the block-table mirror to the device cache tree if the host
         allocator changed it since the last jitted call."""
         if self._paged and self._tbl_dirty:
-            self.caches = dict(self.caches, block_tbl=jnp.asarray(self._tbl))
+            tbl = jnp.asarray(self._tbl)
+            if self.mesh is not None:
+                # commit to the table's canonical placement so the jitted
+                # steps see ONE input-sharding signature whether the tick's
+                # table came from the host mirror or the previous step
+                from jax.sharding import NamedSharding
+                tbl = jax.device_put(tbl, NamedSharding(
+                    self.mesh, self._cache_specs["block_tbl"]))
+            self.caches = dict(self.caches, block_tbl=tbl)
             self._tbl_dirty = False
 
     def _prefill_request(self, req: Request, slots: List[int]) -> np.ndarray:
@@ -674,11 +825,12 @@ class ServingEngine:
         lengths = np.where(mask, S, 0).astype(np.int32)
         self._sync_tbl()
         m = int(self._method_of[c])
-        logits, self.caches = tracecount.dispatch(
-            self, "prefill", (m, S_pad), self._prefill_one[m],
-            self.base, self.banks[m], self.caches, np.int32(c),
-            np.int32(self._local_of[c]),
-            jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
+        with self._mesh_ctx():
+            logits, self.caches = tracecount.dispatch(
+                self, "prefill", (m, S_pad), self._prefill_one[m],
+                self.base, self.banks[m], self.caches, np.int32(c),
+                np.int32(self._local_of[c]),
+                jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(mask))
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += B * S
         return np.asarray(logits)[slots]
@@ -691,9 +843,10 @@ class ServingEngine:
         B, S = req.prompt.shape
         toks = np.zeros((self.n_clients, self.max_b, S), np.int32)
         toks[c, slots] = req.prompt
-        logits, new_caches = tracecount.dispatch(
-            self, "bank_prefill", (S,), self._prefill_bank,
-            self.base, self.bank, self.caches, {"tokens": jnp.asarray(toks)})
+        with self._mesh_ctx():
+            logits, new_caches = tracecount.dispatch(
+                self, "bank_prefill", (S,), self._prefill_bank,
+                self.base, self.bank, self.caches, {"tokens": jnp.asarray(toks)})
         sel = np.zeros((self.n_clients,), bool)
         sel[c] = True
         sel = jnp.asarray(sel)
@@ -749,10 +902,11 @@ class ServingEngine:
             serve_sel = np.zeros((self.n_clients, 1), bool)
             serve_sel[sorted(serve)] = True
             active = self._active_mask & serve_sel
-            logits, self.caches = tracecount.dispatch(
-                self, "decode", (), self._decode,
-                self.base, self.bank, self.caches,
-                jnp.asarray(self._last_tok), jnp.asarray(active))
+            with self._mesh_ctx():
+                logits, self.caches = tracecount.dispatch(
+                    self, "decode", (), self._decode,
+                    self.base, self.bank, self.caches,
+                    jnp.asarray(self._last_tok), jnp.asarray(active))
             lg = np.asarray(logits)
             lookup = lambda c, slots: lg[c, slots]
         for req in stepping:
@@ -786,17 +940,21 @@ class ServingEngine:
         if self._mixed:
             # per-row method ids + bank-local adapter indices: one tick
             # carries every bank's rows through the mixed compact step
-            logits, self.caches = tracecount.dispatch(
-                self, "compact_decode", nb, self._compact_step,
-                self.base, tuple(self.banks), self.caches, jnp.asarray(toks),
-                jnp.asarray(clients), jnp.asarray(slots),
-                jnp.asarray(self._method_of[clients]),
-                jnp.asarray(self._local_of[clients]), jnp.asarray(mask))
+            with self._mesh_ctx():
+                logits, self.caches = tracecount.dispatch(
+                    self, "compact_decode", nb, self._compact_step,
+                    self.base, tuple(self.banks), self.caches,
+                    jnp.asarray(toks),
+                    jnp.asarray(clients), jnp.asarray(slots),
+                    jnp.asarray(self._method_of[clients]),
+                    jnp.asarray(self._local_of[clients]), jnp.asarray(mask))
         else:
-            logits, self.caches = tracecount.dispatch(
-                self, "compact_decode", nb, self._compact_step,
-                self.base, self.bank, self.caches, jnp.asarray(toks),
-                jnp.asarray(clients), jnp.asarray(slots), jnp.asarray(mask))
+            with self._mesh_ctx():
+                logits, self.caches = tracecount.dispatch(
+                    self, "compact_decode", nb, self._compact_step,
+                    self.base, self.bank, self.caches, jnp.asarray(toks),
+                    jnp.asarray(clients), jnp.asarray(slots),
+                    jnp.asarray(mask))
         lg = np.asarray(logits)
         row_of = {cs: i for i, cs in enumerate(rows)}
         self.stats["compact_rows"] += n
@@ -900,12 +1058,13 @@ class ServingEngine:
             m = len(self.banks)
             self.bank_cfgs = self.bank_cfgs + (acfg,)
             self.banks.append(client_bank)
+            self._bank_repl = self._bank_repl + (False,)
             self._prefill_one.append(
-                _jit_client_prefill(self.cfg, acfg, self.scfg))
+                _jit_client_prefill(self.cfg, acfg, self.scfg, self.mesh))
             locs = np.arange(k, dtype=np.int32)
         if self._mixed:
             self._compact_step = _jit_compact_decode(
-                self.cfg, self.bank_cfgs, self.scfg)
+                self.cfg, self.bank_cfgs, self.scfg, self.mesh)
         self._method_of = np.concatenate(
             [self._method_of, np.full((k,), m, np.int32)])
         self._local_of = np.concatenate([self._local_of, locs])
@@ -950,6 +1109,7 @@ class ServingEngine:
             self._buckets.append(b)
             b *= 2
         self._buckets.append(total_rows)
+        self._place_on_mesh()       # grown caches + banks take their specs
         self._trace_epoch += 1
         return BankAdmission(bank_id=m,
                              client_ids=list(range(old_C, self.n_clients)),

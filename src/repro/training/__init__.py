@@ -1,3 +1,4 @@
+from repro.core.engine_spec import BankSpec, EngineSpec
 from repro.training.job import FinetuneJob, JobResult, make_job_stream
 from repro.training.engine import FinetuneEngine, BankKey, job_hbm_bytes
 from repro.training.service import SymbiosisEngine

@@ -52,8 +52,10 @@ jit bucket coverage via ``trace_domain()`` +
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -64,18 +66,42 @@ from repro.analysis import tracecount
 from repro.config import AdapterConfig, FinetuneConfig, ModelConfig
 from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
+from repro.core.engine_spec import EngineSpec
 from repro.optim import adamw_init
 from repro.training.job import FinetuneJob, JobResult
 
 
+def _pin_train(fn, cfg, mesh):
+    """Sharded hot path: pin the donated bank/optimizer trees to their
+    client-axis specs on the way IN and OUT of the jitted step (the
+    training twin of ``serving.engine._pin_serving``) — donated state keeps
+    ONE placement across ticks and the row gather/scatter never round-trips
+    through a replicated layout. ``mesh=None`` returns ``fn`` untouched."""
+    if mesh is None:
+        return fn
+    from repro.launch import shardings
+
+    def pinned(base, bank, opt, batch, slots, row_mask, hyper):
+        bank = shardings.bank_state_constrain(cfg, mesh, bank)
+        opt = shardings.bank_state_constrain(cfg, mesh, opt)
+        new_bank, new_opt, metrics = fn(base, bank, opt, batch, slots,
+                                        row_mask, hyper)
+        return (shardings.bank_state_constrain(cfg, mesh, new_bank),
+                shardings.bank_state_constrain(cfg, mesh, new_opt), metrics)
+
+    return pinned
+
+
 # One compile cache per (model, adapter-config, step knobs) shared by every
-# engine instance; bank/opt (args 1, 2) are donated — the engine always
+# engine instance (``mesh`` joins the key — a sharded engine gets its own
+# jitted wrapper); bank/opt (args 1, 2) are donated — the engine always
 # rebinds them, so XLA updates the stacked job state in place.
 @functools.lru_cache(maxsize=None)
-def _jit_compact_train(cfg, acfg, microbatch, memory_optimized, remat):
-    return jax.jit(symbiosis.make_compact_train_step(
+def _jit_compact_train(cfg, acfg, microbatch, memory_optimized, remat,
+                       mesh=None):
+    return jax.jit(_pin_train(symbiosis.make_compact_train_step(
         cfg, acfg, microbatch=microbatch, memory_optimized=memory_optimized,
-        remat=remat), donate_argnums=(1, 2))
+        remat=remat), cfg, mesh), donate_argnums=(1, 2))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,10 +116,18 @@ class BankKey:
 
 class _Bank:
     """One bank's stacked state. ``slots[i]`` is the occupying job (or
-    None); params/opt leaves carry the matching leading [cap] axis."""
+    None); params/opt leaves carry the matching leading [cap] axis.
 
-    def __init__(self, key: BankKey):
+    ``reserve`` (from ``BankSpec.capacity``) pre-sizes the first
+    allocation: the stacked leaves come up at the next power of two >=
+    reserve instead of growing 1 -> 2 -> 4 under churn. Row buckets are
+    ``min(pow2(active), cap)`` either way, so a reserved bank runs the
+    SAME bucketed programs as a doubling-grown one — byte-identity is
+    unaffected; only the number of growth reallocations changes."""
+
+    def __init__(self, key: BankKey, reserve: int = 0):
         self.key = key
+        self.reserve = reserve
         self.params = None
         self.opt = None
         self.slots: List[Optional[FinetuneJob]] = []
@@ -107,9 +141,13 @@ class _Bank:
         ... by zero-padding the stacked leaves when the bank is full."""
         if None not in self.slots:
             if self.params is None:
-                self.params = jax.tree.map(lambda x: x[None], adapter)
-                self.opt = jax.tree.map(lambda x: x[None], opt_state)
-                self.slots = [None]
+                cap0 = 1
+                while cap0 < self.reserve:
+                    cap0 *= 2
+                zero = lambda x: jnp.zeros((cap0,) + x.shape, x.dtype)
+                self.params = jax.tree.map(zero, adapter)
+                self.opt = jax.tree.map(zero, opt_state)
+                self.slots = [None] * cap0
             else:
                 grow = self.cap                      # double
                 pad = lambda x: jnp.concatenate(
@@ -151,11 +189,62 @@ def job_hbm_bytes(cfg: ModelConfig, job: FinetuneJob, *,
 
 
 class FinetuneEngine:
-    """One frozen base continuously fine-tuned against by a churn of jobs."""
+    """One frozen base continuously fine-tuned against by a churn of jobs.
 
-    def __init__(self, cfg: ModelConfig, base_params, *,
+    CONSTRUCTION (``core.engine_spec.EngineSpec``)::
+
+        spec = EngineSpec(cfg=cfg, banks=(BankSpec("lora8", lora, 8),),
+                          finetune=FinetuneConfig(max_jobs=8), mesh=None)
+        engine = FinetuneEngine(spec, base_params)
+
+    Each ``BankSpec`` pre-reserves its capacity for jobs matching its
+    AdapterConfig (the stacked state comes up at the declared size instead
+    of doubling under churn — same bucketed step programs, fewer
+    reallocations). ``spec.mesh`` shards the engine: the frozen base by
+    ``launch.shardings.base_param_specs`` (or replicated with
+    ``spec.replicate_base``), bank params + optimizer state with their
+    bank-slot axis over the batch axes; ``mesh=None`` is byte-identical to
+    the single-device engine.
+
+    DEPRECATED: the positional form ``FinetuneEngine(cfg, base_params,
+    fcfg=..., router=...)`` still works but emits a ``DeprecationWarning``
+    — migrate to the EngineSpec form (see docs/sharding.md)."""
+
+    def __init__(self, spec, base_params, *,
                  fcfg: Optional[FinetuneConfig] = None, router=None):
+        if isinstance(spec, EngineSpec):
+            if fcfg is not None:
+                raise TypeError("pass the FinetuneConfig as EngineSpec."
+                                "finetune, not fcfg=")
+            self._setup(spec.cfg, base_params, fcfg=spec.finetune,
+                        router=router, mesh=spec.mesh,
+                        replicate_base=spec.replicate_base,
+                        reserve={b.acfg: b.capacity for b in spec.banks},
+                        spec=spec)
+        else:
+            warnings.warn(
+                "FinetuneEngine(cfg, base_params) is deprecated; construct "
+                "an EngineSpec and call FinetuneEngine(spec, base_params) "
+                "(docs/sharding.md)", DeprecationWarning, stacklevel=2)
+            self._setup(spec, base_params, fcfg=fcfg, router=router)
+
+    def _setup(self, cfg: ModelConfig, base_params, *,
+               fcfg: Optional[FinetuneConfig] = None, router=None,
+               mesh=None, replicate_base: bool = False,
+               reserve: Optional[Dict[AdapterConfig, int]] = None,
+               spec: Optional[EngineSpec] = None):
         self.cfg = cfg
+        self.spec = spec
+        self.mesh = mesh
+        self._replicate_base = replicate_base
+        self._reserve = reserve or {}
+        if mesh is not None:
+            from repro.launch import shardings
+            # idempotent + identity-preserving (see ServingEngine._setup):
+            # a base already placed by SymbiosisEngine.from_spec passes
+            # through untouched, keeping the shared-base identity check
+            base_params = shardings.shard_base_params(
+                cfg, mesh, base_params, replicate=replicate_base)
         self.base = base_params
         self.fcfg = fcfg or FinetuneConfig()
         self.router = router
@@ -219,9 +308,11 @@ class FinetuneEngine:
                 self.cfg, job.acfg, jax.random.PRNGKey(job.seed))
             opt = adamw_init(adapter)
         key = self._bank_key(job)
-        bank = self._banks.setdefault(key, _Bank(key))
+        bank = self._banks.setdefault(
+            key, _Bank(key, reserve=self._reserve.get(job.acfg, 0)))
         slot = bank.alloc(adapter, opt)
         bank.slots[slot] = job
+        self._place_bank(bank)
         self._slot_of[id(job)] = (key, slot)
         self._step_of[id(job)] = job.start_step
         self._placement[id(job)] = placement
@@ -232,6 +323,29 @@ class FinetuneEngine:
     # ------------------------------------------------------------------
     # stepping
     # ------------------------------------------------------------------
+    def _mesh_ctx(self):
+        """Ambient-mesh context for jitted dispatch (no-op single-device):
+        binds the engine mesh while tracing/running a step so the soft
+        constraints inside the hot path (``common.constrain``) resolve."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.launch.mesh import mesh_context
+        return mesh_context(self.mesh)
+
+    def _place_bank(self, bank: _Bank):
+        """``device_put`` a bank's stacked params/opt onto the mesh (slot
+        axis over the batch axes). Idempotent — re-run after every alloc so
+        growth reallocations land back on their specs."""
+        if self.mesh is None:
+            return
+        from repro.launch import shardings
+        bank.params = shardings.put_tree(
+            self.mesh, bank.params,
+            shardings.bank_state_specs(self.cfg, self.mesh, bank.params))
+        bank.opt = shardings.put_tree(
+            self.mesh, bank.opt,
+            shardings.bank_state_specs(self.cfg, self.mesh, bank.opt))
+
     def _row_bucket(self, n: int, cap: int) -> int:
         b = 1
         while b < n:
@@ -270,11 +384,13 @@ class FinetuneEngine:
         step_fn = _jit_compact_train(self.cfg, bank.key.acfg,
                                      bank.key.microbatch,
                                      self.fcfg.memory_optimized,
-                                     self.fcfg.remat)
-        bank.params, bank.opt, metrics = tracecount.dispatch(
-            self, "compact_train", (bank.key, R), step_fn,
-            self.base, bank.params, bank.opt, batch, jnp.asarray(slots),
-            jnp.asarray(mask), {k: jnp.asarray(v) for k, v in hyper.items()})
+                                     self.fcfg.remat, self.mesh)
+        with self._mesh_ctx():
+            bank.params, bank.opt, metrics = tracecount.dispatch(
+                self, "compact_train", (bank.key, R), step_fn,
+                self.base, bank.params, bank.opt, batch, jnp.asarray(slots),
+                jnp.asarray(mask),
+                {k: jnp.asarray(v) for k, v in hyper.items()})
         losses = np.asarray(metrics["loss"])
         for i, (_, job) in enumerate(rows):
             job.losses.append(float(losses[i]))

@@ -17,6 +17,7 @@ from typing import Optional
 
 import jax
 
+from repro.core.engine_spec import EngineSpec
 from repro.serving.engine import Request, ServingEngine
 from repro.training.engine import FinetuneEngine
 from repro.training.job import FinetuneJob
@@ -46,6 +47,36 @@ class SymbiosisEngine:
         self.train_every = max(1, train_every)
         self.stats = {"ticks": 0, "decode_ticks": 0, "train_ticks": 0,
                       "admission_stalls": 0}
+
+    @classmethod
+    def from_spec(cls, spec: EngineSpec, base_params, *,
+                  serving_banks=None, router=None, train_every: int = 1,
+                  policy: Optional[str] = None, **serving_kw):
+        """Build the full symbiotic service from ONE ``EngineSpec``: a
+        ``ServingEngine`` when ``spec.serve`` is set (over ``serving_banks``
+        — one client-stacked adapter tree per ``spec.banks`` entry), a
+        ``FinetuneEngine`` when ``spec.finetune`` is set, both closing over
+        the SAME base tree. Under ``spec.mesh`` the base is sharded ONCE
+        here; the engines' own placement is idempotent and identity-
+        preserving, so the shared-base leaf check still holds."""
+        if spec.mesh is not None:
+            from repro.launch import shardings
+            base_params = shardings.shard_base_params(
+                spec.cfg, spec.mesh, base_params,
+                replicate=spec.replicate_base)
+        serving = None
+        if spec.serve is not None:
+            if serving_banks is None:
+                raise ValueError("spec.serve is set: pass serving_banks= "
+                                 "(one adapter tree per spec bank)")
+            serving = ServingEngine(spec, base_params, serving_banks,
+                                    router=router, policy=policy,
+                                    **serving_kw)
+        finetune = None
+        if spec.finetune is not None:
+            finetune = FinetuneEngine(spec, base_params, router=router)
+        return cls(serving=serving, finetune=finetune,
+                   train_every=train_every)
 
     # ------------------------------------------------------------------
     def submit(self, item):
