@@ -61,8 +61,14 @@ def run_isolation(targets=None) -> list:
             base, bank, caches = t.args[0], t.args[1], t.args[2]
             extra = tuple(jax.numpy.asarray(e) for e in iso["extra"])
             n_blocks = -(-scfg.max_seq // scfg.page_block)
+            fn = t.fn
+            if iso.get("probe"):
+                # health-probed steps return (logits, finite, caches); the
+                # isolation checker's contract is (out, new_caches)
+                fn = (lambda f: lambda *a: (lambda o: (o[0], o[-1]))(f(*a)))(
+                    t.fn)
             results.append(taint.check_client_isolation(
-                t.fn, base, bank, caches, extra,
+                fn, base, bank, caches, extra,
                 clients=np.asarray(iso["extra"][1]), victim=iso["victim"],
                 pool_pages=2 * n_blocks,  # max_b * n_blocks per client
                 page_axes=page_axes, slot_axes=client_axes,

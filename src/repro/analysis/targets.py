@@ -160,15 +160,20 @@ def serving_targets(arch: str = DENSE) -> list:
                       jax.numpy.asarray(mask)),
                 donate_argnums=(2,), protected_leaves=pool, arch=arch))
 
+        # probe=True: the engine compiles its per-row finite health probe
+        # into the donated decode step (docs/robustness.md) — what gets
+        # analyzed must be THAT program, probe mask included
         out.append(StepTarget(
             name=f"compact_decode[{arch}-paged]",
-            fn=symbiosis.make_compact_decode_step(cfg, lora, scfg_p),
+            fn=symbiosis.make_compact_decode_step(cfg, lora, scfg_p,
+                                                  probe=True),
             args=(base, bank, caches, jax.numpy.asarray(dtoks),
                   jax.numpy.asarray(clients), jax.numpy.asarray(slots),
                   jax.numpy.asarray(rmask)),
             donate_argnums=(2,), protected_leaves=pool, arch=arch,
             isolation={"clients": clients, "victim": 1, "scfg": scfg_p,
-                       "extra": (dtoks, clients, slots, rmask)}))
+                       "extra": (dtoks, clients, slots, rmask),
+                       "probe": True}))
 
     # --- dense layout: the masked bank-wide decode path -----------------
     scfg_d = ServeConfig(n_clients=C, max_seq=32)
@@ -217,7 +222,7 @@ def serving_targets(arch: str = DENSE) -> list:
         out.append(StepTarget(
             name="compact_decode[mixed-lora+ia3+prefix]",
             fn=symbiosis.make_compact_decode_step(
-                cfg, (lora, ia3, prefix), scfg_p),
+                cfg, (lora, ia3, prefix), scfg_p, probe=True),
             args=(base, (bank_l, bank_i, bank_p), caches_m,
                   jax.numpy.asarray(dtoks), jax.numpy.asarray(mclients),
                   jax.numpy.asarray(slots), jax.numpy.asarray(methods),
@@ -241,6 +246,12 @@ def train_targets(arch: str = DENSE) -> list:
         "labels": jax.numpy.asarray(
             rng.integers(0, cfg.vocab, (R, Bt, St)).astype(np.int32)),
     }
+    if arch == ENCDEC:
+        # encoder frame embeddings [R, Bt, T_enc, d] — the frontend-stub
+        # leaf the data pipeline threads through enc-dec train batches
+        batch["frames"] = jax.numpy.asarray(
+            (rng.normal(size=(R, Bt, cfg.n_frontend_tokens, cfg.d_model))
+             * 0.02).astype(np.float32))
     slots = jax.numpy.asarray(np.array([0, 2], np.int32))
     rmask = jax.numpy.asarray(np.array([True, True]))
     hyper = {
@@ -283,9 +294,10 @@ def train_targets(arch: str = DENSE) -> list:
 def all_targets() -> list:
     """The CLI's standard bundle: serving across every family the engines
     serve (dense + hybrid/RWKV/enc-dec, ROADMAP carry-over), train on
-    dense plus MoE (checkpoint-structure contract) and the recurrent
-    families. Enc-dec/VLM train is excluded only because their batches
-    carry frontend extras the synthetic train harness here doesn't build."""
+    dense plus MoE (checkpoint-structure contract), the recurrent
+    families, and enc-dec (frames leaf threaded like the data pipeline's
+    frontend stub). VLM train stays excluded only because its img_embed
+    extras have no synthetic train harness here yet."""
     return (serving_targets(DENSE)
             + serving_targets(HYBRID)
             + serving_targets(RWKV)
@@ -293,4 +305,5 @@ def all_targets() -> list:
             + train_targets(DENSE)
             + train_targets(MOE)
             + train_targets(HYBRID)
-            + train_targets(RWKV))
+            + train_targets(RWKV)
+            + train_targets(ENCDEC))

@@ -1,3 +1,4 @@
-from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
-                                   save_job_state, restore_job_state,
-                                   latest_step)
+from repro.checkpoint.ckpt import (CheckpointCorruptError, save_checkpoint,
+                                   restore_checkpoint, save_job_state,
+                                   restore_job_state, latest_step,
+                                   save_engine_state, load_engine_state)

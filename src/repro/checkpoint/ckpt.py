@@ -1,7 +1,7 @@
 """Sharding-aware checkpointing (pure numpy + json manifest, no extra deps).
 
 Layout:  <dir>/step_<N>/
-           manifest.json   — tree structure, shapes, dtypes
+           manifest.json   — tree structure, shapes, dtypes, per-leaf CRC32s
            arr_<i>.npy     — one file per leaf
 
 The Symbiosis split shows up here too: the *base* checkpoint is written once
@@ -11,17 +11,38 @@ persistence story (clients own their state, the provider owns the base).
 
 Restore accepts an optional sharding tree: leaves are device_put with their
 target sharding so a restored state is immediately usable under pjit.
+
+Integrity (docs/robustness.md): every leaf's CRC32 is recorded in the
+manifest at save time and re-verified at restore — a truncated or bit-
+flipped array file raises ``CheckpointCorruptError`` instead of silently
+deserializing garbage into a tenant's optimizer state. Manifests are
+written via temp-file + atomic rename, and written LAST, so a crashed save
+never leaves a manifest pointing at half-written arrays.
+
+``save_engine_state`` / ``load_engine_state`` carry whole-ENGINE snapshots
+(serving bookkeeping, allocator state, train jobs — see
+``ServingEngine.engine_state``) as a single CRC-framed pickle blob per
+sequence number; ``load_engine_state`` scans newest → oldest and falls back
+to the last checkpoint whose frame validates.
 """
 from __future__ import annotations
 
 import json
 import os
+import pickle
 import re
-from typing import Any, Optional
+import struct
+import zlib
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity validation (CRC mismatch, truncated
+    file, or unreadable frame) — never silently deserialized."""
 
 
 def _flatten_with_paths(tree):
@@ -32,25 +53,36 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).tobytes())
+
+
 def save_checkpoint(directory: str, step: int, tree: Any, *, name: str = "state"):
     """Write one pytree. Returns the checkpoint path."""
     path = os.path.join(directory, f"step_{step:08d}", name)
     os.makedirs(path, exist_ok=True)
     paths, leaves, _ = _flatten_with_paths(tree)
-    manifest = {"paths": paths, "dtypes": [], "shapes": []}
+    manifest = {"paths": paths, "dtypes": [], "shapes": [], "crcs": []}
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         manifest["dtypes"].append(str(arr.dtype))
         manifest["shapes"].append(list(arr.shape))
+        manifest["crcs"].append(_leaf_crc(arr))
         np.save(os.path.join(path, f"arr_{i}.npy"), arr)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    # manifest last + atomic rename: a crash mid-save leaves arrays without
+    # a manifest (an incomplete dir restore never trusts), never a manifest
+    # pointing at half-written arrays
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
         json.dump(manifest, f)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
     return path
 
 
 def restore_checkpoint(directory: str, step: int, like: Any, *, name: str = "state",
                        shardings: Optional[Any] = None) -> Any:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    """Restore into the structure of ``like`` (shapes/dtypes validated,
+    per-leaf CRCs verified — corruption raises ``CheckpointCorruptError``)."""
     path = os.path.join(directory, f"step_{step:08d}", name)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -58,11 +90,21 @@ def restore_checkpoint(directory: str, step: int, like: Any, *, name: str = "sta
     if paths != manifest["paths"]:
         raise ValueError(f"checkpoint tree mismatch:\n got {manifest['paths'][:5]}...\n"
                          f" want {paths[:5]}...")
+    crcs = manifest.get("crcs")           # pre-CRC checkpoints stay readable
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                     else [None] * len(leaves))
     out = []
     for i, (leaf, shd) in enumerate(zip(leaves, shard_leaves)):
-        arr = np.load(os.path.join(path, f"arr_{i}.npy"))
+        fname = os.path.join(path, f"arr_{i}.npy")
+        try:
+            arr = np.load(fname)
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"leaf {paths[i]}: unreadable/truncated {fname}: {e}") from e
+        if crcs is not None and _leaf_crc(arr) != crcs[i]:
+            raise CheckpointCorruptError(
+                f"leaf {paths[i]}: CRC mismatch in {fname} — checkpoint is "
+                "corrupt (bit flip or partial write)")
         want_shape = tuple(leaf.shape)
         if arr.shape != want_shape:
             raise ValueError(f"leaf {paths[i]}: shape {arr.shape} != {want_shape}")
@@ -99,3 +141,77 @@ def latest_step(directory: str) -> Optional[int]:
     steps = [int(m.group(1)) for d in os.listdir(directory)
              if (m := re.match(r"step_(\d+)$", d))]
     return max(steps) if steps else None
+
+
+# ---------------------------------------------------------------------------
+# whole-engine snapshots: CRC-framed pickle blobs, newest-valid-wins restore
+
+_ENGINE_MAGIC = b"SYMB"
+_ENGINE_RE = re.compile(r"engine_(\d+)\.ckpt$")
+
+
+def save_engine_state(directory: str, state: Any, *, seq: Optional[int] = None) -> str:
+    """Write one whole-engine snapshot as ``engine_<seq:08d>.ckpt``.
+
+    Frame: 4-byte magic | u64 payload length | u32 CRC32 | pickle payload,
+    written to a temp file and ``os.replace``d into place — a crash mid-
+    write leaves only the previous snapshot visible. Returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    if seq is None:
+        seqs = [int(m.group(1)) for d in os.listdir(directory)
+                if (m := _ENGINE_RE.match(d))]
+        seq = (max(seqs) + 1) if seqs else 0
+    payload = pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+    frame = (_ENGINE_MAGIC + struct.pack("<QI", len(payload),
+                                         zlib.crc32(payload)) + payload)
+    path = os.path.join(directory, f"engine_{seq:08d}.ckpt")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(frame)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def _read_engine_frame(path: str) -> Any:
+    with open(path, "rb") as f:
+        blob = f.read()
+    if len(blob) < 16 or blob[:4] != _ENGINE_MAGIC:
+        raise CheckpointCorruptError(f"{path}: bad magic / truncated header")
+    length, crc = struct.unpack("<QI", blob[4:16])
+    payload = blob[16:]
+    if len(payload) != length:
+        raise CheckpointCorruptError(
+            f"{path}: truncated payload ({len(payload)} != {length} bytes)")
+    if zlib.crc32(payload) != crc:
+        raise CheckpointCorruptError(f"{path}: CRC mismatch — corrupt blob")
+    return pickle.loads(payload)
+
+
+def load_engine_state(directory: str, *, seq: Optional[int] = None) -> Tuple[int, Any]:
+    """Load the newest VALID engine snapshot (or the given ``seq``).
+
+    Returns ``(seq, state)``. Corrupt snapshots (bad magic, truncation,
+    CRC mismatch, unpicklable payload) are skipped with a fallback to the
+    next-newest — the last-good-wins contract; raises
+    ``CheckpointCorruptError`` only when no snapshot validates, and
+    ``FileNotFoundError`` when none exists at all."""
+    if not os.path.isdir(directory):
+        raise FileNotFoundError(f"no engine checkpoints under {directory}")
+    seqs = sorted((int(m.group(1)) for d in os.listdir(directory)
+                   if (m := _ENGINE_RE.match(d))), reverse=True)
+    if seq is not None:
+        seqs = [s for s in seqs if s == seq]
+    if not seqs:
+        raise FileNotFoundError(f"no engine checkpoints under {directory}")
+    errors = []
+    for s in seqs:
+        path = os.path.join(directory, f"engine_{s:08d}.ckpt")
+        try:
+            return s, _read_engine_frame(path)
+        except (CheckpointCorruptError, pickle.UnpicklingError, EOFError,
+                AttributeError, ImportError) as e:
+            errors.append(f"{path}: {e}")
+    raise CheckpointCorruptError(
+        "all engine checkpoints failed validation:\n  " + "\n  ".join(errors))

@@ -260,6 +260,15 @@ def make_compact_train_step(cfg: ModelConfig, acfg: AdapterConfig, *,
     the merged token batch hits the shared base matmuls as ONE XLA op
     (§3.7 base-executor batching) while each job's grads and updated
     adapter params stay bit-for-bit equal to its dedicated run.
+
+    HEALTH PROBE (docs/robustness.md): ``metrics["finite"]`` is a per-row
+    isfinite reduction over the row's loss and every grad leaf, computed
+    inside this jitted step (no extra dispatch, no pool copy), and the
+    scatter commits a row only when ``row_mask & finite`` — a row whose
+    step produced NaN/Inf keeps its LAST CLEAN adapter + optimizer state
+    in the bank, so the engine can retry the same step or quarantine the
+    job from a clean snapshot. When every row is finite the committed
+    state is bitwise what the ungated scatter produced.
     """
     row_grads = make_row_grad_fn(cfg, acfg, remat=remat,
                                  memory_optimized=memory_optimized,
@@ -280,6 +289,14 @@ def make_compact_train_step(cfg: ModelConfig, acfg: AdapterConfig, *,
             lambda x: x[slots], opt))
         batch = jax.tree.map(constrain_batch, batch)
         R = slots.shape[0]
+
+        def rows_finite(row_losses, row_grads):
+            # per-row non-finite probe: loss AND every grad leaf ([R, ...])
+            ok = jnp.isfinite(row_losses)
+            for g in jax.tree.leaves(row_grads):
+                ok = ok & jnp.isfinite(g).reshape(g.shape[0], -1).all(axis=1)
+            return ok
+
         if R == 1:
             # A one-row bucket skips the vmap entirely: vmap-of-1 still
             # traces a BATCHED program, and for MoE layers XLA fuses that
@@ -298,6 +315,7 @@ def make_compact_train_step(cfg: ModelConfig, acfg: AdapterConfig, *,
                                              hyper["gnorm"][0])
             new_p, new_o = lift(p1), lift(o1)
             losses, gnorms, lr = l1[None], gn1[None], lr1[None]
+            finite = rows_finite(losses, lift(g1))
         else:
             losses, grads = jax.vmap(row_grads, in_axes=(0, None, 0))(
                 params, base, batch)
@@ -305,14 +323,18 @@ def make_compact_train_step(cfg: ModelConfig, acfg: AdapterConfig, *,
                                hyper["total"])
             new_p, new_o, gnorms = jax.vmap(adamw_update_hyper)(
                 params, grads, ostate, lr, hyper["wd"], hyper["gnorm"])
-        drop = jnp.where(row_mask, slots, cap)       # cap is out of bounds
+            finite = rows_finite(losses, grads)
+        # commit only healthy rows: a non-finite row's slot keeps its last
+        # clean state (cap is out of bounds -> scatter-drop)
+        drop = jnp.where(row_mask & finite, slots, cap)
 
         def scatter(full, rows):
             return full.at[drop].set(rows.astype(full.dtype), mode="drop")
 
         new_bank = jax.tree.map(scatter, bank, new_p)
         new_opt = jax.tree.map(scatter, opt, new_o)
-        return new_bank, new_opt, {"loss": losses, "gnorm": gnorms, "lr": lr}
+        return new_bank, new_opt, {"loss": losses, "gnorm": gnorms, "lr": lr,
+                                   "finite": finite}
 
     return train_step
 
@@ -622,7 +644,7 @@ def stack_client_caches(cfg: ModelConfig, max_seq: int, per_client, **cache_kw):
 
 
 def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
-                             **ctx_kw):
+                             probe: bool = False, **ctx_kw):
     """Compute-proportional decode tick: run ONLY the actively decoding
     sequence slots, gathered across clients into one dense batch.
 
@@ -667,6 +689,13 @@ def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
       through the SGMV kernel (one adapter per row), IA3/prefix by per-row
       gathers. FLOPs and HBM traffic of base matmuls, adapter deltas and
       attention all scale with ``n_rows``, not with the bank size.
+    * ``probe=True`` (HEALTH PROBE, docs/robustness.md) additionally
+      returns a per-row ``finite`` [n_rows] bool — an isfinite reduction
+      over the row's logits, computed inside the same jitted step — as
+      ``(logits, finite, new caches)``. The logits and cache math are
+      bit-identical to the unprobed step; the serving engine uses the flag
+      to quarantine a request whose stream went non-finite without an
+      extra device round-trip.
     """
     mixed = isinstance(acfg, (tuple, list))
     acfgs = tuple(acfg) if mixed else None
@@ -736,8 +765,13 @@ def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
                                                 constrain_batch(tokens),
                                                 ctx, adapter, active=row_mask)
         new_inner = _scatter_caches(inner, new_compact, rows, row_mask, C, B)
-        return constrain_batch(logits), dict(new_inner,
-                                             block_tbl=caches["block_tbl"])
+        return _out(constrain_batch(logits),
+                    dict(new_inner, block_tbl=caches["block_tbl"]))
+
+    def _out(logits, new_caches):
+        if probe:
+            return logits, jnp.isfinite(logits).all(axis=-1), new_caches
+        return logits, new_caches
 
     def compact_mixed(base, banks, caches, tokens, clients, slots, methods,
                       locals_, row_mask):
@@ -754,8 +788,8 @@ def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
                                                 constrain_batch(tokens),
                                                 ctx, adapter, active=row_mask)
         new_inner = _scatter_caches(inner, new_compact, rows, row_mask, C, B)
-        return constrain_batch(logits), dict(new_inner,
-                                             block_tbl=caches["block_tbl"])
+        return _out(constrain_batch(logits),
+                    dict(new_inner, block_tbl=caches["block_tbl"]))
 
     return compact_mixed if mixed else compact
 

@@ -1,0 +1,123 @@
+"""Post-tick conservation audit (docs/robustness.md).
+
+Every resource the engines hand out — pool pages, cache slots, router HBM
+charges, bank slots — is conserved: what's free plus what's allocated must
+equal what existed, and the router's live counters must equal its initial
+capacities minus its outstanding placements. The audits here recompute
+those identities from scratch (no trust in the incremental counters) and
+return human-readable error strings; empty list == conserved.
+
+Run automatically after every tick when an engine is constructed with
+``debug=True``, in the fault/chaos tests, and callable any time via
+``check_conservation(engine)``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def serving_conservation(eng) -> List[str]:
+    """ServingEngine: page-pool partition, reservation accounting, slot
+    ownership and activity-state consistency, router ledger."""
+    errs: List[str] = []
+    if getattr(eng, "_paged", False):
+        P = eng._pool_pages
+        for c in range(eng.n_clients):
+            assigned = [p for (cc, s), pages in eng._slot_pages.items()
+                        if cc == c for p in pages]
+            have = sorted(eng._free_pages[c] + assigned)
+            own = list(range(c * P, (c + 1) * P))
+            if have != own:
+                lost = set(own) - set(have)
+                dup = [p for p in have if have.count(p) > 1]
+                errs.append(f"client {c}: page pool not conserved "
+                            f"(lost={sorted(lost)}, duplicated={sorted(set(dup))})")
+            if eng._reserved[c] < 0:
+                errs.append(f"client {c}: negative reservation "
+                            f"{eng._reserved[c]}")
+            if eng._reserved[c] > len(eng._free_pages[c]):
+                errs.append(f"client {c}: reserved {eng._reserved[c]} > "
+                            f"{len(eng._free_pages[c])} free pages (a running "
+                            "sequence could starve)")
+        if sum(eng._resv_of.values()) != sum(eng._reserved):
+            errs.append(f"reservation ledger {sum(eng._resv_of.values())} != "
+                        f"per-client reserved {sum(eng._reserved)}")
+    # slot ownership <-> per-request slot lists are inverse maps
+    owned = {}
+    for c in range(eng.n_clients):
+        for s in range(eng.max_b):
+            owner = eng._slot_owner[c][s]
+            if owner is not None:
+                owned.setdefault(id(owner), []).append((c, s))
+                if s not in eng._slots_of.get(id(owner), []):
+                    errs.append(f"slot ({c},{s}) owned by a request that "
+                                "doesn't list it in _slots_of")
+    for rid, slots in eng._slots_of.items():
+        if sorted(s for _, s in owned.get(rid, [])) != sorted(slots):
+            errs.append(f"request {rid}: _slots_of {slots} != owned slots "
+                        f"{owned.get(rid)}")
+    # activity state matches slot lists
+    for c in range(eng.n_clients):
+        mask_slots = sorted(int(s) for s in range(eng.max_b)
+                            if eng._active_mask[c, s])
+        if mask_slots != sorted(eng._active_slots[c]):
+            errs.append(f"client {c}: _active_mask {mask_slots} != "
+                        f"_active_slots {sorted(eng._active_slots[c])}")
+    # every in-flight request holds exactly one placement entry (may be None)
+    for r in eng._inflight:
+        if id(r) not in eng._placement:
+            errs.append(f"in-flight request of client {r.client_id} has no "
+                        "placement entry")
+    if eng.router is not None:
+        errs.extend(eng.router.conservation_errors())
+    return errs
+
+
+def finetune_conservation(eng) -> List[str]:
+    """FinetuneEngine: bank-slot <-> job map inversion, step bookkeeping,
+    per-job placement entries, router ledger."""
+    errs: List[str] = []
+    seen = {}
+    for key, bank in eng._banks.items():
+        for s, job in enumerate(bank.slots):
+            if job is None:
+                continue
+            seen[id(job)] = (key, s)
+            if eng._slot_of.get(id(job)) != (key, s):
+                errs.append(f"job {job.name or id(job)}: bank slot ({key}, "
+                            f"{s}) != _slot_of {eng._slot_of.get(id(job))}")
+            if id(job) not in eng._step_of:
+                errs.append(f"job {job.name or id(job)}: active without a "
+                            "step counter")
+    for jid, where in eng._slot_of.items():
+        if seen.get(jid) != where:
+            errs.append(f"_slot_of entry {where} has no backing bank slot")
+        if jid not in eng._placement:
+            errs.append(f"active job {jid} has no placement entry")
+    for jid in eng._placement:
+        if jid not in eng._slot_of:
+            errs.append(f"placement held for a job that is not active "
+                        f"(leaked charge): {jid}")
+    if eng.router is not None:
+        errs.extend(eng.router.conservation_errors())
+    return errs
+
+
+def check_conservation(engine) -> List[str]:
+    """Dispatch on engine type; accepts a SymbiosisEngine too (audits both
+    halves plus their shared router once)."""
+    from repro.serving.engine import ServingEngine
+    from repro.training.engine import FinetuneEngine
+
+    if isinstance(engine, ServingEngine):
+        return serving_conservation(engine)
+    if isinstance(engine, FinetuneEngine):
+        return finetune_conservation(engine)
+    errs = []
+    serving = getattr(engine, "serving", None)
+    finetune = getattr(engine, "finetune", None)
+    if serving is not None:
+        errs.extend(f"serving: {e}" for e in serving_conservation(serving))
+    if finetune is not None:
+        errs.extend(f"finetune: {e}" for e in finetune_conservation(finetune))
+    return errs

@@ -1,0 +1,445 @@
+"""Seeded chaos sweep: fault containment under load (docs/robustness.md).
+
+Drives real engines — fine-tuning, serving, and the symbiotic interleave —
+against a ``FaultPlan`` adversary and machine-checks the three robustness
+contracts on every scenario:
+
+* **Containment** — the engine never crashes; every survivor's committed
+  state (token streams, adapter params, optimizer state, loss history) is
+  BYTE-identical to a clean run of the same workload, and every victim's
+  committed prefix is byte-identical up to its last clean tick.
+* **Conservation** — after the dust settles, free + allocated pages equal
+  the pool, slot maps invert exactly, and the router's live counters equal
+  its initial capacities minus outstanding placements
+  (``faults.audit.check_conservation``).
+* **Recovery** — kill → restore from the newest VALID whole-engine
+  checkpoint resumes every tenant bitwise; corrupted checkpoint files
+  (bit-flip, truncation) are rejected by CRC and restore falls back to
+  the last good one.
+
+Run it::
+
+    PYTHONPATH=src python -m repro.faults.chaos [--seed N] [--report out.json]
+
+or via the ``chaos``-marked tests (``pytest -m chaos``). CI runs it as the
+``tier2-chaos`` job and uploads the JSON report artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _tiny_cfg():
+    # the tier-1 test shape: the bank-size-invariance contract (vmapped
+    # buckets == the unbatched R=1 program, bitwise) is pinned by the
+    # tier-1 suite at THIS shape — the chaos oracle comparisons lean on it
+    from repro.config import ModelConfig, DENSE
+    return ModelConfig(name="tiny-chaos", arch=DENSE, n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab=128, dtype="float32", param_dtype="float32")
+
+
+def _lora():
+    from repro.config import AdapterConfig
+    return AdapterConfig(method="lora", rank=4, alpha=8.0,
+                         targets=("q", "v"))
+
+
+def _trees_equal(a, b) -> bool:
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _check(errors: List[str], ok: bool, msg: str):
+    if not ok:
+        errors.append(msg)
+
+
+# ---------------------------------------------------------------------------
+# fine-tuning scenario
+# ---------------------------------------------------------------------------
+
+def _make_jobs(cfg, n_jobs: int, steps: int, schedules: Dict[int, Dict]):
+    """Every job gets a FaultyStream (survivors with empty schedules) so
+    the stacked batch trees agree across the bank."""
+    from repro.faults.plan import FaultyStream
+    from repro.training.job import FinetuneJob, make_job_stream
+    jobs = []
+    for i in range(n_jobs):
+        stream = FaultyStream(make_job_stream(cfg, 2, 16, seed=i),
+                              schedules.get(i, {}))
+        jobs.append(FinetuneJob(acfg=_lora(), data=stream, batch_size=2,
+                                seq_len=16, steps=steps, name=f"job{i}",
+                                seed=i))
+    return jobs
+
+
+def _run_finetune(cfg, base, jobs, *, fault_hook=None, debug=True):
+    from repro.config import FinetuneConfig
+    from repro.training.engine import FinetuneEngine
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=8),
+                             debug=debug, fault_hook=fault_hook)
+    for j in jobs:
+        eng.submit(j)
+    done = eng.run()
+    return eng, done
+
+
+def finetune_scenario(seed: int, *, n_jobs: int = 6, steps: int = 8) -> dict:
+    """Stream faults (NaN batches, transient errors, exhaustion) plus
+    injected admission allocation failures against a bank of jobs."""
+    import jax
+    from repro.core import symbiosis
+    from repro.faults.audit import check_conservation
+    from repro.faults.plan import AllocHook, FaultPlan
+
+    errors: List[str] = []
+    # kinds weighted toward transients: a fatal fault ends its victim's
+    # stream, so an all-fatal plan fires only a fraction of its events
+    plan = FaultPlan(seed, n_tenants=n_jobs, n_faults=5 * n_jobs,
+                     kinds=("stream_error", "stream_error", "nan_batch",
+                            "stream_error", "stream_end"),
+                     window=(0, steps - 1))
+    alloc_at = {1, 3, 5}                    # admission attempts that fault
+    base = symbiosis.init_system(cfg := _tiny_cfg(), _lora(), 1,
+                                 jax.random.PRNGKey(seed))[0]
+
+    clean_jobs = _make_jobs(cfg, n_jobs, steps, {})
+    _, clean_done = _run_finetune(cfg, base, clean_jobs)
+    clean = {j.name: j for j in clean_done}
+
+    schedules = {t: plan.stream_schedule(t) for t in range(n_jobs)}
+    hook = AllocHook(alloc_at)
+    jobs = _make_jobs(cfg, n_jobs, steps, schedules)
+    eng, done = _run_finetune(cfg, base, jobs, fault_hook=hook)
+
+    _check(errors, len(done) == n_jobs,
+           f"finetune: {len(done)}/{n_jobs} jobs retired")
+    for j in done:
+        ref = clean[j.name]
+        if j.status == "finished":
+            _check(errors, j.losses == ref.losses,
+                   f"finetune: {j.name} losses diverged from clean run")
+            _check(errors, _trees_equal(j.result.adapter, ref.result.adapter),
+                   f"finetune: {j.name} adapter not bitwise clean")
+            _check(errors, _trees_equal(j.result.opt, ref.result.opt),
+                   f"finetune: {j.name} optimizer state not bitwise clean")
+        else:
+            # fatal fault / exhausted retries: the committed prefix must
+            # still be bitwise clean (quarantine never commits a bad step)
+            _check(errors, bool(schedules.get(int(j.name[3:]))),
+                   f"finetune: {j.name} ended {j.status} with no fault "
+                   "scheduled")
+            _check(errors,
+                   j.losses == ref.losses[:len(j.losses)],
+                   f"finetune: {j.name} committed prefix diverged")
+    _check(errors, hook.fired > 0, "finetune: no alloc faults fired")
+    cons = check_conservation(eng)
+    _check(errors, not cons, f"finetune: conservation: {cons}")
+
+    fired_stream = sum(1 for t, sched in schedules.items()
+                       for call in sched
+                       if call < jobs[t].data.calls)
+    injected = {"stream": fired_stream, "alloc": hook.fired}
+    return {"scenario": "finetune", "injected": injected,
+            "total": fired_stream + hook.fired,
+            "engine_faults": eng.stats["faults"],
+            "quarantined": eng.stats["quarantined"],
+            "finished_early": eng.stats["finished_early"],
+            "errors": errors}
+
+
+# ---------------------------------------------------------------------------
+# serving scenario
+# ---------------------------------------------------------------------------
+
+def _poison_client(bank, client: int):
+    """NaN out one client's adapter rows (the nan_adapter fault kind)."""
+    import jax
+    import jax.numpy as jnp
+
+    def leaf(x):
+        return x.at[client].set(jnp.nan) if x.shape[0] > client else x
+
+    return jax.tree.map(leaf, bank)
+
+
+def serving_scenario(seed: int, *, n_clients: int = 4,
+                     reqs_per_client: int = 4) -> dict:
+    """Poisoned-adapter (non-finite logits) faults plus injected admission
+    allocation failures against a paged serving bank."""
+    import jax
+    import warnings
+    from repro.config import ServeConfig
+    from repro.core import symbiosis
+    from repro.faults.audit import check_conservation
+    from repro.faults.plan import AllocHook, FaultPlan
+    from repro.serving.engine import Request, ServingEngine
+
+    errors: List[str] = []
+    cfg = _tiny_cfg()
+    scfg = ServeConfig(n_clients=n_clients, max_seq=32, page_block=8,
+                       pool_pages=8)
+    base, bank, _ = symbiosis.init_system(cfg, _lora(), n_clients,
+                                          jax.random.PRNGKey(seed))
+    plan = FaultPlan(seed + 1, n_tenants=n_clients, n_faults=4,
+                     kinds=("nan_adapter",))
+    # cap the victim set so at least two survivors exercise containment
+    victims = set(sorted(plan.victims("nan_adapter"))[:max(1, n_clients - 2)])
+    rng = np.random.default_rng(seed)
+    prompts = [[rng.integers(1, cfg.vocab, (1, 6)).astype(np.int32)
+                for _ in range(reqs_per_client)] for _ in range(n_clients)]
+
+    def submit_all(eng):
+        for i in range(reqs_per_client):
+            for c in range(n_clients):
+                eng.submit(Request(client_id=c,
+                                   prompt=prompts[c][i].copy(),
+                                   max_new_tokens=4, arrive_tick=0))
+
+    def build(bank_tree, hook=None):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return ServingEngine(cfg, _lora(), scfg, base, bank_tree,
+                                 max_batch_per_client=2, debug=True,
+                                 fault_hook=hook)
+
+    clean_eng = build(bank)
+    submit_all(clean_eng)
+    clean = clean_eng.run()
+    # keyed by prompt bytes: a transient admission fault legally delays a
+    # retried request by a tick, which can reorder retirement WITHIN a
+    # client — the bitwise contract is per-request, not per-position
+    clean_of = {}
+    for r in clean:
+        clean_of.setdefault(r.client_id, {})[r.prompt.tobytes()] = \
+            r.generated.copy()
+
+    poisoned = bank
+    for v in victims:
+        poisoned = _poison_client(poisoned, v)
+    hook = AllocHook({1, 4, 7})
+    eng = build(poisoned, hook)
+    submit_all(eng)
+    done = eng.run()
+
+    got = {}
+    for r in done:
+        got.setdefault(r.client_id, []).append(r)
+    for c in range(n_clients):
+        rs = got.get(c, [])
+        _check(errors, len(rs) == reqs_per_client,
+               f"serving: client {c} retired {len(rs)}/{reqs_per_client}")
+        if c in victims:
+            _check(errors, all(r.status in ("quarantined", "rejected")
+                               for r in rs),
+                   f"serving: victim {c} produced non-quarantined requests")
+        else:
+            _check(errors, all(r.status == "ok" for r in rs),
+                   f"serving: survivor {c} has non-ok requests")
+            for r in rs:
+                ref = clean_of[c].get(r.prompt.tobytes())
+                _check(errors,
+                       ref is not None and np.array_equal(r.generated, ref),
+                       f"serving: survivor {c} stream diverged")
+    _check(errors, hook.fired > 0, "serving: no alloc faults fired")
+    _check(errors,
+           all(v in eng._quarantined_clients for v in victims),
+           "serving: victims not client-quarantined after repeated faults")
+    cons = check_conservation(eng)
+    _check(errors, not cons, f"serving: conservation: {cons}")
+
+    injected = {"nan_adapter": eng.stats["quarantined_requests"],
+                "alloc": hook.fired}
+    return {"scenario": "serving", "injected": injected,
+            "total": sum(injected.values()),
+            "engine_faults": eng.stats["faults"],
+            "quarantined_clients": sorted(eng._quarantined_clients),
+            "errors": errors}
+
+
+# ---------------------------------------------------------------------------
+# symbiotic interleave + kill/restore + checkpoint corruption
+# ---------------------------------------------------------------------------
+
+def symbiotic_scenario(seed: int, workdir: str, *, n_jobs: int = 4,
+                       n_clients: int = 2, steps: int = 8) -> dict:
+    """Faulted fine-tuning interleaved with serving over ONE shared base;
+    mid-run whole-engine checkpoint, kill, corrupt the newest checkpoint
+    on disk, restore (must fall back CRC-clean), and finish — the resumed
+    run must match the uninterrupted one bitwise."""
+    import jax
+    import warnings
+    from repro.config import FinetuneConfig, ServeConfig
+    from repro.core import symbiosis
+    from repro.checkpoint import load_engine_state
+    from repro.faults.audit import check_conservation
+    from repro.faults.plan import FaultPlan, corrupt_flip, corrupt_truncate
+    from repro.serving.engine import Request, ServingEngine
+    from repro.training.engine import FinetuneEngine
+    from repro.training.service import SymbiosisEngine
+
+    errors: List[str] = []
+    cfg = _tiny_cfg()
+    scfg = ServeConfig(n_clients=n_clients, max_seq=32, page_block=8,
+                       pool_pages=8)
+    base, bank, _ = symbiosis.init_system(cfg, _lora(), n_clients,
+                                          jax.random.PRNGKey(seed))
+    plan = FaultPlan(seed + 2, n_tenants=n_jobs, n_faults=3 * n_jobs,
+                     kinds=("stream_error", "stream_error", "nan_batch"),
+                     window=(0, steps - 1))
+    schedules = {t: plan.stream_schedule(t) for t in range(n_jobs)}
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab, (1, 6)).astype(np.int32)
+               for _ in range(n_clients)]
+
+    def build():
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            serving = ServingEngine(cfg, _lora(), scfg, base, bank,
+                                    max_batch_per_client=2, debug=True)
+            finetune = FinetuneEngine(cfg, base,
+                                      fcfg=FinetuneConfig(max_jobs=4),
+                                      debug=True)
+        return SymbiosisEngine(serving=serving, finetune=finetune)
+
+    def submit_all(sym):
+        for c in range(n_clients):
+            sym.submit(Request(client_id=c, prompt=prompts[c].copy(),
+                               max_new_tokens=6))
+        for j in _make_jobs(cfg, n_jobs, steps, schedules):
+            sym.submit(j)
+
+    def finish(sym):
+        reqs, jobs = sym.run()
+        fired = sum(1 for j in jobs for call in j.data.schedule
+                    if call < j.data.calls)
+        return ({r.client_id: r.generated.copy() for r in reqs},
+                {j.name: (j.status, list(j.losses),
+                          None if j.result is None else j.result.adapter)
+                 for j in jobs}, fired)
+
+    # uninterrupted faulted run (the resume oracle)
+    sym_a = build()
+    submit_all(sym_a)
+    for _ in range(2):
+        sym_a.tick()
+    ref_reqs, ref_jobs, fired_stream = finish(sym_a)
+
+    # interrupted twin: same 2 ticks, checkpoint twice, corrupt the newest
+    ckdir = os.path.join(workdir, "engine_ckpt")
+    sym_b = build()
+    submit_all(sym_b)
+    sym_b.tick()
+    sym_b.checkpoint(ckdir)                          # seq 0 (stale)
+    sym_b.tick()
+    seq = sym_b.checkpoint(ckdir)                    # seq 1 (resume point)
+    del sym_b                                        # "kill"
+
+    # a corrupted LATER checkpoint must be skipped by CRC, falling back to
+    # the newest valid one (seq 1)
+    import shutil
+    victim_new = os.path.join(ckdir, f"engine_{seq + 1:08d}.ckpt")
+    shutil.copy(os.path.join(ckdir, f"engine_{seq:08d}.ckpt"), victim_new)
+    corrupt_flip(victim_new, seed=seed)
+    victim_new2 = os.path.join(ckdir, f"engine_{seq + 2:08d}.ckpt")
+    shutil.copy(os.path.join(ckdir, f"engine_{seq:08d}.ckpt"), victim_new2)
+    corrupt_truncate(victim_new2)
+    got_seq, _ = load_engine_state(ckdir)
+    _check(errors, got_seq == seq,
+           f"symbiotic: restore picked seq {got_seq}, wanted last-good {seq}")
+
+    sym_c = build()
+    restored = sym_c.restore(ckdir)
+    _check(errors, restored == seq,
+           f"symbiotic: restored seq {restored} != {seq}")
+    got_reqs, got_jobs, _ = finish(sym_c)
+
+    _check(errors, set(got_reqs) == set(ref_reqs),
+           "symbiotic: restored run finished a different request set")
+    for c, gen in ref_reqs.items():
+        _check(errors, np.array_equal(got_reqs.get(c), gen),
+               f"symbiotic: client {c} stream diverged after restore")
+    _check(errors, set(got_jobs) == set(ref_jobs),
+           "symbiotic: restored run finished a different job set")
+    for name, (status, losses, adapter) in ref_jobs.items():
+        g_status, g_losses, g_adapter = got_jobs[name]
+        _check(errors, g_status == status and g_losses == losses,
+               f"symbiotic: job {name} trajectory diverged after restore")
+        if adapter is not None:
+            _check(errors, _trees_equal(g_adapter, adapter),
+                   f"symbiotic: job {name} adapter not bitwise after restore")
+    for eng in (sym_c.serving, sym_c.finetune):
+        cons = check_conservation(eng)
+        _check(errors, not cons, f"symbiotic: conservation: {cons}")
+
+    injected = {"stream": fired_stream, "ckpt_corrupt": 2}
+    return {"scenario": "symbiotic", "injected": injected,
+            "total": fired_stream + 2,
+            "restored_seq": restored, "errors": errors}
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+def run_sweep(seed: int = 0, workdir: Optional[str] = None,
+              min_faults: int = 30, min_kinds: int = 4) -> dict:
+    """Run every scenario and return the containment report (never raises
+    on contract violations — check ``report["ok"]`` / ``report["errors"]``,
+    which is what the chaos tests and CI assert on)."""
+    import tempfile
+    if workdir is None:
+        workdir = tempfile.mkdtemp(prefix="chaos_")
+    results = [finetune_scenario(seed),
+               serving_scenario(seed),
+               symbiotic_scenario(seed, workdir)]
+    kinds = set()
+    total = 0
+    errors: List[str] = []
+    for r in results:
+        total += r["total"]
+        kinds |= {k for k, n in r["injected"].items() if n > 0}
+        errors += r["errors"]
+    if total < min_faults:
+        errors.append(f"only {total} faults fired (need >= {min_faults})")
+    if len(kinds) < min_kinds:
+        errors.append(f"only {len(kinds)} fault kinds fired "
+                      f"(need >= {min_kinds})")
+    return {"seed": seed, "total_injected": total, "kinds": sorted(kinds),
+            "scenarios": results, "errors": errors, "ok": not errors}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="seeded fault-injection chaos sweep (docs/robustness.md)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--report", type=str, default=None,
+                    help="write the JSON containment report here")
+    args = ap.parse_args(argv)
+    report = run_sweep(args.seed)
+    out = json.dumps(report, indent=2, default=str)
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(out + "\n")
+    print(out)
+    if not report["ok"]:
+        print("\nchaos sweep FAILED:\n  " + "\n  ".join(report["errors"]))
+        return 1
+    print(f"\nchaos sweep OK: {report['total_injected']} faults across "
+          f"{len(report['kinds'])} kinds, all contained")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

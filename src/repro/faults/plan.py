@@ -1,0 +1,198 @@
+"""Deterministic fault injection (docs/robustness.md).
+
+``FaultPlan`` turns one integer seed into a reproducible schedule of
+injected faults — which tenant, which kind, when — so the chaos sweep
+(``repro.faults.chaos``) and the tier-1 fault tests assert containment
+against a bit-reproducible adversary. The fault kinds mirror what a real
+multi-tenant service sees:
+
+* ``nan_batch``      — a training batch whose loss mask is NaN: the row's
+                       loss AND every grad leaf go non-finite (the injected
+                       twin of a diverged tenant). Caught by the in-step
+                       finite probe; the row's commit is dropped.
+* ``nan_adapter``    — a serving client's adapter rows poisoned with NaN
+                       (applied by the driver, not the stream): its logits
+                       go non-finite; probe catches, request quarantined.
+* ``stream_error``   — a transient exception out of ``data.batch`` (an IO
+                       hiccup): retried with backoff from clean state.
+* ``stream_end``     — the stream runs dry mid-budget: the job completes
+                       as ``finished_early``.
+* ``alloc_fail``     — an allocation failure mid-admission (transient):
+                       the admission rolls back atomically and retries.
+* ``ckpt_corrupt``   — a checkpoint file bit-flipped or truncated on disk:
+                       CRC validation rejects it; restore falls back.
+
+``FaultyStream`` wraps a job's data stream and keys its schedule by CALL
+COUNT, not step: a retried step (same ``step`` value, next call) draws a
+clean batch — which is exactly what makes transient-fault recovery bitwise
+(the underlying stream is deterministic in ``step``). Clean calls emit a
+loss mask of 1.0, which is bit-identical to running with no mask at all
+(``models.losses.lm_loss`` fills ``mask=None`` with ones), so a wrapped
+survivor's trajectory equals its unwrapped oracle. Wrap EVERY job in a
+bank (survivors get empty schedules) so the stacked batch trees agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import Counter
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.faults.health import FatalFault, TransientFault
+
+KINDS = ("nan_batch", "nan_adapter", "stream_error", "stream_end",
+         "alloc_fail", "ckpt_corrupt")
+_STREAM_KINDS = ("nan_batch", "stream_error", "stream_end")
+
+
+class StreamError(TransientFault):
+    """Injected transient data-stream exception (IO hiccup shape)."""
+
+
+class StreamExhausted(Exception):
+    """The data stream ran dry before the job's step budget. Not a fault
+    classification — engines catch it explicitly and complete the job as
+    ``finished_early`` (checkpointed, charges released)."""
+
+
+class AllocationFault(TransientFault):
+    """Injected allocation failure mid-admission (pool/arena exhaustion
+    shape). Transient: the admission rolls back and the tenant retries."""
+
+
+class NonFiniteFault(FatalFault):
+    """A tenant's per-row loss/grads/logits went non-finite (the in-step
+    probe tripped). Fatal: the state that produced it is suspect."""
+
+
+class FaultyStream:
+    """Wrap a job data stream with a call-count-keyed fault schedule.
+
+    ``schedule`` maps call index -> kind ('nan_batch' | 'stream_error' |
+    'stream_end'). Picklable (part of the engine checkpoint): the call
+    counter rides along, so a restored engine replays the same schedule
+    position."""
+
+    def __init__(self, inner, schedule: Optional[Dict[int, str]] = None):
+        self.inner = inner
+        self.schedule = dict(schedule or {})
+        self.calls = 0
+
+    def batch(self, step: int):
+        import jax.numpy as jnp
+
+        call = self.calls
+        self.calls += 1
+        kind = self.schedule.get(call)
+        if kind == "stream_error":
+            raise StreamError(f"injected stream error (call {call})")
+        if kind == "stream_end":
+            raise StreamExhausted(f"injected stream end (call {call})")
+        b = dict(self.inner.batch(step))
+        fill = np.nan if kind == "nan_batch" else 1.0
+        b["mask"] = jnp.full(b["labels"].shape, fill, jnp.float32)
+        return b
+
+
+class AllocHook:
+    """Admission fault hook: raises ``AllocationFault`` on scheduled
+    admission-attempt indices. Install as ``engine.fault_hook``; the engine
+    calls it once per admission attempt BEFORE any state mutates beyond
+    the (rolled-back) router charge."""
+
+    def __init__(self, at: Iterable[int] = ()):
+        self.at = set(at)
+        self.calls = 0
+        self.fired = 0
+
+    def __call__(self, point: str, tenant) -> None:
+        call = self.calls
+        self.calls += 1
+        if call in self.at:
+            self.fired += 1
+            raise AllocationFault(
+                f"injected allocation failure ({point}, attempt {call})")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    kind: str       # one of KINDS
+    tenant: int     # scenario-local victim index
+    at: int         # stream call index / attempt index / tick it fires at
+
+
+class FaultPlan:
+    """Seeded, reproducible fault schedule over ``n_tenants`` tenants.
+
+    Kinds round-robin through ``kinds`` (guaranteed coverage of every
+    requested kind); victims and firing times are drawn from
+    ``np.random.default_rng(seed)``. The same (seed, n_tenants, n_faults,
+    kinds, window) always yields the same events."""
+
+    def __init__(self, seed: int, *, n_tenants: int, n_faults: int,
+                 kinds: Sequence[str] = KINDS,
+                 window: Tuple[int, int] = (1, 6)):
+        for k in kinds:
+            if k not in KINDS:
+                raise ValueError(f"unknown fault kind {k!r}")
+        rng = np.random.default_rng(seed)
+        events = []
+        for i in range(n_faults):
+            events.append(FaultEvent(
+                kind=kinds[i % len(kinds)],
+                tenant=int(rng.integers(n_tenants)),
+                at=int(rng.integers(window[0], window[1]))))
+        self.events: Tuple[FaultEvent, ...] = tuple(events)
+        self.seed = seed
+        self.n_tenants = n_tenants
+
+    def of_kind(self, *kinds: str) -> List[FaultEvent]:
+        return [e for e in self.events if e.kind in kinds]
+
+    def counts(self) -> Dict[str, int]:
+        return dict(Counter(e.kind for e in self.events))
+
+    def victims(self, *kinds: str) -> set:
+        return {e.tenant for e in (self.of_kind(*kinds) if kinds
+                                   else self.events)}
+
+    def stream_schedule(self, tenant: int) -> Dict[int, str]:
+        """Call-index -> kind map for ``FaultyStream`` (stream kinds only;
+        first event wins a contested call index)."""
+        sched: Dict[int, str] = {}
+        for e in self.events:
+            if e.tenant == tenant and e.kind in _STREAM_KINDS:
+                sched.setdefault(e.at, e.kind)
+        return sched
+
+    def alloc_schedule(self) -> set:
+        """Admission-attempt indices at which ``AllocHook`` fires."""
+        return {e.at for e in self.of_kind("alloc_fail")}
+
+
+# ---------------------------------------------------------------------------
+# on-disk corruption (for the ckpt_corrupt kind and the corruption tests)
+
+def corrupt_flip(path: str, *, seed: int = 0) -> int:
+    """XOR one seeded byte of ``path`` with 0xFF (always a real change).
+    Returns the flipped offset."""
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    if not data:
+        raise ValueError(f"{path} is empty")
+    off = int(np.random.default_rng(seed).integers(len(data)))
+    data[off] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    return off
+
+
+def corrupt_truncate(path: str, keep: Optional[int] = None) -> int:
+    """Truncate ``path`` (default: to half its size). Returns kept bytes."""
+    size = os.path.getsize(path)
+    keep = size // 2 if keep is None else keep
+    with open(path, "r+b") as f:
+        f.truncate(keep)
+    return keep

@@ -140,6 +140,8 @@ from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
 from repro.core.engine_spec import EngineSpec
 from repro.core.scheduler import ClientSpec, TickPolicy, simulate
+from repro.faults.health import HealthPolicy, HealthRecord, HealthState
+from repro.faults.plan import TransientFault
 
 
 def _pin_serving(fn, cfg, scfg, mesh, *, cache_arg=2):
@@ -149,7 +151,9 @@ def _pin_serving(fn, cfg, scfg, mesh, *, cache_arg=2):
     across ticks — no per-tick resharding copies, no executable churn —
     and the compiler is told the client/page partition survives the step,
     so compaction never round-trips through a replicated (base-sized)
-    layout. ``mesh=None`` returns ``fn`` untouched."""
+    layout. ``mesh=None`` returns ``fn`` untouched. Steps return
+    ``(*outputs, caches)`` — the probed compact decode carries an extra
+    per-row finite output between logits and caches."""
     if mesh is None:
         return fn
     from repro.launch import shardings
@@ -158,8 +162,9 @@ def _pin_serving(fn, cfg, scfg, mesh, *, cache_arg=2):
         a = list(a)
         a[cache_arg] = shardings.serving_cache_constrain(
             cfg, scfg, mesh, a[cache_arg])
-        out, caches = fn(*a)
-        return out, shardings.serving_cache_constrain(cfg, scfg, mesh, caches)
+        *out, caches = fn(*a)
+        return (*out,
+                shardings.serving_cache_constrain(cfg, scfg, mesh, caches))
 
     return pinned
 
@@ -195,9 +200,10 @@ def _jit_bank_prefill(cfg, acfg, scfg, mesh=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_compact_decode(cfg, acfg, scfg, mesh=None):
+def _jit_compact_decode(cfg, acfg, scfg, mesh=None, probe=False):
     return jax.jit(_pin_serving(
-        symbiosis.make_compact_decode_step(cfg, acfg, scfg), cfg, scfg, mesh),
+        symbiosis.make_compact_decode_step(cfg, acfg, scfg, probe=probe),
+        cfg, scfg, mesh),
                    donate_argnums=2)
 
 
@@ -234,6 +240,10 @@ class Request:
     generated: Optional[np.ndarray] = None  # [B, max_new_tokens]
     submit_t: float = 0.0
     finish_t: float = 0.0
+    # lifecycle (docs/robustness.md): ok | quarantined (non-finite logits —
+    # terminated, slots/pages/charges freed) | rejected (its client was
+    # quarantined before this request ran)
+    status: str = "ok"
 
 
 class ServingEngine:
@@ -273,6 +283,13 @@ class ServingEngine:
     client/page axes over the batch axes; ``mesh=None`` is byte-identical
     to today's single-device engine.
 
+    FAULT CONTAINMENT (docs/robustness.md): per-client health records,
+    a compiled-in finite probe on prefill and decode logits, quarantine of
+    faulty requests/clients with full page/charge release, transactional
+    (rollback-exact) admission, and whole-engine ``engine_state()`` /
+    ``load_engine_state()`` crash recovery — survivors stay bitwise
+    identical to a never-faulted run.
+
     DEPRECATED: the parallel-sequence positional form
     ``ServingEngine(cfg, acfg, scfg, base_params, client_bank, ...)``
     still works but emits a ``DeprecationWarning`` — migrate to the
@@ -294,7 +311,9 @@ class ServingEngine:
                         bank_prefill: bool = False,
                         max_inflight_per_client: Optional[int] = None,
                         compact_decode: Optional[bool] = None,
-                        ragged_prefill: Optional[bool] = None):
+                        ragged_prefill: Optional[bool] = None,
+                        health_policy: Optional[HealthPolicy] = None,
+                        debug: bool = False, fault_hook=None):
         if spec.serve is None:
             raise ValueError("ServingEngine needs EngineSpec.serve")
         if not spec.banks:
@@ -318,6 +337,8 @@ class ServingEngine:
                     max_inflight_per_client=max_inflight_per_client,
                     compact_decode=compact_decode,
                     ragged_prefill=ragged_prefill,
+                    health_policy=health_policy, debug=debug,
+                    fault_hook=fault_hook,
                     mesh=spec.mesh, replicate_base=spec.replicate_base,
                     bank_repl=tuple(b.placement == "replicated"
                                     for b in spec.banks),
@@ -330,6 +351,8 @@ class ServingEngine:
                max_inflight_per_client: Optional[int] = None,
                compact_decode: Optional[bool] = None,
                ragged_prefill: Optional[bool] = None,
+               health_policy: Optional[HealthPolicy] = None,
+               debug: bool = False, fault_hook=None,
                mesh=None, replicate_base: bool = False,
                bank_repl: tuple = (), spec: Optional[EngineSpec] = None):
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
@@ -459,8 +482,12 @@ class ServingEngine:
             raise ValueError("compact_decode requires the paged KV layout "
                              "(ServeConfig.page_block > 0)")
         self._compact = self._paged if compact_decode is None else compact_decode
+        # probe=True compiles the per-row finite reduction INTO the step
+        # (docs/robustness.md): non-finite decode logits surface on the
+        # host as a cheap [rows] bool without materializing [rows, V]
         self._compact_step = (_jit_compact_decode(
-            cfg, self.bank_cfgs if self._mixed else acfg, scfg, mesh)
+            cfg, self.bank_cfgs if self._mixed else acfg, scfg, mesh,
+            probe=True)
             if self._compact else None)
         # jit-bucketed row-batch sizes: 4, 8, ... capped at the bank's rows
         total_rows = self.n_clients * self.max_b
@@ -486,6 +513,18 @@ class ServingEngine:
         # path shapes, so post-growth compiles aren't read as recompiles
         self._trace_epoch = 0
         self._dead_clients: set = set()       # clients of retired banks
+        # fault containment (docs/robustness.md): per-client health records,
+        # the quarantine set (submit refuses; live requests terminated with
+        # their resources freed through the normal retire path), an optional
+        # deterministic fault hook for the chaos harness, and the per-tick
+        # flag that keeps an injected admission fault from tripping the
+        # "can never be admitted" stall detector
+        self.health_policy = health_policy or HealthPolicy()
+        self.debug = debug
+        self.fault_hook = fault_hook
+        self._client_health: Dict[int, HealthRecord] = {}
+        self._quarantined_clients: set = set()
+        self._admission_faulted = False
         self._queue: List[Request] = []
         # incremental service loop state: SymbiosisEngine interleaves
         # service_tick() with a FinetuneEngine's train ticks; run() is the
@@ -511,7 +550,9 @@ class ServingEngine:
         self.stats = {"ticks": 0, "decode_tokens": 0, "prefill_tokens": 0,
                       "batched_clients": 0, "admitted": 0, "prefill_calls": 0,
                       "peak_inflight": 0, "compact_rows": 0, "compact_padded": 0,
-                      "ragged_prefill_batches": 0}
+                      "ragged_prefill_batches": 0, "faults": 0,
+                      "quarantined_requests": 0, "rejected_requests": 0,
+                      "quarantined_clients": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -519,6 +560,9 @@ class ServingEngine:
         if req.client_id in self._dead_clients:
             raise ValueError(f"client {req.client_id} belongs to a retired "
                              "bank (see retire_bank)")
+        if req.client_id in self._quarantined_clients:
+            raise ValueError(f"client {req.client_id} is quarantined "
+                             "(docs/robustness.md)")
         B, S = req.prompt.shape
         assert B <= self.max_b, f"request rows {B} > {self.max_b} slots"
         assert req.max_new_tokens >= 1
@@ -562,6 +606,7 @@ class ServingEngine:
         if not waiting and not inflight:
             return False
         tick = self._tick
+        self._admission_faulted = False
         # -- admission (continuous except under lockstep's batch barrier);
         # slots/pages/router capacity are claimed per request, then all of
         # this tick's admissions prefill together (ragged where possible)
@@ -570,6 +615,8 @@ class ServingEngine:
         attempted = [r for r in waiting if r.arrive_tick <= tick]
         if self.policy.admit_now(len(inflight)):
             for req in attempted:
+                if req.client_id in self._quarantined_clients:
+                    continue          # swept to rejected by _quarantine_client
                 slots = self._try_admit(req)
                 if slots is not None:
                     waiting.remove(req)
@@ -593,9 +640,11 @@ class ServingEngine:
                 inflight.remove(req)
                 self._done.append(req)
 
-        if not inflight and attempted and not admitted_any and not serve:
+        if (not inflight and attempted and not admitted_any and not serve
+                and not self._admission_faulted):
             # nothing in flight to ever free capacity, and admission of
-            # every due request just failed -> stuck forever
+            # every due request just failed -> stuck forever (an injected
+            # transient admission fault is NOT stuck: the retry may succeed)
             raise RuntimeError(
                 f"{len(attempted)} request(s) can never be admitted "
                 f"(no free capacity and nothing in flight)")
@@ -603,6 +652,10 @@ class ServingEngine:
         if not inflight and waiting and all(r.arrive_tick > tick for r in waiting):
             tick = min(r.arrive_tick for r in waiting)           # idle skip
         self._tick = tick
+        if self.debug:
+            from repro.faults.audit import serving_conservation
+            errs = serving_conservation(self)
+            assert not errs, "; ".join(errs)
         return bool(waiting or inflight)
 
     def run(self) -> List[Request]:
@@ -652,17 +705,57 @@ class ServingEngine:
             except RuntimeError:
                 return None                      # stays queued until capacity frees
         slots = free[:B]
-        if self._paged:
-            for s in slots:
-                pages = [self._free_pages[c].pop()
-                         for _ in range(prompt_pages)]
-                self._tbl[c, s, :] = self._tbl_oob
-                self._tbl[c, s, :prompt_pages] = pages
-                self._slot_pages[(c, s)] = pages
-                self._wpos[c, s] = S
-            self._resv_of[id(req)] = (pages_per_row - prompt_pages) * B
-            self._reserved[c] += self._resv_of[id(req)]
-            self._tbl_dirty = True
+        # TRANSACTIONAL from here on: the router charge is already committed
+        # and the page pops below are multi-step — any failure mid-flight
+        # must restore every structure exactly or the request leaks its
+        # charge/pages forever (docs/robustness.md, admission-leak test)
+        done_slots: List[int] = []
+        tbl_rows = self._tbl[c, slots].copy() if self._paged else None
+        wpos_rows = self._wpos[c, slots].copy() if self._paged else None
+        try:
+            if self.fault_hook is not None:
+                self.fault_hook("serve_admit", c)
+            if self._paged:
+                for s in slots:
+                    pages: List[int] = []
+                    # register BEFORE popping so a mid-pop failure still
+                    # sees every page taken so far in the rollback sweep
+                    self._slot_pages[(c, s)] = pages
+                    done_slots.append(s)
+                    for _ in range(prompt_pages):
+                        pages.append(self._free_pages[c].pop())
+                    self._tbl[c, s, :] = self._tbl_oob
+                    self._tbl[c, s, :prompt_pages] = pages
+                    self._wpos[c, s] = S
+                self._resv_of[id(req)] = (pages_per_row - prompt_pages) * B
+                self._reserved[c] += self._resv_of[id(req)]
+                self._tbl_dirty = True
+        except BaseException as e:
+            # pop() draws from the END of the free list, so extending with
+            # each slot's pages reversed — newest slot first — restores the
+            # pool's exact order (a retried admission then draws the SAME
+            # pages, keeping the transient-recovery trajectory bitwise)
+            for s in reversed(done_slots):
+                self._free_pages[c].extend(
+                    reversed(self._slot_pages.pop((c, s))))
+            if self._paged:
+                self._tbl[c, slots] = tbl_rows
+                self._wpos[c, slots] = wpos_rows
+                resv = self._resv_of.pop(id(req), None)
+                if resv is not None:
+                    self._reserved[c] -= resv
+            if placement is not None:
+                self.router.release(placement)
+            if isinstance(e, TransientFault):
+                self._admission_faulted = True
+                self.stats["faults"] += 1
+                rec = self._client_health.setdefault(c, HealthRecord())
+                verdict = rec.trip(self._tick, f"admission: {e}",
+                                   self.health_policy)
+                if verdict == "quarantine":
+                    self._quarantine_client(c)
+                return None                      # stays queued; retried next tick
+            raise
         self._placement[id(req)] = placement
         for s in slots:
             self._slot_owner[c][s] = req
@@ -676,6 +769,23 @@ class ServingEngine:
         B = req.prompt.shape[0]
         sp = req.sampling or SamplingParams()
         self._rng[id(req)] = np.random.default_rng([sp.seed, c])
+        bad = ("client quarantined mid-tick"
+               if c in self._quarantined_clients else
+               "non-finite prefill logits"
+               if not np.isfinite(first_logits).all() else None)
+        if bad is not None:
+            # non-finite prefill logits (poisoned adapter / corrupt weights)
+            # quarantine the request before its first token ever samples —
+            # left stays 0 so this tick's retire loop frees slots, pages and
+            # the router charge through the one normal path
+            req.generated = np.zeros((B, req.max_new_tokens), np.int32)
+            req.status = "quarantined"
+            self._left[id(req)] = 0
+            self._slots_of[id(req)] = slots
+            self.stats["quarantined_requests"] += 1
+            if bad == "non-finite prefill logits":
+                self._fault_client(c, bad)
+            return
         first = self._sample(first_logits, req)
         req.generated = np.zeros((B, req.max_new_tokens), np.int32)
         req.generated[:, 0] = first
@@ -894,7 +1004,7 @@ class ServingEngine:
                     self._grow_slot_pages(req, req.client_id, s)
         self._sync_tbl()
         if self._compact:
-            lookup = self._decode_tick_compact(serve)
+            lookup, finite_of = self._decode_tick_compact(serve)
         else:
             # masked bank-wide step: compose this tick's mask from the
             # incrementally maintained activity mask (admit/retire updates)
@@ -909,8 +1019,14 @@ class ServingEngine:
                     jnp.asarray(self._last_tok), jnp.asarray(active))
             lg = np.asarray(logits)
             lookup = lambda c, slots: lg[c, slots]
+            finite_of = lambda c, slots: bool(np.isfinite(lg[c, slots]).all())
         for req in stepping:
+            if self._left[id(req)] <= 0:
+                continue              # its client was quarantined mid-tick
             c, slots = req.client_id, self._slots_of[id(req)]
+            if not finite_of(c, slots):
+                self._quarantine_request(req, "non-finite decode logits")
+                continue
             nxt = self._sample(lookup(c, slots), req)
             pos = req.max_new_tokens - self._left[id(req)]
             req.generated[:, pos] = nxt
@@ -927,7 +1043,9 @@ class ServingEngine:
         scatters cache writes back under the row mask (symbiosis.
         make_compact_decode_step); outputs are byte-identical to the masked
         bank-wide step — the bucket's padding rows are masked out of every
-        write and their logits never read."""
+        write and their logits never read. The step is compiled with
+        ``probe=True``, so a per-row finite flag rides along for free;
+        returns ``(logits lookup, finite lookup)`` for the sampler."""
         rows = [(c, s) for c in sorted(serve) for s in self._active_slots[c]]
         n = len(rows)
         nb = self._row_bucket(n)
@@ -941,7 +1059,7 @@ class ServingEngine:
             # per-row method ids + bank-local adapter indices: one tick
             # carries every bank's rows through the mixed compact step
             with self._mesh_ctx():
-                logits, self.caches = tracecount.dispatch(
+                logits, finite, self.caches = tracecount.dispatch(
                     self, "compact_decode", nb, self._compact_step,
                     self.base, tuple(self.banks), self.caches,
                     jnp.asarray(toks),
@@ -950,16 +1068,18 @@ class ServingEngine:
                     jnp.asarray(self._local_of[clients]), jnp.asarray(mask))
         else:
             with self._mesh_ctx():
-                logits, self.caches = tracecount.dispatch(
+                logits, finite, self.caches = tracecount.dispatch(
                     self, "compact_decode", nb, self._compact_step,
                     self.base, self.bank, self.caches, jnp.asarray(toks),
                     jnp.asarray(clients), jnp.asarray(slots),
                     jnp.asarray(mask))
         lg = np.asarray(logits)
+        fin = np.asarray(finite)
         row_of = {cs: i for i, cs in enumerate(rows)}
         self.stats["compact_rows"] += n
         self.stats["compact_padded"] += nb - n
-        return lambda c, ss: lg[[row_of[(c, s)] for s in ss]]
+        return (lambda c, ss: lg[[row_of[(c, s)] for s in ss]],
+                lambda c, ss: bool(fin[[row_of[(c, s)] for s in ss]].all()))
 
     def _sample(self, logits: np.ndarray, req: Request) -> np.ndarray:
         """logits [rows, V] -> next token per row, via the request's RNG."""
@@ -978,6 +1098,57 @@ class ServingEngine:
         p /= p.sum(axis=-1, keepdims=True)
         rng = self._rng[id(req)]
         return np.array([rng.choice(p.shape[-1], p=row) for row in p], np.int32)
+
+    # ------------------------------------------------------------------
+    # fault containment (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def _quarantine_request(self, req: Request, reason: str):
+        """Terminate a faulty in-flight request: remaining budget zeroed so
+        this tick's retire loop frees its slots, pages and router charge
+        through the one normal path. Repeated faults quarantine the client."""
+        req.status = "quarantined"
+        self._left[id(req)] = 0
+        self.stats["quarantined_requests"] += 1
+        self._fault_client(req.client_id, reason)
+
+    def _fault_client(self, c: int, reason: str):
+        """Record a fault against a client; quarantine the whole client once
+        ``HealthPolicy.client_quarantine_after`` faults accumulate."""
+        self.stats["faults"] += 1
+        rec = self._client_health.setdefault(c, HealthRecord())
+        rec.total_faults += 1
+        if rec.state is not HealthState.QUARANTINED:
+            rec.state = HealthState.SUSPECT
+            rec.history.append((self._tick, "suspect", reason))
+        if (c not in self._quarantined_clients and rec.total_faults
+                >= self.health_policy.client_quarantine_after):
+            self._quarantine_client(c)
+
+    def _quarantine_client(self, c: int):
+        """Fence a client off: refuse new submits, reject its queued/waiting
+        requests, and terminate its in-flight ones (resources free through
+        the normal retire path). Other clients' state is untouched — their
+        streams stay bitwise identical to a run without the faulty tenant."""
+        if c in self._quarantined_clients:
+            return
+        self._quarantined_clients.add(c)
+        self.stats["quarantined_clients"] += 1
+        rec = self._client_health.setdefault(c, HealthRecord())
+        if rec.state is not HealthState.QUARANTINED:
+            rec.state = HealthState.QUARANTINED
+            rec.history.append((self._tick, "quarantined",
+                                f"{rec.total_faults} fault(s)"))
+        for pool in (self._queue, self._waiting):
+            for r in [r for r in pool if r.client_id == c]:
+                pool.remove(r)
+                r.status = "rejected"
+                self._done.append(r)
+                self.stats["rejected_requests"] += 1
+        for r in self._inflight:
+            if r.client_id == c and self._left.get(id(r), 0) > 0:
+                r.status = "quarantined"
+                self._left[id(r)] = 0
+                self.stats["quarantined_requests"] += 1
 
     def _retire(self, req: Request):
         req.finish_t = time.perf_counter()
@@ -1007,6 +1178,140 @@ class ServingEngine:
         for p in self._bank_placements:
             self.router.release(p)
         self._bank_placements = []
+
+    # ------------------------------------------------------------------
+    # engine-level crash recovery (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def _req_record(self, req: Request) -> dict:
+        sp = req.sampling
+        return {"client_id": req.client_id,
+                "prompt": np.asarray(req.prompt),
+                "max_new_tokens": req.max_new_tokens,
+                "latency_sensitive": req.latency_sensitive,
+                "sampling": None if sp is None else dataclasses.asdict(sp),
+                "arrive_tick": req.arrive_tick,
+                "generated": (None if req.generated is None
+                              else np.asarray(req.generated)),
+                "status": req.status,
+                "left": self._left.get(id(req)),
+                "slots": self._slots_of.get(id(req)),
+                "resv": self._resv_of.get(id(req)) if self._paged else None,
+                "rng": (self._rng[id(req)].bit_generator.state
+                        if id(req) in self._rng else None),
+                "placed": id(req) in self._placement,
+                "placement": self._placement.get(id(req))}
+
+    def engine_state(self) -> dict:
+        """Whole-engine host+device snapshot for crash recovery: every
+        request (with its per-request RNG cursor, slot list, reservation
+        and router placement), the page allocator, caches/banks as numpy,
+        health records and stats. Restoring into a FRESHLY constructed
+        identical engine (``load_engine_state``) resumes every tenant
+        bitwise — asserted by the kill/restore tests. Single-device only;
+        dynamically admitted banks (``admit_bank``) are not captured."""
+        if self.mesh is not None:
+            raise NotImplementedError("engine_state: single-device engines "
+                                      "only (mesh=None)")
+        state = {
+            "inflight": [self._req_record(r) for r in self._inflight],
+            "waiting": [self._req_record(r) for r in self._waiting],
+            "queue": [self._req_record(r) for r in self._queue],
+            "done": [self._req_record(r) for r in self._done],
+            "caches": jax.tree.map(np.asarray, jax.device_get(self.caches)),
+            "banks": [jax.tree.map(np.asarray, jax.device_get(b))
+                      for b in self.banks],
+            "last_tok": self._last_tok.copy(),
+            "tick": self._tick,
+            "stats": dict(self.stats),
+            "client_health": dict(self._client_health),
+            "quarantined_clients": set(self._quarantined_clients),
+            "dead_clients": set(self._dead_clients),
+        }
+        if self._paged:
+            state["alloc"] = {
+                "free_pages": [list(x) for x in self._free_pages],
+                "reserved": list(self._reserved),
+                "wpos": self._wpos.copy(),
+                "tbl": self._tbl.copy(),
+                "slot_pages": {k: list(v)
+                               for k, v in self._slot_pages.items()},
+            }
+        return state
+
+    def load_engine_state(self, state: dict):
+        """Inverse of ``engine_state`` into a freshly constructed engine
+        (same spec/base/banks/router capacities as the original — router
+        placements are RE-COMMITTED here, so pass a fresh router, not the
+        crashed engine's live one)."""
+        if self.mesh is not None:
+            raise NotImplementedError("load_engine_state: single-device "
+                                      "engines only (mesh=None)")
+        if self._inflight or self._waiting or self._queue or self._done:
+            raise RuntimeError("load_engine_state needs a freshly "
+                               "constructed engine")
+        if len(state["banks"]) != len(self.banks):
+            raise RuntimeError(f"checkpoint holds {len(state['banks'])} "
+                               f"banks, engine has {len(self.banks)} "
+                               "(admit_bank growth is not captured)")
+
+        def mk(rec: dict) -> Request:
+            sp = rec["sampling"]
+            req = Request(client_id=rec["client_id"], prompt=rec["prompt"],
+                          max_new_tokens=rec["max_new_tokens"],
+                          latency_sensitive=rec["latency_sensitive"],
+                          sampling=(None if sp is None
+                                    else SamplingParams(**sp)),
+                          arrive_tick=rec["arrive_tick"])
+            req.generated = rec["generated"]
+            req.status = rec["status"]
+            if rec["left"] is not None:
+                self._left[id(req)] = rec["left"]
+            if rec["slots"] is not None:
+                slots = list(rec["slots"])
+                c = req.client_id
+                self._slots_of[id(req)] = slots
+                for s in slots:
+                    self._slot_owner[c][s] = req
+                if rec["left"]:
+                    self._active_mask[c, slots] = True
+                    self._active_slots[c] = sorted(self._active_slots[c]
+                                                   + slots)
+            if rec["rng"] is not None:
+                rng = np.random.default_rng()
+                rng.bit_generator.state = rec["rng"]
+                self._rng[id(req)] = rng
+            if self._paged and rec["resv"] is not None:
+                self._resv_of[id(req)] = rec["resv"]
+            if rec["placed"]:
+                p = rec["placement"]
+                self._placement[id(req)] = p
+                if p is not None and self.router is not None:
+                    self.router.commit(p)
+            return req
+
+        self._inflight = [mk(r) for r in state["inflight"]]
+        self._waiting = deque(mk(r) for r in state["waiting"])
+        self._queue = [mk(r) for r in state["queue"]]
+        self._done = [mk(r) for r in state["done"]]
+        self.caches = jax.tree.map(jnp.asarray, state["caches"])
+        self.banks = [jax.tree.map(jnp.asarray, b) for b in state["banks"]]
+        if not self._mixed:
+            self.bank = self.banks[0]
+        self._last_tok = state["last_tok"].copy()
+        self._tick = state["tick"]
+        self.stats.update(state["stats"])
+        self._client_health = dict(state["client_health"])
+        self._quarantined_clients = set(state["quarantined_clients"])
+        self._dead_clients = set(state["dead_clients"])
+        if self._paged:
+            a = state["alloc"]
+            self._free_pages = [list(x) for x in a["free_pages"]]
+            self._reserved = list(a["reserved"])
+            self._wpos = a["wpos"].copy()
+            self._tbl = a["tbl"].copy()
+            self._slot_pages = {tuple(k): list(v)
+                                for k, v in a["slot_pages"].items()}
+            self._tbl_dirty = True      # re-push the restored table mirror
 
     # ------------------------------------------------------------------
     # dynamic bank admission (ROADMAP carry-over: the registry is no
@@ -1064,7 +1369,7 @@ class ServingEngine:
             locs = np.arange(k, dtype=np.int32)
         if self._mixed:
             self._compact_step = _jit_compact_decode(
-                self.cfg, self.bank_cfgs, self.scfg, self.mesh)
+                self.cfg, self.bank_cfgs, self.scfg, self.mesh, probe=True)
         self._method_of = np.concatenate(
             [self._method_of, np.full((k,), m, np.int32)])
         self._local_of = np.concatenate([self._local_of, locs])

@@ -57,6 +57,13 @@ class PlacementRouter:
         self.cfg = cfg
         self.slots = {s.slot_id: s for s in slots}
         self.host_free = host_free_bytes
+        # conservation ledger (docs/robustness.md): initial capacities plus
+        # the identity list of outstanding placements. commit/release keep
+        # it in sync; conservation_errors() recomputes free capacity from
+        # scratch and reports any drift (a leaked or double-released charge).
+        self._initial = {s.slot_id: s.free_hbm for s in slots}
+        self._host_initial = host_free_bytes
+        self._committed: List[Placement] = []
 
     def route(self, context_len: int, batch: int = 1,
               *, latency_sensitive: bool = True, alloc_tokens: int = 0,
@@ -97,11 +104,13 @@ class PlacementRouter:
                 f"no placement fits {need/1e9:.1f} GB cache "
                 f"(context {context_len} × batch {batch})")
         best = min(candidates, key=lambda p: p.est_s_per_token)
-        self.commit(best)
-        # undo the latency penalty in the reported estimate
+        # undo the latency penalty in the reported estimate BEFORE commit:
+        # the ledger tracks placements by identity, so the object we commit
+        # must be the object the caller later release()s
         if best.mode == "hetero" and latency_sensitive:
             best = dataclasses.replace(best,
                                        est_s_per_token=best.est_s_per_token / 1.5)
+        self.commit(best)
         return best
 
     def route_train(self, nbytes: float, *,
@@ -148,8 +157,19 @@ class PlacementRouter:
             self.host_free -= p.cache_bytes
         else:
             self.host_free -= p.cache_bytes
+        self._committed.append(p)
 
     def release(self, p: Placement):
+        # identity scan, not list.remove: Placement is a value-comparing
+        # dataclass, and two tenants can hold field-equal placements
+        for i, q in enumerate(self._committed):
+            if q is p:
+                del self._committed[i]
+                break
+        else:
+            raise RuntimeError(
+                f"release of a placement that was never committed (or was "
+                f"already released): {p}")
         if p.slot_id is not None and p.mode in ("gpu", "train", "bank"):
             self.slots[p.slot_id].free_hbm += p.cache_bytes
         elif p.slot_id is not None:
@@ -157,3 +177,31 @@ class PlacementRouter:
             self.host_free += p.cache_bytes
         else:
             self.host_free += p.cache_bytes
+
+    def conservation_errors(self) -> List[str]:
+        """Recompute every capacity from the initial snapshot minus the
+        outstanding placements; any drift from the live counters means a
+        charge leaked (admission failed after commit) or was double-
+        released. Empty list == conserved."""
+        errs = []
+        want_slot = dict(self._initial)
+        want_host = self._host_initial
+        for p in self._committed:
+            if p.slot_id is not None and p.mode in ("gpu", "train", "bank"):
+                want_slot[p.slot_id] -= p.cache_bytes
+            elif p.slot_id is not None:
+                want_slot[p.slot_id] -= p.cache_bytes / self.cfg.n_layers
+                want_host -= p.cache_bytes
+            else:
+                want_host -= p.cache_bytes
+        for sid, s in self.slots.items():
+            if sid not in want_slot:        # slot added after construction
+                continue
+            if abs(s.free_hbm - want_slot[sid]) > 1.0:   # bytes; fp slack
+                errs.append(
+                    f"slot {sid}: free_hbm {s.free_hbm:.0f} != ledger "
+                    f"{want_slot[sid]:.0f} (leaked/double-released charge)")
+        if abs(self.host_free - want_host) > 1.0:
+            errs.append(f"host: free {self.host_free:.0f} != ledger "
+                        f"{want_host:.0f}")
+        return errs

@@ -67,6 +67,8 @@ from repro.config import AdapterConfig, FinetuneConfig, ModelConfig
 from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
 from repro.core.engine_spec import EngineSpec
+from repro.faults.health import HealthPolicy, HealthRecord, classify
+from repro.faults.plan import NonFiniteFault, StreamExhausted, TransientFault
 from repro.optim import adamw_init
 from repro.training.job import FinetuneJob, JobResult
 
@@ -206,12 +208,22 @@ class FinetuneEngine:
     bank-slot axis over the batch axes; ``mesh=None`` is byte-identical to
     the single-device engine.
 
+    FAULT CONTAINMENT (docs/robustness.md): per-job health records with
+    tick-count backoff, per-row finite probes fused into the compact step
+    (poisoned commits dropped in-scatter), quarantine-with-checkpoint,
+    transactional admission, ``finished_early`` stream exhaustion, and
+    whole-engine ``engine_state()`` / ``load_engine_state()`` crash
+    recovery — survivors stay bitwise identical to a never-faulted run.
+
     DEPRECATED: the positional form ``FinetuneEngine(cfg, base_params,
     fcfg=..., router=...)`` still works but emits a ``DeprecationWarning``
     — migrate to the EngineSpec form (see docs/sharding.md)."""
 
     def __init__(self, spec, base_params, *,
-                 fcfg: Optional[FinetuneConfig] = None, router=None):
+                 fcfg: Optional[FinetuneConfig] = None, router=None,
+                 health_policy: Optional[HealthPolicy] = None,
+                 quarantine_dir: Optional[str] = None, debug: bool = False,
+                 fault_hook=None):
         if isinstance(spec, EngineSpec):
             if fcfg is not None:
                 raise TypeError("pass the FinetuneConfig as EngineSpec."
@@ -220,19 +232,27 @@ class FinetuneEngine:
                         router=router, mesh=spec.mesh,
                         replicate_base=spec.replicate_base,
                         reserve={b.acfg: b.capacity for b in spec.banks},
-                        spec=spec)
+                        spec=spec, health_policy=health_policy,
+                        quarantine_dir=quarantine_dir, debug=debug,
+                        fault_hook=fault_hook)
         else:
             warnings.warn(
                 "FinetuneEngine(cfg, base_params) is deprecated; construct "
                 "an EngineSpec and call FinetuneEngine(spec, base_params) "
                 "(docs/sharding.md)", DeprecationWarning, stacklevel=2)
-            self._setup(spec, base_params, fcfg=fcfg, router=router)
+            self._setup(spec, base_params, fcfg=fcfg, router=router,
+                        health_policy=health_policy,
+                        quarantine_dir=quarantine_dir, debug=debug,
+                        fault_hook=fault_hook)
 
     def _setup(self, cfg: ModelConfig, base_params, *,
                fcfg: Optional[FinetuneConfig] = None, router=None,
                mesh=None, replicate_base: bool = False,
                reserve: Optional[Dict[AdapterConfig, int]] = None,
-               spec: Optional[EngineSpec] = None):
+               spec: Optional[EngineSpec] = None,
+               health_policy: Optional[HealthPolicy] = None,
+               quarantine_dir: Optional[str] = None, debug: bool = False,
+               fault_hook=None):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
@@ -254,9 +274,21 @@ class FinetuneEngine:
         self._step_of: Dict[int, int] = {}        # id(job) -> next global step
         self._placement: Dict[int, object] = {}
         self.finished: List[FinetuneJob] = []
+        # fault containment (docs/robustness.md): per-job health records
+        # live on the jobs themselves; quarantined jobs checkpoint to
+        # quarantine_dir (when set) before retiring; debug runs the
+        # conservation audit after every tick; fault_hook is the injection
+        # point for the chaos sweep (called per admission attempt)
+        self.health_policy = health_policy or HealthPolicy()
+        self.quarantine_dir = quarantine_dir
+        self.debug = debug
+        self.fault_hook = fault_hook
+        self._admission_faulted = False
         self.stats = {"train_ticks": 0, "train_steps": 0, "admitted": 0,
                       "retired": 0, "peak_jobs": 0, "compact_rows": 0,
-                      "compact_padded": 0, "train_tokens": 0}
+                      "compact_padded": 0, "train_tokens": 0,
+                      "faults": 0, "quarantined": 0, "finished_early": 0,
+                      "dropped_steps": 0}
 
     # ------------------------------------------------------------------
     def submit(self, job: FinetuneJob):
@@ -301,21 +333,43 @@ class FinetuneEngine:
                     latency_sensitive=job.latency_sensitive)
             except RuntimeError:
                 return False                      # queued until capacity frees
-        if job.init_adapter is not None:
-            adapter, opt = job.init_adapter, job.init_opt
-        else:
-            adapter = adapters_lib.init_adapter(
-                self.cfg, job.acfg, jax.random.PRNGKey(job.seed))
-            opt = adamw_init(adapter)
-        key = self._bank_key(job)
-        bank = self._banks.setdefault(
-            key, _Bank(key, reserve=self._reserve.get(job.acfg, 0)))
-        slot = bank.alloc(adapter, opt)
+        # TRANSACTIONAL from here: the router charge is the only committed
+        # state until the final bookkeeping block, and any failure below
+        # must release it (satellite: a mid-admission exception used to
+        # strand the charge forever)
+        try:
+            if self.fault_hook is not None:
+                self.fault_hook("train_admit", id(job))
+            if job.init_adapter is not None:
+                adapter, opt = job.init_adapter, job.init_opt
+            else:
+                adapter = adapters_lib.init_adapter(
+                    self.cfg, job.acfg, jax.random.PRNGKey(job.seed))
+                opt = adamw_init(adapter)
+            key = self._bank_key(job)
+            bank = self._banks.setdefault(
+                key, _Bank(key, reserve=self._reserve.get(job.acfg, 0)))
+            slot = bank.alloc(adapter, opt)
+        except BaseException as e:
+            if placement is not None:
+                self.router.release(placement)
+            if isinstance(e, TransientFault):
+                # injected/transient allocation failure: rolled back, job
+                # stays queued and retries after backoff
+                self._admission_faulted = True
+                self.stats["faults"] += 1
+                rec = job.health or HealthRecord()
+                job.health = rec
+                rec.trip(self.stats["train_ticks"],
+                         f"admission: {e}", self.health_policy)
+                return False
+            raise                                 # rolled back, not swallowed
         bank.slots[slot] = job
         self._place_bank(bank)
         self._slot_of[id(job)] = (key, slot)
         self._step_of[id(job)] = job.start_step
         self._placement[id(job)] = placement
+        job.status = "active"
         self.stats["admitted"] += 1
         self.stats["peak_jobs"] = max(self.stats["peak_jobs"], self.n_active)
         return True
@@ -353,7 +407,25 @@ class FinetuneEngine:
         return min(b, cap) if cap else b
 
     def _bank_tick(self, bank: _Bank):
-        rows = [(s, j) for s, j in enumerate(bank.slots) if j is not None]
+        tick = self.stats["train_ticks"]
+        # gather this tick's runnable rows: skip tenants backing off, and
+        # contain per-job data-stream failures HERE — one tenant's stream
+        # must never unwind the other tenants' tick
+        rows = []
+        for s, job in enumerate(bank.slots):
+            if job is None:
+                continue
+            if job.health is not None and not job.health.eligible(tick):
+                continue                           # SUSPECT: backoff gate
+            try:
+                b = job.data.batch(self._step_of[id(job)])
+            except StreamExhausted as e:
+                self._finish_early(job, str(e))
+                continue
+            except Exception as e:                 # noqa: BLE001 — classified
+                self._job_fault(job, tick, e)
+                continue
+            rows.append((s, job, b))
         if not rows:
             return
         R = self._row_bucket(len(rows), bank.cap)
@@ -363,7 +435,7 @@ class FinetuneEngine:
                  for k in ("lr", "warmup", "total", "wd", "gnorm")}
         hyper["step"] = np.zeros((R,), np.int32)
         batches = []
-        for i, (s, job) in enumerate(rows):
+        for i, (s, job, b) in enumerate(rows):
             slots[i], mask[i] = s, True
             step = self._step_of[id(job)]
             hyper["step"][i] = step
@@ -373,7 +445,7 @@ class FinetuneEngine:
             hyper["wd"][i] = job.weight_decay
             hyper["gnorm"][i] = job.max_grad_norm if job.max_grad_norm > 0 \
                 else np.inf
-            batches.append(job.data.batch(step))
+            batches.append(b)
         n = len(batches)
 
         def stack(*leaves):
@@ -392,13 +464,74 @@ class FinetuneEngine:
                 jnp.asarray(mask),
                 {k: jnp.asarray(v) for k, v in hyper.items()})
         losses = np.asarray(metrics["loss"])
-        for i, (_, job) in enumerate(rows):
-            job.losses.append(float(losses[i]))
-            self._step_of[id(job)] += 1
-        self.stats["train_steps"] += n
+        finite = np.asarray(metrics["finite"])
+        committed = 0
+        for i, (_, job, _b) in enumerate(rows):
+            if finite[i]:
+                job.losses.append(float(losses[i]))
+                self._step_of[id(job)] += 1
+                if job.health is not None:
+                    job.health.ok(tick)
+                committed += 1
+            else:
+                # the in-step probe tripped: the jitted scatter already
+                # dropped this row's commit (its slot kept the last clean
+                # params/opt state), so quarantine checkpoints CLEAN state
+                self.stats["dropped_steps"] += 1
+                self._job_fault(job, tick, NonFiniteFault(
+                    f"non-finite loss/grads at step {self._step_of[id(job)]}"))
+        self.stats["train_steps"] += committed
         self.stats["compact_rows"] += n
         self.stats["compact_padded"] += R - n
-        self.stats["train_tokens"] += n * bank.key.batch * bank.key.seq
+        self.stats["train_tokens"] += committed * bank.key.batch * bank.key.seq
+
+    # ------------------------------------------------------------------
+    # fault containment (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def _job_fault(self, job: FinetuneJob, tick: int, exc: BaseException):
+        """Classify one job's fault: transient -> SUSPECT with deterministic
+        tick-count backoff (state untouched, retried from the last clean
+        step); fatal or retries exhausted -> quarantine."""
+        self.stats["faults"] += 1
+        rec = job.health or HealthRecord()
+        job.health = rec
+        reason = f"{type(exc).__name__}: {exc}"
+        if classify(exc) == "transient":
+            if rec.trip(tick, reason, self.health_policy) == "retry":
+                return
+        else:
+            rec.quarantine(tick, reason)
+        self._quarantine_job(job)
+
+    def _quarantine_job(self, job: FinetuneJob):
+        """Fatal path: checkpoint the job's last CLEAN state (best effort —
+        a failing checkpoint write must not block retirement), then retire
+        it, releasing its bank slot and router charge."""
+        if self.quarantine_dir is not None:
+            try:
+                self.checkpoint_job(job, self.quarantine_dir)
+            except Exception as e:                 # noqa: BLE001
+                if job.health is not None:
+                    job.health.history.append(
+                        (self.stats["train_ticks"], "quarantined",
+                         f"quarantine checkpoint failed: {e}"))
+        self.stats["quarantined"] += 1
+        self.retire(job, status="quarantined")
+
+    def _finish_early(self, job: FinetuneJob, reason: str):
+        """Stream ran dry inside the step budget: complete the job as
+        ``finished_early`` — checkpointed (when a quarantine_dir is set),
+        charges released, result handed back — instead of raising out of
+        train_tick."""
+        if self.quarantine_dir is not None:
+            try:
+                self.checkpoint_job(job, self.quarantine_dir)
+            except Exception:                      # noqa: BLE001 — best effort
+                pass
+        if job.health is not None:
+            job.health.retire(self.stats["train_ticks"], reason)
+        self.stats["finished_early"] += 1
+        self.retire(job, status="finished_early")
 
     def trace_domain(self) -> tracecount.TraceDomain:
         """Legal jit keys (analysis 'buckets' pass): one compile per
@@ -415,13 +548,29 @@ class FinetuneEngine:
     def train_tick(self) -> bool:
         """Admit due jobs, run one optimizer step for every active job
         (one compact call per non-empty bank), retire exhausted jobs.
-        Returns True while jobs remain active or queued."""
+        Returns True while jobs remain active or queued. Per-job faults are
+        contained (health machine + quarantine, docs/robustness.md) — one
+        tenant's stream/NaN/allocation failure never unwinds the tick."""
+        tick = self.stats["train_ticks"]
+        self._admission_faulted = False
         admitted_any = False
+        backing_off = 0
         for job in list(self._queue):
+            if job.health is not None and not job.health.active:
+                # admission retries exhausted: reject without crashing
+                self._queue.remove(job)
+                job.status = "quarantined"
+                self.stats["quarantined"] += 1
+                self.finished.append(job)
+                continue
+            if job.health is not None and not job.health.eligible(tick):
+                backing_off += 1
+                continue                           # SUSPECT: retry later
             if self._try_admit(job):
                 self._queue.remove(job)
                 admitted_any = True
-        if self._queue and not self._slot_of and not admitted_any:
+        if self._queue and not self._slot_of and not admitted_any \
+                and not self._admission_faulted and not backing_off:
             raise RuntimeError(
                 f"{len(self._queue)} job(s) can never be admitted "
                 f"(no free capacity and nothing running)")
@@ -432,6 +581,13 @@ class FinetuneEngine:
                     for j in [self._banks[key].slots[s]]
                     if self._step_of[id(j)] >= j.steps]:
             self.retire(job)
+        if self.debug:
+            from repro.faults.audit import finetune_conservation
+            errs = finetune_conservation(self)
+            if errs:
+                raise AssertionError("conservation audit failed after "
+                                     f"train tick {tick}:\n  "
+                                     + "\n  ".join(errs))
         return self.pending()
 
     def run(self) -> List[FinetuneJob]:
@@ -451,10 +607,11 @@ class FinetuneEngine:
         adapter, opt = self._banks[key].read(slot)
         return adapter, opt, self._step_of[id(job)]
 
-    def retire(self, job: FinetuneJob) -> JobResult:
-        """Remove a job from service (explicit mid-run leave, or budget
-        exhaustion) and hand back its state. The bank slot frees for the
-        next admission; the stale row is never read again."""
+    def retire(self, job: FinetuneJob, *, status: str = "finished") -> JobResult:
+        """Remove a job from service (explicit mid-run leave, budget
+        exhaustion, ``finished_early`` stream end, or quarantine) and hand
+        back its state. The bank slot frees for the next admission; the
+        stale row is never read again; the router charge releases."""
         adapter, opt, step = self.job_state(job)
         key, slot = self._slot_of.pop(id(job))
         self._banks[key].slots[slot] = None
@@ -462,6 +619,9 @@ class FinetuneEngine:
         placement = self._placement.pop(id(job), None)
         if placement is not None:
             self.router.release(placement)
+        job.status = status
+        if job.health is not None and status != "quarantined":
+            job.health.retire(self.stats["train_ticks"], status)
         job.result = JobResult(adapter=adapter, opt=opt, step=step,
                                losses=list(job.losses))
         self.finished.append(job)
@@ -476,3 +636,84 @@ class FinetuneEngine:
         adapter, opt, step = self.job_state(job)
         return save_job_state(directory, step, adapter, opt,
                               name=job.name or "job")
+
+    # ------------------------------------------------------------------
+    # whole-engine crash recovery (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def _job_fields(self, job: FinetuneJob) -> dict:
+        return dict(acfg=job.acfg, data=job.data, batch_size=job.batch_size,
+                    seq_len=job.seq_len, steps=job.steps, lr=job.lr,
+                    weight_decay=job.weight_decay,
+                    warmup_steps=job.warmup_steps,
+                    total_steps=job.total_steps,
+                    max_grad_norm=job.max_grad_norm,
+                    microbatch=job.microbatch, name=job.name, seed=job.seed,
+                    latency_sensitive=job.latency_sensitive)
+
+    def engine_state(self) -> dict:
+        """A picklable snapshot of every tenant: active jobs carry their
+        device-side adapter/optimizer state (as numpy), their global step,
+        loss history, health record and data-stream object (streams pickle
+        with their cursor — see ``faults.FaultyStream``); queued and
+        finished jobs ride along. Feed to ``checkpoint.save_engine_state``;
+        restore into a FRESH engine (same spec + base) with
+        ``load_engine_state`` — every job resumes its uninterrupted
+        trajectory bitwise (the step counter drives both the schedule and
+        the deterministic stream). Single-device engines only."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "whole-engine checkpointing is single-device (mesh=None)")
+        tonp = lambda t: (None if t is None else
+                          jax.tree.map(np.asarray, jax.device_get(t)))
+        active = []
+        for jid, (key, slot) in self._slot_of.items():
+            job = self._banks[key].slots[slot]
+            adapter, opt, step = self.job_state(job)
+            active.append(dict(self._job_fields(job),
+                               init_adapter=tonp(adapter), init_opt=tonp(opt),
+                               start_step=step, losses=list(job.losses),
+                               status=job.status, health=job.health))
+        def _rec(job):
+            return dict(self._job_fields(job),
+                        init_adapter=tonp(job.init_adapter),
+                        init_opt=tonp(job.init_opt),
+                        start_step=job.start_step, losses=list(job.losses),
+                        status=job.status, health=job.health,
+                        result=None if job.result is None else dict(
+                            adapter=tonp(job.result.adapter),
+                            opt=tonp(job.result.opt), step=job.result.step,
+                            losses=list(job.result.losses)))
+        return {"active": active,
+                "queued": [_rec(j) for j in self._queue],
+                "finished": [_rec(j) for j in self.finished],
+                "stats": dict(self.stats)}
+
+    def load_engine_state(self, state: dict):
+        """Restore an ``engine_state()`` snapshot into this freshly
+        constructed engine. Active jobs re-enter the queue (in their
+        original admission order) as resume jobs — the next ``train_tick``
+        re-routes their charges and re-allocates bank slots; slot indices
+        may differ but the math is slot-invariant, so each tenant's
+        trajectory continues bit-for-bit."""
+        if self._slot_of or self._queue or self.finished:
+            raise RuntimeError("load_engine_state needs a freshly "
+                               "constructed engine (no jobs)")
+        def _job(rec):
+            r = dict(rec)
+            result = r.pop("result", None)
+            losses = r.pop("losses", [])
+            status = r.pop("status", "queued")
+            job = FinetuneJob(**{k: v for k, v in r.items() if k != "health"})
+            job.losses = list(losses)
+            job.status = "queued" if status == "active" else status
+            job.health = rec.get("health")
+            if result is not None:
+                job.result = JobResult(**result)
+            return job
+        for rec in state["active"]:
+            self._queue.append(_job(rec))
+        for rec in state["queued"]:
+            self._queue.append(_job(rec))
+        for rec in state["finished"]:
+            self.finished.append(_job(rec))
+        self.stats.update(state["stats"])

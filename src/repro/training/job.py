@@ -49,6 +49,11 @@ class FinetuneJob:
     # --- engine-filled ---
     losses: List[float] = dataclasses.field(default_factory=list)
     result: Optional["JobResult"] = None
+    # lifecycle: queued | active | finished | finished_early | quarantined
+    # (docs/robustness.md — finished_early = stream ran dry inside the step
+    # budget; quarantined = fatal fault, state checkpointed then retired)
+    status: str = "queued"
+    health: Optional[Any] = None          # faults.HealthRecord, engine-filled
 
     @property
     def schedule_total(self) -> int:
@@ -64,15 +69,22 @@ class JobResult:
     losses: List[float]
 
 
+class _ClientSliceStream:
+    """One client slice of a multi-client batch stream, leaves [B, ...].
+    Module-level (not a closure) so job streams pickle into the
+    whole-engine checkpoint (``checkpoint.save_engine_state``)."""
+
+    def __init__(self, stream):
+        self._stream = stream
+
+    def batch(self, step):
+        import jax
+        return jax.tree.map(lambda x: x[0], self._stream.batch(step))
+
+
 def make_job_stream(cfg: ModelConfig, batch: int, seq_len: int, *,
                     seed: int = 0):
     """Deterministic per-job data stream: one client slice of the synthetic
     Markov pipeline (plus the family's frontend extras), leaves [B, ...]."""
-    stream = make_client_batches(cfg, 1, batch, seq_len, seed=seed)
-
-    class _One:
-        def batch(self, step):
-            import jax
-            return jax.tree.map(lambda x: x[0], stream.batch(step))
-
-    return _One()
+    return _ClientSliceStream(make_client_batches(cfg, 1, batch, seq_len,
+                                                  seed=seed))

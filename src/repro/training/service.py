@@ -138,3 +138,43 @@ class SymbiosisEngine:
         if self.finetune is not None:
             done_jobs, self.finetune.finished = self.finetune.finished, []
         return done_reqs, done_jobs
+
+    # ------------------------------------------------------------------
+    # engine-level crash recovery (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def checkpoint(self, directory) -> int:
+        """Atomically write BOTH engines' whole-engine snapshots plus the
+        wrapper's own stats as one CRC-framed blob
+        (``checkpoint.save_engine_state``); returns the sequence number.
+        Kill → ``restore`` into freshly constructed engines resumes every
+        tenant bitwise (tests/test_faults.py)."""
+        import re
+        from repro.checkpoint import save_engine_state
+        state = {
+            "serving": (None if self.serving is None
+                        else self.serving.engine_state()),
+            "finetune": (None if self.finetune is None
+                         else self.finetune.engine_state()),
+            "stats": dict(self.stats),
+        }
+        path = save_engine_state(directory, state)
+        return int(re.search(r"engine_(\d+)\.ckpt$", path).group(1))
+
+    def restore(self, directory) -> int:
+        """Load the newest VALID engine snapshot (corrupt files are skipped
+        — last-good-wins) into this freshly constructed service; returns
+        the sequence number restored."""
+        from repro.checkpoint import load_engine_state
+        seq, state = load_engine_state(directory)
+        if state["serving"] is not None:
+            if self.serving is None:
+                raise RuntimeError("checkpoint holds serving state but no "
+                                   "serving engine is attached")
+            self.serving.load_engine_state(state["serving"])
+        if state["finetune"] is not None:
+            if self.finetune is None:
+                raise RuntimeError("checkpoint holds finetune state but no "
+                                   "finetune engine is attached")
+            self.finetune.load_engine_state(state["finetune"])
+        self.stats.update(state["stats"])
+        return seq

@@ -83,9 +83,11 @@ def test_poolcopy_mutation_arithmetic_fires(decode_target):
     t = decode_target
 
     def bad(*args):            # mutation: full-pool arithmetic after the tick
-        logits, caches = t.fn(*args)
-        return logits, jax.tree.map(lambda x: x * jnp.asarray(2, x.dtype),
-                                    caches)
+        # probed decode targets return (logits, finite, caches); the pool
+        # caches are always the LAST output either way
+        *out, caches = t.fn(*args)
+        return (*out, jax.tree.map(lambda x: x * jnp.asarray(2, x.dtype),
+                                   caches))
 
     jx = jax.make_jaxpr(bad)(*t.args)
     res = jaxpr_passes.check_pool_copies(jx, t.protected_sigs,

@@ -1,0 +1,18 @@
+"""The seeded chaos sweep as a pytest entry point (-m chaos).
+
+CI's tier2-chaos job runs this plus ``python -m repro.faults.chaos`` for
+the uploaded JSON report; the assertions here are the acceptance floor —
+the sweep itself asserts the containment/recovery contracts per scenario
+(see repro.faults.chaos and docs/robustness.md)."""
+import pytest
+
+from repro.faults import chaos
+
+pytestmark = pytest.mark.chaos
+
+
+def test_chaos_sweep(tmp_path):
+    report = chaos.run_sweep(seed=0, workdir=str(tmp_path))
+    assert report["ok"], report["errors"]
+    assert report["total_injected"] >= 30
+    assert len(report["kinds"]) >= 4

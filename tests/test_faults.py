@@ -1,0 +1,343 @@
+"""Fault containment (ISSUE 8, docs/robustness.md).
+
+The contract under test: a faulty tenant NEVER takes the engine or its
+neighbours down. Transient faults (stream hiccups, allocation failures)
+retry from clean state and recover bitwise; fatal faults (non-finite
+loss/grads/logits) quarantine the tenant — checkpoint, retire, release
+every page and router charge — while every survivor's committed state
+stays byte-identical to a run where the faulty tenant was never admitted
+after its last clean tick. Engine-level kill -> restore resumes every
+tenant bitwise; corrupt checkpoint files are rejected by CRC with
+last-good fallback. The deterministic adversary lives in ``repro.faults``;
+the larger seeded sweep is ``repro.faults.chaos`` (-m chaos)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, load_engine_state,
+                              save_engine_state)
+from repro.config import AdapterConfig, FinetuneConfig, ServeConfig
+from repro.core import symbiosis
+from repro.core.engine_spec import BankSpec, EngineSpec
+from repro.faults.audit import check_conservation
+from repro.faults.health import (HealthPolicy, HealthRecord, HealthState,
+                                 classify)
+from repro.faults.plan import (AllocationFault, AllocHook, FaultyStream,
+                               NonFiniteFault, StreamError,
+                               corrupt_flip, corrupt_truncate)
+from repro.serving.engine import Request, ServingEngine
+from repro.training import FinetuneEngine, FinetuneJob, make_job_stream
+from conftest import tiny
+
+LORA = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+
+
+def _serving(cfg, base, bank, **kw):
+    scfg = ServeConfig(n_clients=2, max_seq=32, page_block=8, pool_pages=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return ServingEngine(cfg, LORA, scfg, base, bank,
+                             max_batch_per_client=2, debug=True, **kw)
+
+
+def _prompts(cfg, per_client=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[rng.integers(1, cfg.vocab, (1, 6)).astype(np.int32)
+             for _ in range(per_client)] for _ in range(2)]
+
+
+def _submit_all(eng, prompts, max_new=3):
+    for c, ps in enumerate(prompts):
+        for p in ps:
+            eng.submit(Request(client_id=c, prompt=p.copy(),
+                               max_new_tokens=max_new, arrive_tick=0))
+
+
+def _job(cfg, i, schedule=None, steps=4):
+    stream = make_job_stream(cfg, 2, 8, seed=i)
+    if schedule is not None:
+        stream = FaultyStream(stream, schedule)
+    return FinetuneJob(acfg=LORA, data=stream, batch_size=2, seq_len=8,
+                       steps=steps, seed=i, name=f"j{i}")
+
+
+def _assert_same_result(a, b):
+    for x, y in zip(jax.tree.leaves((a.result.adapter, a.result.opt)),
+                    jax.tree.leaves((b.result.adapter, b.result.opt))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{a.name} state diverged")
+    np.testing.assert_array_equal(a.losses, b.losses,
+                                  err_msg=f"{a.name} losses diverged")
+
+
+# ---------------------------------------------------------------------------
+# health state machine (pure host state)
+# ---------------------------------------------------------------------------
+
+def test_health_state_machine_and_backoff():
+    pol = HealthPolicy(max_retries=3, backoff_base=1, max_backoff=4)
+    rec = HealthRecord()
+    assert rec.eligible(0)
+    assert rec.trip(0, "hiccup", pol) == "retry"
+    assert rec.state is HealthState.SUSPECT
+    assert not rec.eligible(0) and rec.eligible(1)      # 1-tick backoff
+    assert rec.trip(1, "hiccup", pol) == "retry"
+    assert rec.next_eligible_tick == 1 + 2              # doubled
+    assert rec.trip(3, "hiccup", pol) == "retry"
+    assert rec.next_eligible_tick == 3 + 4              # capped at max_backoff
+    assert rec.trip(7, "hiccup", pol) == "quarantine"   # retries exhausted
+    assert rec.state is HealthState.QUARANTINED and not rec.active
+    assert rec.total_faults == 4
+    assert pol.backoff(10) == 4                         # ceiling holds
+
+    rec2 = HealthRecord()
+    rec2.trip(0, "hiccup", pol)
+    rec2.ok(1)
+    assert rec2.state is HealthState.RESUMED and rec2.failures == 0
+    rec2.ok(2)
+    assert rec2.state is HealthState.HEALTHY
+
+
+def test_fault_classification():
+    assert classify(StreamError("x")) == "transient"
+    assert classify(AllocationFault("x")) == "transient"
+    assert classify(OSError("io hiccup")) == "transient"
+    assert classify(NonFiniteFault("nan")) == "fatal"
+    # programming errors must not retry-loop
+    assert classify(ValueError("bug")) == "fatal"
+
+
+# ---------------------------------------------------------------------------
+# transactional admission (the leak-regression tests)
+# ---------------------------------------------------------------------------
+
+def test_serving_admission_fault_rolls_back_no_page_leak(key):
+    """Regression: an allocation fault mid-admission must roll back pages,
+    table rows, reservations and the router charge atomically, then retry
+    the SAME admission from clean state — bitwise. Pre-transactional code
+    leaked the already-popped pages (and had no injection hook at all)."""
+    cfg = tiny()
+    base, bank, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    prompts = _prompts(cfg)
+    hook = AllocHook({0})
+    eng = _serving(cfg, base, bank, fault_hook=hook)
+    clean = _serving(cfg, base, bank)
+    _submit_all(eng, prompts)
+    _submit_all(clean, prompts)
+    done, ref = eng.run(), clean.run()
+    assert hook.fired == 1
+    assert eng.stats["faults"] >= 1
+    assert not check_conservation(eng)
+    ref_of = {r.prompt.tobytes(): r.generated for r in ref}
+    assert len(done) == len(ref)
+    for r in done:
+        assert r.status == "ok"
+        np.testing.assert_array_equal(r.generated, ref_of[r.prompt.tobytes()])
+
+
+def test_train_admission_fault_retries_bitwise(key):
+    cfg = tiny()
+    base, _, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    hook = AllocHook({0})
+    # spec form: BankSpec.capacity pre-reserves the stacked bank, so the
+    # fault-delayed second admission doesn't grow it mid-run (growth would
+    # re-trace the R=1 bucket at the new capacity)
+    spec = EngineSpec(cfg=cfg, banks=(BankSpec("jobs", LORA, capacity=2),),
+                      finetune=FinetuneConfig(max_jobs=2))
+    eng = FinetuneEngine(spec, base, debug=True, fault_hook=hook)
+    clean = FinetuneEngine(spec, base, debug=True)
+    for i in range(2):
+        eng.submit(_job(cfg, i))
+        clean.submit(_job(cfg, i))
+    done = {j.name: j for j in eng.run()}
+    ref = {j.name: j for j in clean.run()}
+    assert hook.fired == 1
+    assert not check_conservation(eng)
+    assert set(done) == set(ref)
+    for name, j in done.items():
+        assert j.status == "finished"
+        _assert_same_result(ref[name], j)
+
+
+# ---------------------------------------------------------------------------
+# stream faults against the fine-tuning service
+# ---------------------------------------------------------------------------
+
+def test_stream_exhaustion_finished_early(key):
+    cfg = tiny()
+    base, _, _ = symbiosis.init_system(cfg, LORA, 1, key)
+    eng = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=1),
+                         debug=True)
+    j = _job(cfg, 0, schedule={2: "stream_end"}, steps=5)
+    eng.submit(j)
+    done = eng.run()
+    assert done and done[0] is j
+    assert j.status == "finished_early"
+    assert len(j.losses) == 2                  # steps 0 and 1 committed
+    assert j.result is not None and j.result.step == 2
+    assert eng.stats["finished_early"] == 1
+    assert not check_conservation(eng)
+
+
+def test_stream_error_transient_recovery_bitwise(key):
+    """A transient stream error backs the job off one tick; the retry draws
+    the SAME step's batch from the clean cursor, so the finished job is
+    bit-identical to the never-faulted run."""
+    cfg = tiny()
+    base, _, _ = symbiosis.init_system(cfg, LORA, 1, key)
+    out = {}
+    for tag, sched in (("clean", {}), ("faulted", {1: "stream_error"})):
+        eng = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=1),
+                             debug=True)
+        j = _job(cfg, 0, schedule=sched, steps=3)
+        eng.submit(j)
+        eng.run()
+        assert j.status == "finished"
+        out[tag] = j
+    assert out["faulted"].health.total_faults == 1
+    assert any(s == HealthState.SUSPECT.value
+               for _, s, _ in out["faulted"].health.history)
+    _assert_same_result(out["clean"], out["faulted"])
+
+
+def test_nan_batch_quarantines_victim_survivor_bitwise(key):
+    """Non-finite loss/grads (caught by the in-step probe) are fatal: the
+    poisoned commit is dropped, the victim quarantines, and the survivor's
+    full trajectory stays bitwise equal to the clean two-job run."""
+    cfg = tiny()
+    base, _, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    runs = {}
+    for tag, sched0 in (("clean", {}), ("faulted", {1: "nan_batch"})):
+        eng = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=2),
+                             debug=True)
+        jobs = [_job(cfg, 0, schedule=sched0), _job(cfg, 1, schedule={})]
+        for j in jobs:
+            eng.submit(j)
+        eng.run()
+        assert not check_conservation(eng)
+        runs[tag] = jobs
+    victim, survivor = runs["faulted"]
+    clean_victim, clean_survivor = runs["clean"]
+    assert victim.status == "quarantined"
+    assert victim.health.state is HealthState.QUARANTINED
+    # only the pre-fault prefix ever committed, and it committed bitwise
+    np.testing.assert_array_equal(victim.losses, clean_victim.losses[:1])
+    assert survivor.status == "finished"
+    _assert_same_result(clean_survivor, survivor)
+
+
+# ---------------------------------------------------------------------------
+# serving quarantine
+# ---------------------------------------------------------------------------
+
+def test_nan_adapter_quarantine_and_client_ban(key):
+    """A poisoned adapter produces non-finite logits: each of its requests
+    is quarantined (slots/pages/charges freed), the client is refused
+    admission after repeated faults, and the OTHER client's token streams
+    stay bitwise equal to the clean run."""
+    cfg = tiny()
+    base, bank, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    bad = jax.tree.map(lambda p: p.at[0].set(jnp.nan), bank)
+    prompts = _prompts(cfg, per_client=3)
+    clean_eng = _serving(cfg, base, bank)
+    eng = _serving(cfg, base, bad)
+    _submit_all(clean_eng, prompts)
+    _submit_all(eng, prompts)
+    ref = {r.prompt.tobytes(): r.generated for r in clean_eng.run()
+           if r.client_id == 1}
+    done = eng.run()
+    mine = [r for r in done if r.client_id == 0]
+    other = [r for r in done if r.client_id == 1]
+    assert len(mine) == 3 and len(other) == 3
+    assert all(r.status in ("quarantined", "rejected") for r in mine)
+    assert any(r.status == "rejected" for r in mine)    # banned mid-run
+    assert 0 in eng._quarantined_clients
+    assert eng.stats["quarantined_clients"] == 1
+    for r in other:
+        assert r.status == "ok"
+        np.testing.assert_array_equal(r.generated, ref[r.prompt.tobytes()])
+    assert not check_conservation(eng)
+
+
+def test_conservation_audit_detects_page_leak(key):
+    """The audit is not vacuous: a deliberately leaked page is reported."""
+    cfg = tiny()
+    base, bank, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    eng = _serving(cfg, base, bank)
+    eng._free_pages[0].pop()
+    errs = check_conservation(eng)
+    assert errs and "not conserved" in errs[0]
+
+
+# ---------------------------------------------------------------------------
+# engine-level crash recovery
+# ---------------------------------------------------------------------------
+
+def test_engine_checkpoint_crc_last_good_fallback(tmp_path):
+    d = str(tmp_path)
+    p0 = save_engine_state(d, {"v": 0})
+    p1 = save_engine_state(d, {"v": 1})
+    assert load_engine_state(d) == (1, {"v": 1})
+    corrupt_flip(p1, seed=3)
+    assert load_engine_state(d) == (0, {"v": 0})        # CRC rejects, falls back
+    p2 = save_engine_state(d, {"v": 2})
+    corrupt_truncate(p2)
+    assert load_engine_state(d) == (0, {"v": 0})        # truncation rejected too
+    corrupt_truncate(p0, keep=4)
+    with pytest.raises(CheckpointCorruptError):
+        load_engine_state(d)                            # nothing valid left
+
+
+def test_finetune_kill_restore_bitwise(key):
+    cfg = tiny()
+    base, _, _ = symbiosis.init_system(cfg, LORA, 2, key)
+
+    ref_eng = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=2),
+                             debug=True)
+    for i in range(2):
+        ref_eng.submit(_job(cfg, i))
+    ref = {j.name: j for j in ref_eng.run()}
+
+    eng = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=2),
+                         debug=True)
+    for i in range(2):
+        eng.submit(_job(cfg, i))
+    eng.train_tick()
+    eng.train_tick()
+    state = eng.engine_state()                          # ... kill ...
+    eng2 = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=2),
+                          debug=True)
+    eng2.load_engine_state(state)
+    done = {j.name: j for j in eng2.run()}
+    assert set(done) == set(ref)
+    for name in ref:
+        assert done[name].status == "finished"
+        _assert_same_result(ref[name], done[name])
+    assert not check_conservation(eng2)
+
+
+def test_serving_kill_restore_bitwise(key):
+    cfg = tiny()
+    base, bank, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    prompts = _prompts(cfg)
+
+    ref_eng = _serving(cfg, base, bank)
+    _submit_all(ref_eng, prompts, max_new=4)
+    ref = {r.prompt.tobytes(): r.generated for r in ref_eng.run()}
+
+    eng = _serving(cfg, base, bank)
+    _submit_all(eng, prompts, max_new=4)
+    eng.service_tick()
+    eng.service_tick()
+    state = eng.engine_state()                          # ... kill ...
+    eng2 = _serving(cfg, base, bank)
+    eng2.load_engine_state(state)
+    done = eng2.run()
+    assert len(done) == len(ref)
+    for r in done:
+        assert r.status == "ok"
+        np.testing.assert_array_equal(r.generated, ref[r.prompt.tobytes()])
+    assert not check_conservation(eng2)
