@@ -33,6 +33,11 @@ from benchmarks.common import timeit, emit
 
 ACFG = AdapterConfig(method="lora", rank=8, targets=("q", "k", "v", "o"))
 
+#: the Obs object behind the newest ``serving_latency`` section —
+#: ``benchmarks.run`` exports it as BENCH_obs.jsonl / BENCH_obs.prom next
+#: to the --json document (docs/observability.md)
+LAST_LATENCY_OBS = None
+
 
 def assert_byte_identical(a_done, b_done, label: str):
     """ONE oracle-diff path for every bench section's exactness claim:
@@ -104,6 +109,53 @@ def run_serving(quick: bool = False):
          "ticks": "-", "prefill_tokens": "-"},
     ]
     return emit("sec37_serving_continuous_batching", rows)
+
+
+def run_latency(quick: bool = False):
+    """ISSUE 9 acceptance: tail latency under a mixed open-loop load.
+
+    A paged engine with telemetry attached serves a request mix of short
+    and long prompts with staggered (open-loop) arrivals; the section rows
+    report p50/p99 queue-wait, TTFT, inter-token gap and E2E latency read
+    straight from the log-bucketed telemetry histograms
+    (docs/observability.md) — the numbers a latency SLO would be written
+    against."""
+    global LAST_LATENCY_OBS
+    from repro.obs import Obs
+
+    cfg = get_config("symbiosis-llama2-13b").reduced(
+        n_layers=2, d_model=256 if quick else 512)
+    C = 2 if quick else 4
+    n_req = 8 if quick else 24
+    scfg = ServeConfig(n_clients=C, max_seq=64, page_block=8, pool_pages=64)
+    base, bank, _ = symbiosis.init_system(cfg, ACFG, C, jax.random.PRNGKey(0))
+    obs = Obs()
+    eng = ServingEngine(cfg, ACFG, scfg, base, bank,
+                        max_batch_per_client=2, obs=obs)
+    rng = np.random.default_rng(7)
+    for i in range(n_req):
+        short = i % 2 == 0
+        eng.submit(Request(
+            client_id=i % C,
+            prompt=rng.integers(1, cfg.vocab,
+                                (1, 8 if short else 24)).astype(np.int32),
+            max_new_tokens=8 if short else 16,
+            arrive_tick=i // 2))               # open-loop staggered arrivals
+    done = eng.run()
+    assert all(r.status == "ok" for r in done)
+    LAST_LATENCY_OBS = obs
+
+    rows = []
+    for label, name in (("queue_wait", "serve_queue_wait_seconds"),
+                        ("ttft", "serve_ttft_seconds"),
+                        ("intertoken", "serve_intertoken_seconds"),
+                        ("e2e", "serve_e2e_seconds")):
+        h = obs.metrics.merged_histogram(name)
+        rows.append({"latency": label,
+                     "p50_ms": round(h.percentile(50) * 1e3, 3),
+                     "p99_ms": round(h.percentile(99) * 1e3, 3),
+                     "n": h.n})
+    return emit("serving_latency", rows)
 
 
 def run_paged_admission(quick: bool = False):
@@ -429,17 +481,20 @@ def run(quick: bool = False):
                  "baseline_iter_s": "-", "symbiosis_tok_s": "-",
                  "baseline_tok_s": "-"})
     out = emit("fig11_12_multiclient", rows)
-    return (out + run_serving(quick) + run_paged_admission(quick)
+    return (out + run_serving(quick) + run_latency(quick)
+            + run_paged_admission(quick)
             + run_compaction(quick) + run_mixed(quick)
             + run_sharded_serving(quick))
 
 
 def run_smoke():
     """CI bench-smoke entry: a few real engine ticks on tiny configs —
-    the serving comparison (incl. the paged engine), the paged-admission
-    section, the compacted-decode occupancy sweep, the mixed-method bank
-    section, and the sharded-vs-unsharded serving identity."""
-    return (run_serving(quick=True) + run_paged_admission(quick=True)
+    the serving comparison (incl. the paged engine), the tail-latency
+    section (telemetry-backed), the paged-admission section, the
+    compacted-decode occupancy sweep, the mixed-method bank section, and
+    the sharded-vs-unsharded serving identity."""
+    return (run_serving(quick=True) + run_latency(quick=True)
+            + run_paged_admission(quick=True)
             + run_compaction(quick=True) + run_mixed(quick=True)
             + run_sharded_serving(quick=True))
 

@@ -12,9 +12,12 @@ paged-admission-at-fixed-HBM section, and the compacted-decode occupancy
 sweep.
 
 ``--json PATH`` persists the serving-side sections (continuous-batching
-tok/s, paged admission counts, compacted-decode speedups) as one combined
+tok/s, the telemetry-backed ``serving_latency`` tail-latency section,
+paged admission counts, compacted-decode speedups) as one combined
 JSON document, so the bench trajectory is machine-readable across PRs —
-the CI bench-smoke job writes ``BENCH_serving.json`` from the same run.
+the CI bench-smoke job writes ``BENCH_serving.json`` from the same run,
+plus the raw telemetry behind the latency section as ``BENCH_obs.jsonl``
+and ``BENCH_obs.prom`` (validated by ``python -m repro.obs --check``).
 The TRAINING sections (fine-tuning-as-a-service: shared-base vs dedicated
 replicas HBM/step-s, heterogeneous bank mix) are persisted alongside it as
 ``BENCH_training.json`` in the same directory.
@@ -46,6 +49,7 @@ BENCHES = [
 # compaction counts) persisted by --json
 SERVING_SECTIONS = (
     "sec37_serving_continuous_batching",
+    "serving_latency",
     "paged_admission_fixed_hbm",
     "compact_decode_sparse_occupancy",
     "mixed_method_serving",
@@ -61,6 +65,7 @@ TRAINING_SECTIONS = (
 # row-schema key -> section name, across both documents
 _SCHEMA_OF = {
     "engine": "sec37_serving_continuous_batching",
+    "latency": "serving_latency",
     "layout": "paged_admission_fixed_hbm",
     "occupancy": "compact_decode_sparse_occupancy",
     "mix": "mixed_method_serving",
@@ -104,6 +109,24 @@ def _training_json_path(serving_path: str) -> str:
 def _write_training_json(serving_path: str, rows: list):
     _write_sections_json(_training_json_path(serving_path), rows,
                          TRAINING_SECTIONS, "training")
+
+
+def _write_obs_exports(serving_path: str):
+    """Persist the latency section's raw telemetry next to the --json doc:
+    BENCH_obs.jsonl (full metric+event dump) and BENCH_obs.prom (Prometheus
+    text exposition) — the artifacts the CI bench-smoke job uploads and
+    validates with ``python -m repro.obs --check``."""
+    import benchmarks.bench_multiclient as bmc
+    obs = bmc.LAST_LATENCY_OBS
+    if obs is None:
+        return
+    from repro.obs import export
+    out_dir = os.path.dirname(serving_path) or "."
+    jl = os.path.join(out_dir, "BENCH_obs.jsonl")
+    pm = os.path.join(out_dir, "BENCH_obs.prom")
+    export.write_jsonl(jl, obs)
+    export.write_prometheus(pm, obs)
+    print(f"telemetry exports written to {jl} and {pm}")
 
 
 def main():
@@ -150,6 +173,7 @@ def main():
             # them land in the serving document's section
             _write_serving_json(args.json, rows + train_rows)
             _write_training_json(args.json, train_rows)
+            _write_obs_exports(args.json)
         return
 
     failures = []
@@ -173,6 +197,7 @@ def main():
             traceback.print_exc()
     if args.json and serving_rows:
         _write_serving_json(args.json, serving_rows + training_rows)
+        _write_obs_exports(args.json)
     if args.json and training_rows:
         _write_training_json(args.json, training_rows)
     if failures:

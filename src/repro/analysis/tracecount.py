@@ -139,13 +139,25 @@ def dispatch(owner, family: str, key: Any, fn: Callable, *args):
 
     ``owner`` must expose ``trace_domain()``; ``fn`` must be a ``jax.jit``
     callable (its ``_cache_size()`` detects whether this call compiled).
+
+    If the owner carries telemetry (``owner._obs``, docs/observability.md),
+    compiles are additionally emitted as ``compile`` / ``recompile``
+    events — the dispatch choke point is what makes TraceGuard an event
+    source. With neither a guard nor telemetry attached this is a straight
+    passthrough call.
     """
     g = _ACTIVE
-    if g is None:
+    obs = getattr(owner, "_obs", None)
+    if g is None and obs is None:
         return fn(*args)
-    g.on_call()
+    if g is not None:
+        g.on_call()
     before = fn._cache_size()
     out = fn(*args)
     if fn._cache_size() > before:
-        g.on_compile(owner, family, key)
+        if g is not None:
+            g.on_compile(owner, family, key)
+        if obs is not None:
+            obs.on_dispatch_compile(owner, family, key,
+                                    getattr(owner, "_trace_epoch", 0))
     return out

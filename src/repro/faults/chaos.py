@@ -176,14 +176,18 @@ def _poison_client(bank, client: int):
 
 def serving_scenario(seed: int, *, n_clients: int = 4,
                      reqs_per_client: int = 4) -> dict:
-    """Poisoned-adapter (non-finite logits) faults plus injected admission
-    allocation failures against a paged serving bank."""
+    """Poisoned-adapter (non-finite logits) faults, injected admission
+    allocation failures, AND request-stream faults (transient hiccup +
+    stream exhaustion) against a paged serving bank — with telemetry
+    attached, so the quarantine/backoff/retry/reject trail is asserted
+    through the client-visible ``drain_events`` feed."""
     import jax
     import warnings
     from repro.config import ServeConfig
     from repro.core import symbiosis
     from repro.faults.audit import check_conservation
-    from repro.faults.plan import AllocHook, FaultPlan
+    from repro.faults.plan import AllocHook, FaultPlan, FaultyRequestStream
+    from repro.obs import Obs
     from repro.serving.engine import Request, ServingEngine
 
     errors: List[str] = []
@@ -200,19 +204,38 @@ def serving_scenario(seed: int, *, n_clients: int = 4,
     prompts = [[rng.integers(1, cfg.vocab, (1, 6)).astype(np.int32)
                 for _ in range(reqs_per_client)] for _ in range(n_clients)]
 
-    def submit_all(eng):
+    # stream-fault victims: a SURVIVOR takes a transient hiccup (retried
+    # after backoff, same prompt — must stay bitwise), and one nan victim's
+    # stream runs dry (rejected at admission, never admitted)
+    surv = sorted(set(range(n_clients)) - victims)
+    s_err = surv[0]
+    v_end = sorted(victims)[0]
+    err_stream = FaultyRequestStream(prompts[s_err][0], {0: "stream_error"})
+    end_stream = FaultyRequestStream(prompts[v_end][0], {0: "stream_end"})
+
+    def submit_all(eng, streams=False):
         for i in range(reqs_per_client):
             for c in range(n_clients):
-                eng.submit(Request(client_id=c,
-                                   prompt=prompts[c][i].copy(),
-                                   max_new_tokens=4, arrive_tick=0))
+                stream = None
+                if streams and i == 0 and c == s_err:
+                    stream = err_stream
+                elif streams and i == 0 and c == v_end:
+                    stream = end_stream
+                if stream is not None:
+                    eng.submit(Request(client_id=c, prompt=None,
+                                       prompt_stream=stream,
+                                       max_new_tokens=4, arrive_tick=0))
+                else:
+                    eng.submit(Request(client_id=c,
+                                       prompt=prompts[c][i].copy(),
+                                       max_new_tokens=4, arrive_tick=0))
 
-    def build(bank_tree, hook=None):
+    def build(bank_tree, hook=None, obs=None):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             return ServingEngine(cfg, _lora(), scfg, base, bank_tree,
                                  max_batch_per_client=2, debug=True,
-                                 fault_hook=hook)
+                                 fault_hook=hook, obs=obs)
 
     clean_eng = build(bank)
     submit_all(clean_eng)
@@ -229,8 +252,9 @@ def serving_scenario(seed: int, *, n_clients: int = 4,
     for v in victims:
         poisoned = _poison_client(poisoned, v)
     hook = AllocHook({1, 4, 7})
-    eng = build(poisoned, hook)
-    submit_all(eng)
+    obs = Obs()
+    eng = build(poisoned, hook, obs=obs)
+    submit_all(eng, streams=True)
     done = eng.run()
 
     got = {}
@@ -253,14 +277,30 @@ def serving_scenario(seed: int, *, n_clients: int = 4,
                        ref is not None and np.array_equal(r.generated, ref),
                        f"serving: survivor {c} stream diverged")
     _check(errors, hook.fired > 0, "serving: no alloc faults fired")
+    _check(errors, err_stream.calls >= 2,
+           "serving: stream_error request was never retried")
+    _check(errors, end_stream.calls >= 1,
+           "serving: stream_end request was never fetched")
     _check(errors,
            all(v in eng._quarantined_clients for v in victims),
            "serving: victims not client-quarantined after repeated faults")
     cons = check_conservation(eng)
     _check(errors, not cons, f"serving: conservation: {cons}")
 
+    # the same containment trail must be observable through the
+    # client-visible event feed (docs/observability.md)
+    ev = eng.drain_events()
+    kinds = {e.kind for e in ev}
+    for want in ("backoff", "retry", "quarantine", "reject"):
+        _check(errors, want in kinds,
+               f"serving: no {want!r} event in the telemetry feed")
+    _check(errors,
+           any(e.kind == "retry" and e.tenant == s_err for e in ev),
+           "serving: stream_error retry not visible as a retry event")
+
     injected = {"nan_adapter": eng.stats["quarantined_requests"],
-                "alloc": hook.fired}
+                "alloc": hook.fired,
+                "stream_error": 1, "stream_end": 1}
     return {"scenario": "serving", "injected": injected,
             "total": sum(injected.values()),
             "engine_faults": eng.stats["faults"],

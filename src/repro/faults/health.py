@@ -21,6 +21,12 @@ contract is that survivors never observe any of this: their committed
 state is byte-identical to a run where the faulty tenant was never
 admitted after its last clean tick (machine-tested in
 ``tests/test_faults.py`` / the chaos sweep).
+
+Health transitions are also telemetry sources: when an engine runs with
+``obs=`` attached, every trip/quarantine/retire call site emits a
+structured event (``backoff`` / ``retry`` / ``quarantine`` / ``health``)
+into the client-visible event log, and the ``history`` trajectory is
+surfaced per tenant as ``fault_history`` — see docs/observability.md.
 """
 from __future__ import annotations
 
@@ -95,6 +101,11 @@ class HealthRecord:
     def eligible(self, tick: int) -> bool:
         """May this tenant run work at ``tick``? (backoff gate)"""
         return self.active and tick >= self.next_eligible_tick
+
+    def last_transition(self) -> Optional[Tuple[int, str, str]]:
+        """Newest ``(tick, state, reason)`` history entry — the payload the
+        engines attach to health events (docs/observability.md)."""
+        return self.history[-1] if self.history else None
 
     def ok(self, tick: int):
         """A clean committed tick: clears SUSPECT/RESUMED back to HEALTHY."""

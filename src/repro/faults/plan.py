@@ -45,6 +45,9 @@ from repro.faults.health import FatalFault, TransientFault
 KINDS = ("nan_batch", "nan_adapter", "stream_error", "stream_end",
          "alloc_fail", "ckpt_corrupt")
 _STREAM_KINDS = ("nan_batch", "stream_error", "stream_end")
+# request-stream kinds: prompts can't carry a NaN loss mask, so only the
+# delivery faults apply to serving request streams
+_REQUEST_KINDS = ("stream_error", "stream_end")
 
 
 class StreamError(TransientFault):
@@ -94,6 +97,36 @@ class FaultyStream:
         fill = np.nan if kind == "nan_batch" else 1.0
         b["mask"] = jnp.full(b["labels"].shape, fill, jnp.float32)
         return b
+
+
+class FaultyRequestStream:
+    """Serving twin of ``FaultyStream``: wraps a REQUEST's prompt delivery.
+
+    A ``Request`` submitted with ``prompt=None, prompt_stream=...`` has its
+    prompt resolved by the engine via ``fetch()`` at admission time — the
+    serving-side injection point for stream faults (docs/robustness.md).
+    The schedule is keyed by CALL COUNT: ``stream_error`` raises a
+    transient ``StreamError`` (the client backs off and the fetch is
+    retried; the retry draws the SAME prompt, so the finished stream is
+    bitwise identical to an unfaulted run), ``stream_end`` raises
+    ``StreamExhausted`` (the request is rejected, visible as a ``reject``
+    event and an entry in ``Request.fault_history``). Picklable — the call
+    counter rides along in engine checkpoints."""
+
+    def __init__(self, prompt, schedule: Optional[Dict[int, str]] = None):
+        self.prompt = np.asarray(prompt, np.int32)
+        self.schedule = dict(schedule or {})
+        self.calls = 0
+
+    def fetch(self):
+        call = self.calls
+        self.calls += 1
+        kind = self.schedule.get(call)
+        if kind == "stream_error":
+            raise StreamError(f"injected request-stream error (call {call})")
+        if kind == "stream_end":
+            raise StreamExhausted(f"injected request-stream end (call {call})")
+        return self.prompt
 
 
 class AllocHook:
@@ -164,6 +197,15 @@ class FaultPlan:
         sched: Dict[int, str] = {}
         for e in self.events:
             if e.tenant == tenant and e.kind in _STREAM_KINDS:
+                sched.setdefault(e.at, e.kind)
+        return sched
+
+    def request_schedule(self, tenant: int) -> Dict[int, str]:
+        """Call-index -> kind map for ``FaultyRequestStream`` (delivery
+        kinds only; first event wins a contested call index)."""
+        sched: Dict[int, str] = {}
+        for e in self.events:
+            if e.tenant == tenant and e.kind in _REQUEST_KINDS:
                 sched.setdefault(e.at, e.kind)
         return sched
 

@@ -55,6 +55,9 @@ def main(argv=None):
                     metavar=("DATA", "MODEL"),
                     help="place the engine on a (data, model) device mesh "
                          "(replicated base, client axes partitioned)")
+    ap.add_argument("--obs", default=None, metavar="DIR",
+                    help="attach telemetry (docs/observability.md) and write "
+                         "telemetry.jsonl + metrics.prom into DIR at exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -74,7 +77,11 @@ def main(argv=None):
                       serve=scfg, mesh=_mesh_from(args.mesh),
                       replicate_base=args.mesh is not None,
                       max_batch_per_client=args.batch)
-    eng = ServingEngine(spec, base, [bank])
+    obs = None
+    if args.obs is not None:
+        from repro.obs import Obs
+        obs = Obs()
+    eng = ServingEngine(spec, base, [bank], obs=obs)
 
     rng = np.random.default_rng(0)
     reqs = [Request(client_id=i % args.clients,
@@ -103,6 +110,15 @@ def main(argv=None):
           f"({total_tokens/dt:,.0f} tok/s) | engine stats: {eng.stats}")
     sim = eng.simulate_policy(done)
     print(f"[serve] policy timeline ({args.policy}): {sim.summary()}")
+    if obs is not None:
+        import os
+        from repro.obs import export
+        os.makedirs(args.obs, exist_ok=True)
+        jl = os.path.join(args.obs, "telemetry.jsonl")
+        pm = os.path.join(args.obs, "metrics.prom")
+        export.write_jsonl(jl, obs)
+        export.write_prometheus(pm, obs)
+        print(f"[serve] telemetry written to {jl} and {pm}")
     return done
 
 

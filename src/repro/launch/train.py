@@ -53,6 +53,9 @@ def main(argv=None):
                     metavar=("DATA", "MODEL"),
                     help="place the engine on a (data, model) device mesh "
                          "(replicated base, job rows partitioned)")
+    ap.add_argument("--obs", default=None, metavar="DIR",
+                    help="attach telemetry (docs/observability.md) and write "
+                         "telemetry.jsonl + metrics.prom into DIR at exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -69,7 +72,11 @@ def main(argv=None):
                           memory_optimized=not args.no_memory_optimized)
     spec = EngineSpec(cfg=cfg, finetune=fcfg, mesh=mesh,
                       replicate_base=mesh is not None)
-    engine = FinetuneEngine(spec, base)
+    obs = None
+    if args.obs is not None:
+        from repro.obs import Obs
+        obs = Obs()
+    engine = FinetuneEngine(spec, base, obs=obs)
 
     methods = (("lora", "ia3", "prefix") if args.peft == "mixed"
                else (args.peft,))
@@ -107,6 +114,15 @@ def main(argv=None):
                            j.result.opt, name=j.name)
         print(f"[train] per-job checkpoints -> "
               f"{args.ckpt_dir}/step_{jobs[0].result.step:08d}")
+    if obs is not None:
+        import os
+        from repro.obs import export
+        os.makedirs(args.obs, exist_ok=True)
+        jl = os.path.join(args.obs, "telemetry.jsonl")
+        pm = os.path.join(args.obs, "metrics.prom")
+        export.write_jsonl(jl, obs)
+        export.write_prometheus(pm, obs)
+        print(f"[train] telemetry written to {jl} and {pm}")
     return first, last
 
 

@@ -1,0 +1,98 @@
+"""CLI for the telemetry subsystem (docs/observability.md).
+
+Validate telemetry files (exit 1 on malformed/partial input — CI runs this
+against the bench-smoke artifacts)::
+
+    PYTHONPATH=src python -m repro.obs --check BENCH_obs.jsonl BENCH_obs.prom
+
+Produce a small self-contained telemetry sample (tiny obs-enabled serving
+run including one injected request-stream fault, so events cover the
+backoff/retry path)::
+
+    PYTHONPATH=src python -m repro.obs --demo --out obs_demo
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+
+def _demo(out_dir: str) -> List[str]:
+    import warnings
+
+    import jax
+    import numpy as np
+
+    from repro.config import DENSE, AdapterConfig, ModelConfig, ServeConfig
+    from repro.core import symbiosis
+    from repro.faults.plan import FaultyRequestStream
+    from repro.obs import Obs, export
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = ModelConfig(name="tiny-obs", arch=DENSE, n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                      dtype="float32", param_dtype="float32")
+    acfg = AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v"))
+    n_clients = 2
+    scfg = ServeConfig(n_clients=n_clients, max_seq=32, page_block=8,
+                       pool_pages=8)
+    base, bank, _ = symbiosis.init_system(cfg, acfg, n_clients,
+                                          jax.random.PRNGKey(0))
+    obs = Obs()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = ServingEngine(cfg, acfg, scfg, base, bank,
+                            max_batch_per_client=2, obs=obs)
+    rng = np.random.default_rng(0)
+    for c in range(n_clients):
+        p = rng.integers(1, cfg.vocab, (1, 6)).astype(np.int32)
+        eng.submit(Request(client_id=c, prompt=p, max_new_tokens=4))
+    # one stream-backed request whose first fetch faults, so the demo
+    # telemetry exercises the backoff/retry event path
+    p = rng.integers(1, cfg.vocab, (1, 6)).astype(np.int32)
+    eng.submit(Request(client_id=0, prompt=None, max_new_tokens=4,
+                       prompt_stream=FaultyRequestStream(
+                           p, {0: "stream_error"})))
+    eng.run()
+    return [export.write_jsonl(os.path.join(out_dir, "telemetry.jsonl"), obs),
+            export.write_prometheus(os.path.join(out_dir, "metrics.prom"),
+                                    obs)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="validate / demo repro telemetry files")
+    ap.add_argument("--check", nargs="+", metavar="FILE", default=None,
+                    help="validate telemetry files (.jsonl / .prom); "
+                         "exits non-zero on malformed or partial input")
+    ap.add_argument("--demo", action="store_true",
+                    help="run a tiny obs-enabled serving workload and "
+                         "write sample telemetry")
+    ap.add_argument("--out", default="obs_demo", metavar="DIR",
+                    help="output directory for --demo (default: obs_demo)")
+    args = ap.parse_args(argv)
+    if not args.check and not args.demo:
+        ap.error("nothing to do: pass --check FILE... and/or --demo")
+    rc = 0
+    if args.demo:
+        for p in _demo(args.out):
+            print(f"wrote {p}")
+    if args.check:
+        from repro.obs.export import check_file
+        problems: List[str] = []
+        for p in args.check:
+            problems += check_file(p)
+        for msg in problems:
+            print(f"CHECK FAIL: {msg}", file=sys.stderr)
+        if problems:
+            rc = 1
+        else:
+            print(f"ok: {len(args.check)} telemetry file(s) valid")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -119,6 +119,19 @@ base-sized collectives, client isolation — are enforced by
 ``python -m repro.analysis`` and the tier-1 trace guard in
 tests/conftest.py; jitted dispatch routes through
 ``repro.analysis.tracecount.dispatch``.
+
+Observability (docs/observability.md): pass ``obs=repro.obs.Obs()`` to get
+tick-phase spans (``jax.profiler`` named scopes + latency histograms),
+per-tenant metrics (queue-wait / TTFT / inter-token / end-to-end latency,
+token and page counters, HBM charges) and the client-visible event log
+(``drain_events(client=...)`` — admissions, retirements, backoff/retry,
+quarantines, bank growth, compiles). Telemetry is bitwise-invisible to the
+engine's outputs, adds no device syncs inside the tick (host timestamps at
+tick/phase boundaries only) and no jit keys; ``obs=None`` (default) is a
+hard no-op. Per-request latency is always recorded on the request itself
+(``submit_t``/``admit_t``/``first_token_t``/``finish_t`` +
+``queue_wait``/``ttft``/``e2e_latency`` properties), and fault handling
+always appends to ``Request.fault_history``.
 """
 from __future__ import annotations
 
@@ -140,8 +153,17 @@ from repro.core import adapters as adapters_lib
 from repro.core import symbiosis
 from repro.core.engine_spec import EngineSpec
 from repro.core.scheduler import ClientSpec, TickPolicy, simulate
-from repro.faults.health import HealthPolicy, HealthRecord, HealthState
+from repro.faults.health import HealthPolicy, HealthRecord, HealthState, classify
 from repro.faults.plan import TransientFault
+
+# disabled-telemetry span: one shared, reusable null context manager — the
+# tick loop's `with self._span(name)` costs a function call and nothing
+# else, and no timing machinery (repro.obs, jax.profiler) is imported
+_NULL_CTX = contextlib.nullcontext()
+
+
+def _null_span(name: str):
+    return _NULL_CTX
 
 
 def _pin_serving(fn, cfg, scfg, mesh, *, cache_arg=2):
@@ -231,19 +253,45 @@ class BankAdmission:
 @dataclasses.dataclass(eq=False)       # identity eq: queues hold np arrays
 class Request:
     client_id: int
-    prompt: np.ndarray                      # [B, S] int32 (B sequence slots)
+    prompt: Optional[np.ndarray]            # [B, S] int32 (B sequence slots)
     max_new_tokens: int = 16
     latency_sensitive: bool = True
     sampling: Optional[SamplingParams] = None   # None -> greedy
     arrive_tick: int = 0                    # earliest tick admission may see it
+    # stream-backed prompt delivery (docs/robustness.md): submit with
+    # prompt=None and a prompt_stream exposing fetch(); the engine resolves
+    # the prompt at admission, where delivery faults back the client off
+    # (transient) or reject the request (exhaustion)
+    prompt_stream: Optional[object] = None
     # filled by the engine:
     generated: Optional[np.ndarray] = None  # [B, max_new_tokens]
-    submit_t: float = 0.0
-    finish_t: float = 0.0
+    submit_t: float = 0.0                   # perf_counter at submit()
+    admit_t: float = 0.0                    # ... at successful admission
+    first_token_t: float = 0.0              # ... when the first token sampled
+    finish_t: float = 0.0                   # ... at retirement
     # lifecycle (docs/robustness.md): ok | quarantined (non-finite logits —
     # terminated, slots/pages/charges freed) | rejected (its client was
-    # quarantined before this request ran)
+    # quarantined before this request ran, or its prompt stream ran dry)
     status: str = "ok"
+    # client-visible fault trajectory: (tick, kind, reason) tuples, kind in
+    # {backoff, retry, quarantine, rejected} — docs/observability.md
+    fault_history: List[tuple] = dataclasses.field(default_factory=list)
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Seconds from submit to admission (None until admitted)."""
+        return self.admit_t - self.submit_t if self.admit_t else None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Seconds from submit to the first sampled token."""
+        return (self.first_token_t - self.submit_t
+                if self.first_token_t else None)
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        """Seconds from submit to retirement (None until finished)."""
+        return self.finish_t - self.submit_t if self.finish_t else None
 
 
 class ServingEngine:
@@ -313,7 +361,7 @@ class ServingEngine:
                         compact_decode: Optional[bool] = None,
                         ragged_prefill: Optional[bool] = None,
                         health_policy: Optional[HealthPolicy] = None,
-                        debug: bool = False, fault_hook=None):
+                        debug: bool = False, fault_hook=None, obs=None):
         if spec.serve is None:
             raise ValueError("ServingEngine needs EngineSpec.serve")
         if not spec.banks:
@@ -338,7 +386,7 @@ class ServingEngine:
                     compact_decode=compact_decode,
                     ragged_prefill=ragged_prefill,
                     health_policy=health_policy, debug=debug,
-                    fault_hook=fault_hook,
+                    fault_hook=fault_hook, obs=obs,
                     mesh=spec.mesh, replicate_base=spec.replicate_base,
                     bank_repl=tuple(b.placement == "replicated"
                                     for b in spec.banks),
@@ -352,7 +400,7 @@ class ServingEngine:
                compact_decode: Optional[bool] = None,
                ragged_prefill: Optional[bool] = None,
                health_policy: Optional[HealthPolicy] = None,
-               debug: bool = False, fault_hook=None,
+               debug: bool = False, fault_hook=None, obs=None,
                mesh=None, replicate_base: bool = False,
                bank_repl: tuple = (), spec: Optional[EngineSpec] = None):
         self.cfg, self.acfg, self.scfg = cfg, acfg, scfg
@@ -553,6 +601,16 @@ class ServingEngine:
                       "ragged_prefill_batches": 0, "faults": 0,
                       "quarantined_requests": 0, "rejected_requests": 0,
                       "quarantined_clients": 0}
+        # telemetry (docs/observability.md): obs=None is a hard no-op — the
+        # tick loop sees only `is not None` guards plus the shared null
+        # span; attached, all instrumentation is host-side (perf_counter at
+        # tick/phase boundaries, no device syncs, no jit keys) and outputs
+        # stay bitwise identical (tests/test_obs.py)
+        self._obs = obs
+        self._span = _null_span if obs is None else obs.span
+        self._last_tok_t: Dict[int, float] = {}
+        if obs is not None:
+            obs.attach("serving", self)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -563,12 +621,19 @@ class ServingEngine:
         if req.client_id in self._quarantined_clients:
             raise ValueError(f"client {req.client_id} is quarantined "
                              "(docs/robustness.md)")
-        B, S = req.prompt.shape
-        assert B <= self.max_b, f"request rows {B} > {self.max_b} slots"
-        assert req.max_new_tokens >= 1
-        assert S + req.max_new_tokens <= self.scfg.max_seq, (
-            f"context {S}+{req.max_new_tokens} exceeds cache depth "
-            f"{self.scfg.max_seq}")
+        if req.prompt is None:
+            # stream-backed prompt: shape checks happen at admission, when
+            # the fetch resolves (and can fault — docs/robustness.md)
+            if req.prompt_stream is None:
+                raise ValueError("Request needs a prompt or a prompt_stream")
+            assert req.max_new_tokens >= 1
+        else:
+            B, S = req.prompt.shape
+            assert B <= self.max_b, f"request rows {B} > {self.max_b} slots"
+            assert req.max_new_tokens >= 1
+            assert S + req.max_new_tokens <= self.scfg.max_seq, (
+                f"context {S}+{req.max_new_tokens} exceeds cache depth "
+                f"{self.scfg.max_seq}")
         if req.sampling is not None and req.sampling.method not in (
                 "greedy", "temperature", "top_k"):
             raise ValueError(f"unknown sampling method {req.sampling.method!r}")
@@ -586,9 +651,24 @@ class ServingEngine:
         return len(self._inflight)
 
     def drain_done(self) -> List[Request]:
-        """Hand over (and forget) the finished-request list."""
+        """Hand over (and forget) the finished-request list. Each record
+        carries its latency timeline (``queue_wait`` / ``ttft`` /
+        ``e2e_latency`` properties) and ``fault_history``."""
         done, self._done = self._done, []
         return done
+
+    def drain_events(self, *, client=None, kind: Optional[str] = None):
+        """Client-visible event stream (docs/observability.md): drain THIS
+        engine's telemetry events, optionally filtered to one client id
+        and/or one event kind — filtered drains leave other tenants' (and,
+        under a shared ``Obs``, the finetune engine's) events queued.
+        Returns [] when the engine runs without telemetry (obs=None)."""
+        if self._obs is None:
+            return []
+        if client is None:
+            return self._obs.drain_events(kind=kind, engine="serving")
+        return self._obs.drain_events(client=client, kind=kind,
+                                      engine="serving")
 
     def service_tick(self) -> bool:
         """ONE engine tick: admission (+ the admitted requests' prefills),
@@ -596,6 +676,8 @@ class ServingEngine:
         ``run()`` — ``SymbiosisEngine`` interleaves these with a
         FinetuneEngine's train steps against the same base. Returns True
         while requests remain."""
+        obs = self._obs
+        t0 = obs.tick_start("serving") if obs is not None else 0.0
         if self._queue:
             # merge new submissions (mid-run submits are allowed; order is
             # stable for equal arrive_ticks)
@@ -612,18 +694,37 @@ class ServingEngine:
         # this tick's admissions prefill together (ragged where possible)
         admitted_any = False
         newly = []
-        attempted = [r for r in waiting if r.arrive_tick <= tick]
-        if self.policy.admit_now(len(inflight)):
-            for req in attempted:
-                if req.client_id in self._quarantined_clients:
-                    continue          # swept to rejected by _quarantine_client
-                slots = self._try_admit(req)
-                if slots is not None:
-                    waiting.remove(req)
-                    inflight.append(req)
-                    newly.append((req, slots))
-                    admitted_any = True
-        self._prefill_admitted(newly)
+        with self._span("admit"):
+            # the backoff gate (docs/robustness.md): a SUSPECT client's
+            # requests skip admission until its deterministic backoff
+            # expires — mirrored from the train-side job gate; backed-off
+            # requests don't count as "attempted" for the stall detector
+            # (backoff is bounded by HealthPolicy.max_backoff ticks)
+            attempted, backing_off = [], 0
+            for r in waiting:
+                if r.arrive_tick > tick:
+                    continue
+                rec = self._client_health.get(r.client_id)
+                if rec is not None and not rec.eligible(tick):
+                    backing_off += 1
+                    continue
+                attempted.append(r)
+            if self.policy.admit_now(len(inflight)):
+                for req in attempted:
+                    if req.client_id in self._quarantined_clients:
+                        continue      # swept to rejected by _quarantine_client
+                    if req.status == "rejected":
+                        continue      # stream ran dry inside _try_admit
+                    slots = self._try_admit(req)
+                    if slots is not None:
+                        waiting.remove(req)
+                        inflight.append(req)
+                        newly.append((req, slots))
+                        admitted_any = True
+        if obs is not None and backing_off:
+            obs.metrics.counter("serve_backoff_skips_total").inc(backing_off)
+        with self._span("prefill"):
+            self._prefill_admitted(newly)
 
         self.stats["peak_inflight"] = max(self.stats["peak_inflight"],
                                           len(inflight))
@@ -653,9 +754,12 @@ class ServingEngine:
             tick = min(r.arrive_tick for r in waiting)           # idle skip
         self._tick = tick
         if self.debug:
-            from repro.faults.audit import serving_conservation
-            errs = serving_conservation(self)
-            assert not errs, "; ".join(errs)
+            with self._span("health_audit"):
+                from repro.faults.audit import serving_conservation
+                errs = serving_conservation(self)
+                assert not errs, "; ".join(errs)
+        if obs is not None:
+            obs.tick_end("serving", tick, t0)
         return bool(waiting or inflight)
 
     def run(self) -> List[Request]:
@@ -672,6 +776,8 @@ class ServingEngine:
         router placement. Returns the claimed slot list (admitted — the
         caller prefills via ``_prefill_admitted``) or None (stays queued)."""
         c = req.client_id
+        if req.prompt is None and not self._fetch_prompt(req):
+            return None
         B, S = req.prompt.shape
         if self.max_inflight is not None:
             owners = {id(o) for o in self._slot_owner[c] if o is not None}
@@ -747,19 +853,96 @@ class ServingEngine:
             if placement is not None:
                 self.router.release(placement)
             if isinstance(e, TransientFault):
-                self._admission_faulted = True
-                self.stats["faults"] += 1
-                rec = self._client_health.setdefault(c, HealthRecord())
-                verdict = rec.trip(self._tick, f"admission: {e}",
-                                   self.health_policy)
-                if verdict == "quarantine":
-                    self._quarantine_client(c)
+                self._fault_backoff(req, f"admission: {e}")
                 return None                      # stays queued; retried next tick
             raise
         self._placement[id(req)] = placement
         for s in slots:
             self._slot_owner[c][s] = req
+        req.admit_t = time.perf_counter()
+        if self._obs is not None:
+            m = self._obs.metrics
+            m.histogram("serve_queue_wait_seconds", client=c).observe(
+                req.admit_t - req.submit_t)
+            if self._paged:
+                m.gauge("serve_pages_free", client=c).set(
+                    len(self._free_pages[c]) - self._reserved[c])
+            if placement is not None:
+                m.counter("serve_hbm_charged_bytes_total", client=c).inc(
+                    placement.cache_bytes)
+            if self.router is not None:
+                u = self.router.utilization()
+                m.gauge("router_placements").set(u["placements"])
+                m.gauge("router_committed_bytes").set(u["committed_bytes"])
+            self._obs.event("admit", engine="serving", tick=self._tick,
+                            tenant=c, rows=B, prompt_tokens=int(B * S))
+            if req.fault_history:
+                # a previously backed-off request made it through: the
+                # client-visible signal that its retry succeeded
+                self._obs.event("retry", engine="serving", tick=self._tick,
+                                tenant=c, attempts=len(req.fault_history))
         return slots
+
+    def _fault_backoff(self, req: Request, reason: str):
+        """Shared transient-admission-fault path: health trip -> SUSPECT
+        with deterministic backoff (event kind ``backoff``) or, past the
+        retry budget, client quarantine. Admission state was already rolled
+        back; the request stays queued for a bitwise retry."""
+        c = req.client_id
+        self._admission_faulted = True
+        self.stats["faults"] += 1
+        rec = self._client_health.setdefault(c, HealthRecord())
+        verdict = rec.trip(self._tick, reason, self.health_policy)
+        req.fault_history.append((self._tick, "backoff", reason))
+        if self._obs is not None:
+            self._obs.event("backoff", engine="serving", tick=self._tick,
+                            tenant=c, reason=reason,
+                            until=rec.next_eligible_tick)
+        if verdict == "quarantine":
+            self._quarantine_client(c)
+
+    def _fetch_prompt(self, req: Request) -> bool:
+        """Resolve a stream-backed request's prompt at admission time — the
+        serving twin of the train-side ``FaultyStream`` injection point
+        (docs/robustness.md). Runs BEFORE any admission state commits, so
+        a delivery fault needs no rollback: transient errors back the
+        client off (the retried fetch draws the same prompt — bitwise);
+        exhaustion or an invalid prompt rejects the request. Returns True
+        when ``req.prompt`` is resolved and valid."""
+        c = req.client_id
+        try:
+            prompt = np.asarray(req.prompt_stream.fetch(), np.int32)
+            if prompt.ndim != 2:
+                raise ValueError(f"stream prompt must be [B, S], got "
+                                 f"shape {prompt.shape}")
+            B, S = prompt.shape
+            if B > self.max_b or \
+                    S + req.max_new_tokens > self.scfg.max_seq:
+                raise ValueError(f"stream prompt [{B}, {S}] does not fit "
+                                 f"({self.max_b} slots, depth "
+                                 f"{self.scfg.max_seq})")
+        except Exception as e:
+            if classify(e) == "transient":
+                self._fault_backoff(req, f"request stream: {e}")
+            else:
+                # stream ran dry / delivered garbage: reject this request
+                # (and only it — the client stays healthy). Flagging
+                # _admission_faulted keeps the removal from tripping the
+                # same-tick stall detector.
+                self._admission_faulted = True
+                req.status = "rejected"
+                req.fault_history.append(
+                    (self._tick, "rejected", f"request stream: {e}"))
+                self._waiting.remove(req)
+                self._done.append(req)
+                self.stats["rejected_requests"] += 1
+                if self._obs is not None:
+                    self._obs.event("reject", engine="serving",
+                                    tick=self._tick, tenant=c,
+                                    reason=f"request stream: {e}")
+            return False
+        req.prompt = prompt
+        return True
 
     def _finish_admit(self, req: Request, slots: List[int],
                       first_logits: np.ndarray):
@@ -780,18 +963,32 @@ class ServingEngine:
             # the router charge through the one normal path
             req.generated = np.zeros((B, req.max_new_tokens), np.int32)
             req.status = "quarantined"
+            req.fault_history.append((self._tick, "quarantine", bad))
             self._left[id(req)] = 0
             self._slots_of[id(req)] = slots
             self.stats["quarantined_requests"] += 1
+            if self._obs is not None:
+                self._obs.event("quarantine", engine="serving",
+                                tick=self._tick, tenant=c, scope="request",
+                                reason=bad)
             if bad == "non-finite prefill logits":
                 self._fault_client(c, bad)
             return
         first = self._sample(first_logits, req)
+        req.first_token_t = time.perf_counter()
         req.generated = np.zeros((B, req.max_new_tokens), np.int32)
         req.generated[:, 0] = first
         self._last_tok[c, slots] = first
         self._left[id(req)] = req.max_new_tokens - 1
         self._slots_of[id(req)] = slots
+        if self._obs is not None:
+            m = self._obs.metrics
+            m.counter("serve_prefill_tokens_total", client=c).inc(
+                int(req.prompt.size))
+            m.histogram("serve_ttft_seconds", client=c).observe(
+                req.first_token_t - req.submit_t)
+            # the first decode token's inter-token gap measures from here
+            self._last_tok_t[id(req)] = req.first_token_t
         if self._left[id(req)] > 0:
             # a request admitted with max_new_tokens == 1 is already done
             # (its one token came from prefill) and must never join a decode
@@ -998,11 +1195,12 @@ class ServingEngine:
     def _decode_tick(self, serve: set, inflight: List[Request]):
         stepping = [r for r in inflight
                     if r.client_id in serve and self._left[id(r)] > 0]
-        for req in stepping:
-            if self._paged:
-                for s in self._slots_of[id(req)]:
-                    self._grow_slot_pages(req, req.client_id, s)
-        self._sync_tbl()
+        with self._span("compact_gather"):
+            for req in stepping:
+                if self._paged:
+                    for s in self._slots_of[id(req)]:
+                        self._grow_slot_pages(req, req.client_id, s)
+            self._sync_tbl()
         if self._compact:
             lookup, finite_of = self._decode_tick_compact(serve)
         else:
@@ -1012,27 +1210,42 @@ class ServingEngine:
             serve_sel = np.zeros((self.n_clients, 1), bool)
             serve_sel[sorted(serve)] = True
             active = self._active_mask & serve_sel
-            with self._mesh_ctx():
+            with self._span("jit_dispatch"), self._mesh_ctx():
                 logits, self.caches = tracecount.dispatch(
                     self, "decode", (), self._decode,
                     self.base, self.bank, self.caches,
                     jnp.asarray(self._last_tok), jnp.asarray(active))
-            lg = np.asarray(logits)
+            with self._span("device_sync"):
+                lg = np.asarray(logits)
             lookup = lambda c, slots: lg[c, slots]
             finite_of = lambda c, slots: bool(np.isfinite(lg[c, slots]).all())
-        for req in stepping:
-            if self._left[id(req)] <= 0:
-                continue              # its client was quarantined mid-tick
-            c, slots = req.client_id, self._slots_of[id(req)]
-            if not finite_of(c, slots):
-                self._quarantine_request(req, "non-finite decode logits")
-                continue
-            nxt = self._sample(lookup(c, slots), req)
-            pos = req.max_new_tokens - self._left[id(req)]
-            req.generated[:, pos] = nxt
-            self._last_tok[c, slots] = nxt
-            self._left[id(req)] -= 1
-            self.stats["decode_tokens"] += len(slots)
+        with self._span("scatter"):
+            obs = self._obs
+            # ONE host timestamp after the decode's logits landed: every
+            # stepping request's inter-token sample this tick shares it
+            # (tick-boundary granularity, no per-request syncs)
+            t_now = time.perf_counter() if obs is not None else 0.0
+            for req in stepping:
+                if self._left[id(req)] <= 0:
+                    continue          # its client was quarantined mid-tick
+                c, slots = req.client_id, self._slots_of[id(req)]
+                if not finite_of(c, slots):
+                    self._quarantine_request(req, "non-finite decode logits")
+                    continue
+                nxt = self._sample(lookup(c, slots), req)
+                pos = req.max_new_tokens - self._left[id(req)]
+                req.generated[:, pos] = nxt
+                self._last_tok[c, slots] = nxt
+                self._left[id(req)] -= 1
+                self.stats["decode_tokens"] += len(slots)
+                if obs is not None:
+                    obs.metrics.counter("serve_decode_tokens_total",
+                                        client=c).inc(len(slots))
+                    last = self._last_tok_t.get(id(req))
+                    if last is not None:
+                        obs.metrics.histogram("serve_intertoken_seconds",
+                                              client=c).observe(t_now - last)
+                    self._last_tok_t[id(req)] = t_now
         self.stats["ticks"] += 1
         self.stats["batched_clients"] += len(serve)
 
@@ -1046,19 +1259,21 @@ class ServingEngine:
         write and their logits never read. The step is compiled with
         ``probe=True``, so a per-row finite flag rides along for free;
         returns ``(logits lookup, finite lookup)`` for the sampler."""
-        rows = [(c, s) for c in sorted(serve) for s in self._active_slots[c]]
-        n = len(rows)
-        nb = self._row_bucket(n)
-        clients = np.zeros((nb,), np.int32)
-        slots = np.zeros((nb,), np.int32)
-        mask = np.zeros((nb,), bool)
-        for i, (c, s) in enumerate(rows):
-            clients[i], slots[i], mask[i] = c, s, True
-        toks = self._last_tok[clients, slots]
+        with self._span("compact_gather"):
+            rows = [(c, s) for c in sorted(serve)
+                    for s in self._active_slots[c]]
+            n = len(rows)
+            nb = self._row_bucket(n)
+            clients = np.zeros((nb,), np.int32)
+            slots = np.zeros((nb,), np.int32)
+            mask = np.zeros((nb,), bool)
+            for i, (c, s) in enumerate(rows):
+                clients[i], slots[i], mask[i] = c, s, True
+            toks = self._last_tok[clients, slots]
         if self._mixed:
             # per-row method ids + bank-local adapter indices: one tick
             # carries every bank's rows through the mixed compact step
-            with self._mesh_ctx():
+            with self._span("jit_dispatch"), self._mesh_ctx():
                 logits, finite, self.caches = tracecount.dispatch(
                     self, "compact_decode", nb, self._compact_step,
                     self.base, tuple(self.banks), self.caches,
@@ -1067,14 +1282,15 @@ class ServingEngine:
                     jnp.asarray(self._method_of[clients]),
                     jnp.asarray(self._local_of[clients]), jnp.asarray(mask))
         else:
-            with self._mesh_ctx():
+            with self._span("jit_dispatch"), self._mesh_ctx():
                 logits, finite, self.caches = tracecount.dispatch(
                     self, "compact_decode", nb, self._compact_step,
                     self.base, self.bank, self.caches, jnp.asarray(toks),
                     jnp.asarray(clients), jnp.asarray(slots),
                     jnp.asarray(mask))
-        lg = np.asarray(logits)
-        fin = np.asarray(finite)
+        with self._span("device_sync"):
+            lg = np.asarray(logits)
+            fin = np.asarray(finite)
         row_of = {cs: i for i, cs in enumerate(rows)}
         self.stats["compact_rows"] += n
         self.stats["compact_padded"] += nb - n
@@ -1107,8 +1323,13 @@ class ServingEngine:
         this tick's retire loop frees its slots, pages and router charge
         through the one normal path. Repeated faults quarantine the client."""
         req.status = "quarantined"
+        req.fault_history.append((self._tick, "quarantine", reason))
         self._left[id(req)] = 0
         self.stats["quarantined_requests"] += 1
+        if self._obs is not None:
+            self._obs.event("quarantine", engine="serving", tick=self._tick,
+                            tenant=req.client_id, scope="request",
+                            reason=reason)
         self._fault_client(req.client_id, reason)
 
     def _fault_client(self, c: int, reason: str):
@@ -1120,6 +1341,9 @@ class ServingEngine:
         if rec.state is not HealthState.QUARANTINED:
             rec.state = HealthState.SUSPECT
             rec.history.append((self._tick, "suspect", reason))
+            if self._obs is not None:
+                self._obs.event("health", engine="serving", tick=self._tick,
+                                tenant=c, state="suspect", reason=reason)
         if (c not in self._quarantined_clients and rec.total_faults
                 >= self.health_policy.client_quarantine_after):
             self._quarantine_client(c)
@@ -1138,15 +1362,27 @@ class ServingEngine:
             rec.state = HealthState.QUARANTINED
             rec.history.append((self._tick, "quarantined",
                                 f"{rec.total_faults} fault(s)"))
+        if self._obs is not None:
+            self._obs.event("quarantine", engine="serving", tick=self._tick,
+                            tenant=c, scope="client",
+                            faults=rec.total_faults)
         for pool in (self._queue, self._waiting):
             for r in [r for r in pool if r.client_id == c]:
                 pool.remove(r)
                 r.status = "rejected"
+                r.fault_history.append(
+                    (self._tick, "rejected", "client quarantined"))
                 self._done.append(r)
                 self.stats["rejected_requests"] += 1
+                if self._obs is not None:
+                    self._obs.event("reject", engine="serving",
+                                    tick=self._tick, tenant=c,
+                                    reason="client quarantined")
         for r in self._inflight:
             if r.client_id == c and self._left.get(id(r), 0) > 0:
                 r.status = "quarantined"
+                r.fault_history.append(
+                    (self._tick, "quarantine", "client quarantined"))
                 self._left[id(r)] = 0
                 self.stats["quarantined_requests"] += 1
 
@@ -1171,6 +1407,23 @@ class ServingEngine:
         placement = self._placement.pop(id(req), None)
         if placement is not None:
             self.router.release(placement)
+        if self._obs is not None:
+            self._last_tok_t.pop(id(req), None)
+            m = self._obs.metrics
+            m.histogram("serve_e2e_seconds", client=c).observe(
+                req.finish_t - req.submit_t)
+            if self._paged:
+                m.gauge("serve_pages_free", client=c).set(
+                    len(self._free_pages[c]) - self._reserved[c])
+            if self.router is not None:
+                u = self.router.utilization()
+                m.gauge("router_placements").set(u["placements"])
+                m.gauge("router_committed_bytes").set(u["committed_bytes"])
+            self._obs.event(
+                "retire", engine="serving", tick=self._tick, tenant=c,
+                status=req.status,
+                tokens=(0 if req.generated is None
+                        else int(req.generated.size)))
 
     def release_banks(self):
         """Release the per-bank adapter-HBM charges committed at
@@ -1185,7 +1438,9 @@ class ServingEngine:
     def _req_record(self, req: Request) -> dict:
         sp = req.sampling
         return {"client_id": req.client_id,
-                "prompt": np.asarray(req.prompt),
+                "prompt": (None if req.prompt is None
+                           else np.asarray(req.prompt)),
+                "prompt_stream": req.prompt_stream,   # picklable by contract
                 "max_new_tokens": req.max_new_tokens,
                 "latency_sensitive": req.latency_sensitive,
                 "sampling": None if sp is None else dataclasses.asdict(sp),
@@ -1193,6 +1448,7 @@ class ServingEngine:
                 "generated": (None if req.generated is None
                               else np.asarray(req.generated)),
                 "status": req.status,
+                "fault_history": list(req.fault_history),
                 "left": self._left.get(id(req)),
                 "slots": self._slots_of.get(id(req)),
                 "resv": self._resv_of.get(id(req)) if self._paged else None,
@@ -1261,9 +1517,11 @@ class ServingEngine:
                           latency_sensitive=rec["latency_sensitive"],
                           sampling=(None if sp is None
                                     else SamplingParams(**sp)),
-                          arrive_tick=rec["arrive_tick"])
+                          arrive_tick=rec["arrive_tick"],
+                          prompt_stream=rec.get("prompt_stream"))
             req.generated = rec["generated"]
             req.status = rec["status"]
+            req.fault_history = list(rec.get("fault_history", []))
             if rec["left"] is not None:
                 self._left[id(req)] = rec["left"]
             if rec["slots"] is not None:
@@ -1416,6 +1674,9 @@ class ServingEngine:
         self._buckets.append(total_rows)
         self._place_on_mesh()       # grown caches + banks take their specs
         self._trace_epoch += 1
+        if self._obs is not None:
+            self._obs.event("bank_growth", engine="serving", tick=self._tick,
+                            bank=m, clients=k, method=acfg.method)
         return BankAdmission(bank_id=m,
                              client_ids=list(range(old_C, self.n_clients)),
                              placement=placement)
@@ -1435,6 +1696,10 @@ class ServingEngine:
         if admission.placement is not None:
             self.router.release(admission.placement)
             admission.placement = None
+        if self._obs is not None:
+            self._obs.event("bank_retire", engine="serving", tick=self._tick,
+                            bank=admission.bank_id,
+                            clients=len(admission.client_ids))
 
     # ------------------------------------------------------------------
     def trace_domain(self) -> tracecount.TraceDomain:

@@ -178,6 +178,21 @@ class PlacementRouter:
         else:
             self.host_free += p.cache_bytes
 
+    def utilization(self) -> dict:
+        """Telemetry snapshot (docs/observability.md): live vs initial
+        capacity per slot plus the outstanding-placement ledger. The
+        engines fold this into ``router_*`` gauges at admit/retire when an
+        ``Obs`` is attached; pure host reads, no device traffic."""
+        return {
+            "slots": {sid: {"free_hbm": s.free_hbm,
+                            "initial_hbm": self._initial.get(sid, s.free_hbm)}
+                      for sid, s in self.slots.items()},
+            "host_free": self.host_free,
+            "host_initial": self._host_initial,
+            "placements": len(self._committed),
+            "committed_bytes": sum(p.cache_bytes for p in self._committed),
+        }
+
     def conservation_errors(self) -> List[str]:
         """Recompute every capacity from the initial snapshot minus the
         outstanding placements; any drift from the live counters means a

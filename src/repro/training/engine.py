@@ -43,6 +43,16 @@ Driven standalone via ``run()``, or interleaved tick-by-tick with a
 ``ServingEngine`` against the same donated base by
 ``training.SymbiosisEngine``.
 
+Observability (docs/observability.md): construct with ``obs=Obs()`` and
+the engine emits tick-phase spans (admit / compact gather / train step /
+device sync / scatter), per-job counters (``train_steps_total``,
+``train_tokens_total``, ``train_loss``), and structured events (admit,
+retire, backoff, retry, quarantine, compile) drainable via
+``drain_events()``. Telemetry is strictly additive: with ``obs=None``
+(the default) the hot path takes a no-op span and skips every metric
+callback, and with it enabled all timestamps land at tick boundaries —
+committed results stay bitwise identical either way.
+
 Machine-checked invariants (docs/invariants.md): frozen-base taint (a
 train step must never produce a base-shaped output that isn't a declared
 update), donation of bank/optimizer state, per-row isolation, and closed
@@ -71,6 +81,14 @@ from repro.faults.health import HealthPolicy, HealthRecord, classify
 from repro.faults.plan import NonFiniteFault, StreamExhausted, TransientFault
 from repro.optim import adamw_init
 from repro.training.job import FinetuneJob, JobResult
+
+# telemetry-off spans: one shared nullcontext, zero per-phase allocation
+# (docs/observability.md — the disabled mode must cost nothing on the tick)
+_NULL_CTX = contextlib.nullcontext()
+
+
+def _null_span(name):
+    return _NULL_CTX
 
 
 def _pin_train(fn, cfg, mesh):
@@ -223,7 +241,7 @@ class FinetuneEngine:
                  fcfg: Optional[FinetuneConfig] = None, router=None,
                  health_policy: Optional[HealthPolicy] = None,
                  quarantine_dir: Optional[str] = None, debug: bool = False,
-                 fault_hook=None):
+                 fault_hook=None, obs=None):
         if isinstance(spec, EngineSpec):
             if fcfg is not None:
                 raise TypeError("pass the FinetuneConfig as EngineSpec."
@@ -234,7 +252,7 @@ class FinetuneEngine:
                         reserve={b.acfg: b.capacity for b in spec.banks},
                         spec=spec, health_policy=health_policy,
                         quarantine_dir=quarantine_dir, debug=debug,
-                        fault_hook=fault_hook)
+                        fault_hook=fault_hook, obs=obs)
         else:
             warnings.warn(
                 "FinetuneEngine(cfg, base_params) is deprecated; construct "
@@ -243,7 +261,7 @@ class FinetuneEngine:
             self._setup(spec, base_params, fcfg=fcfg, router=router,
                         health_policy=health_policy,
                         quarantine_dir=quarantine_dir, debug=debug,
-                        fault_hook=fault_hook)
+                        fault_hook=fault_hook, obs=obs)
 
     def _setup(self, cfg: ModelConfig, base_params, *,
                fcfg: Optional[FinetuneConfig] = None, router=None,
@@ -252,7 +270,7 @@ class FinetuneEngine:
                spec: Optional[EngineSpec] = None,
                health_policy: Optional[HealthPolicy] = None,
                quarantine_dir: Optional[str] = None, debug: bool = False,
-               fault_hook=None):
+               fault_hook=None, obs=None):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
@@ -289,6 +307,12 @@ class FinetuneEngine:
                       "compact_padded": 0, "train_tokens": 0,
                       "faults": 0, "quarantined": 0, "finished_early": 0,
                       "dropped_steps": 0}
+        # telemetry (docs/observability.md): obs=None keeps the tick loop
+        # free of any timing machinery — _span is a shared nullcontext
+        self._obs = obs
+        self._span = _null_span if obs is None else obs.span
+        if obs is not None:
+            obs.attach("finetune", self)
 
     # ------------------------------------------------------------------
     def submit(self, job: FinetuneJob):
@@ -362,6 +386,12 @@ class FinetuneEngine:
                 job.health = rec
                 rec.trip(self.stats["train_ticks"],
                          f"admission: {e}", self.health_policy)
+                if self._obs is not None:
+                    self._obs.event("backoff", engine="finetune",
+                                    tick=self.stats["train_ticks"],
+                                    tenant=job.name,
+                                    reason=f"admission: {e}",
+                                    until=rec.next_eligible_tick)
                 return False
             raise                                 # rolled back, not swallowed
         bank.slots[slot] = job
@@ -372,6 +402,21 @@ class FinetuneEngine:
         job.status = "active"
         self.stats["admitted"] += 1
         self.stats["peak_jobs"] = max(self.stats["peak_jobs"], self.n_active)
+        if self._obs is not None:
+            tick = self.stats["train_ticks"]
+            self._obs.event("admit", engine="finetune", tick=tick,
+                            tenant=job.name, bank=repr(key.acfg.method),
+                            steps=job.steps - job.start_step)
+            if job.health is not None and job.health.total_faults:
+                self._obs.event("retry", engine="finetune", tick=tick,
+                                tenant=job.name,
+                                attempts=job.health.total_faults)
+            if self.router is not None:
+                u = self.router.utilization()
+                self._obs.metrics.gauge("router_placements").set(
+                    u["placements"])
+                self._obs.metrics.gauge("router_committed_bytes").set(
+                    u["committed_bytes"])
         return True
 
     # ------------------------------------------------------------------
@@ -428,58 +473,72 @@ class FinetuneEngine:
             rows.append((s, job, b))
         if not rows:
             return
-        R = self._row_bucket(len(rows), bank.cap)
-        slots = np.zeros((R,), np.int32)
-        mask = np.zeros((R,), bool)
-        hyper = {k: np.zeros((R,), np.float32)
-                 for k in ("lr", "warmup", "total", "wd", "gnorm")}
-        hyper["step"] = np.zeros((R,), np.int32)
-        batches = []
-        for i, (s, job, b) in enumerate(rows):
-            slots[i], mask[i] = s, True
-            step = self._step_of[id(job)]
-            hyper["step"][i] = step
-            hyper["lr"][i] = job.lr
-            hyper["warmup"][i] = job.warmup_steps
-            hyper["total"][i] = job.schedule_total
-            hyper["wd"][i] = job.weight_decay
-            hyper["gnorm"][i] = job.max_grad_norm if job.max_grad_norm > 0 \
-                else np.inf
-            batches.append(b)
-        n = len(batches)
+        with self._span("compact_gather"):
+            R = self._row_bucket(len(rows), bank.cap)
+            slots = np.zeros((R,), np.int32)
+            mask = np.zeros((R,), bool)
+            hyper = {k: np.zeros((R,), np.float32)
+                     for k in ("lr", "warmup", "total", "wd", "gnorm")}
+            hyper["step"] = np.zeros((R,), np.int32)
+            batches = []
+            for i, (s, job, b) in enumerate(rows):
+                slots[i], mask[i] = s, True
+                step = self._step_of[id(job)]
+                hyper["step"][i] = step
+                hyper["lr"][i] = job.lr
+                hyper["warmup"][i] = job.warmup_steps
+                hyper["total"][i] = job.schedule_total
+                hyper["wd"][i] = job.weight_decay
+                hyper["gnorm"][i] = job.max_grad_norm if job.max_grad_norm > 0 \
+                    else np.inf
+                batches.append(b)
+            n = len(batches)
 
-        def stack(*leaves):
-            pads = [jnp.zeros_like(leaves[0])] * (R - n)
-            return jnp.stack(list(leaves) + pads)
+            def stack(*leaves):
+                pads = [jnp.zeros_like(leaves[0])] * (R - n)
+                return jnp.stack(list(leaves) + pads)
 
-        batch = jax.tree.map(stack, *batches)
+            batch = jax.tree.map(stack, *batches)
         step_fn = _jit_compact_train(self.cfg, bank.key.acfg,
                                      bank.key.microbatch,
                                      self.fcfg.memory_optimized,
                                      self.fcfg.remat, self.mesh)
-        with self._mesh_ctx():
+        with self._span("train_step"), self._mesh_ctx():
             bank.params, bank.opt, metrics = tracecount.dispatch(
                 self, "compact_train", (bank.key, R), step_fn,
                 self.base, bank.params, bank.opt, batch, jnp.asarray(slots),
                 jnp.asarray(mask),
                 {k: jnp.asarray(v) for k, v in hyper.items()})
-        losses = np.asarray(metrics["loss"])
-        finite = np.asarray(metrics["finite"])
+        with self._span("device_sync"):
+            losses = np.asarray(metrics["loss"])
+            finite = np.asarray(metrics["finite"])
+        obs = self._obs
         committed = 0
-        for i, (_, job, _b) in enumerate(rows):
-            if finite[i]:
-                job.losses.append(float(losses[i]))
-                self._step_of[id(job)] += 1
-                if job.health is not None:
-                    job.health.ok(tick)
-                committed += 1
-            else:
-                # the in-step probe tripped: the jitted scatter already
-                # dropped this row's commit (its slot kept the last clean
-                # params/opt state), so quarantine checkpoints CLEAN state
-                self.stats["dropped_steps"] += 1
-                self._job_fault(job, tick, NonFiniteFault(
-                    f"non-finite loss/grads at step {self._step_of[id(job)]}"))
+        with self._span("scatter"):
+            for i, (_, job, _b) in enumerate(rows):
+                if finite[i]:
+                    job.losses.append(float(losses[i]))
+                    self._step_of[id(job)] += 1
+                    if job.health is not None:
+                        job.health.ok(tick)
+                    committed += 1
+                    if obs is not None:
+                        label = job.name or "anon"
+                        obs.metrics.counter(
+                            "train_steps_total", job=label).inc()
+                        obs.metrics.counter(
+                            "train_tokens_total", job=label).inc(
+                                bank.key.batch * bank.key.seq)
+                        obs.metrics.gauge("train_loss", job=label).set(
+                            float(losses[i]))
+                else:
+                    # the in-step probe tripped: the jitted scatter already
+                    # dropped this row's commit (its slot kept the last clean
+                    # params/opt state), so quarantine checkpoints CLEAN state
+                    self.stats["dropped_steps"] += 1
+                    self._job_fault(job, tick, NonFiniteFault(
+                        f"non-finite loss/grads at step "
+                        f"{self._step_of[id(job)]}"))
         self.stats["train_steps"] += committed
         self.stats["compact_rows"] += n
         self.stats["compact_padded"] += R - n
@@ -498,6 +557,10 @@ class FinetuneEngine:
         reason = f"{type(exc).__name__}: {exc}"
         if classify(exc) == "transient":
             if rec.trip(tick, reason, self.health_policy) == "retry":
+                if self._obs is not None:
+                    self._obs.event("backoff", engine="finetune", tick=tick,
+                                    tenant=job.name, reason=reason,
+                                    until=rec.next_eligible_tick)
                 return
         else:
             rec.quarantine(tick, reason)
@@ -516,6 +579,12 @@ class FinetuneEngine:
                         (self.stats["train_ticks"], "quarantined",
                          f"quarantine checkpoint failed: {e}"))
         self.stats["quarantined"] += 1
+        if self._obs is not None:
+            last = job.health.last_transition() if job.health else None
+            self._obs.event("quarantine", engine="finetune",
+                            tick=self.stats["train_ticks"], tenant=job.name,
+                            scope="job",
+                            reason=last[2] if last else "quarantined")
         self.retire(job, status="quarantined")
 
     def _finish_early(self, job: FinetuneJob, reason: str):
@@ -552,23 +621,32 @@ class FinetuneEngine:
         contained (health machine + quarantine, docs/robustness.md) — one
         tenant's stream/NaN/allocation failure never unwinds the tick."""
         tick = self.stats["train_ticks"]
+        obs = self._obs
+        t0 = obs.tick_start("finetune") if obs is not None else 0.0
         self._admission_faulted = False
         admitted_any = False
         backing_off = 0
-        for job in list(self._queue):
-            if job.health is not None and not job.health.active:
-                # admission retries exhausted: reject without crashing
-                self._queue.remove(job)
-                job.status = "quarantined"
-                self.stats["quarantined"] += 1
-                self.finished.append(job)
-                continue
-            if job.health is not None and not job.health.eligible(tick):
-                backing_off += 1
-                continue                           # SUSPECT: retry later
-            if self._try_admit(job):
-                self._queue.remove(job)
-                admitted_any = True
+        with self._span("admit"):
+            for job in list(self._queue):
+                if job.health is not None and not job.health.active:
+                    # admission retries exhausted: reject without crashing
+                    self._queue.remove(job)
+                    job.status = "quarantined"
+                    self.stats["quarantined"] += 1
+                    self.finished.append(job)
+                    if obs is not None:
+                        obs.event("quarantine", engine="finetune", tick=tick,
+                                  tenant=job.name, scope="job",
+                                  reason="admission retries exhausted")
+                    continue
+                if job.health is not None and not job.health.eligible(tick):
+                    backing_off += 1
+                    continue                       # SUSPECT: retry later
+                if self._try_admit(job):
+                    self._queue.remove(job)
+                    admitted_any = True
+        if obs is not None and backing_off:
+            obs.metrics.counter("train_backoff_skips_total").inc(backing_off)
         if self._queue and not self._slot_of and not admitted_any \
                 and not self._admission_faulted and not backing_off:
             raise RuntimeError(
@@ -588,7 +666,22 @@ class FinetuneEngine:
                 raise AssertionError("conservation audit failed after "
                                      f"train tick {tick}:\n  "
                                      + "\n  ".join(errs))
+        if obs is not None:
+            obs.tick_end("finetune", tick, t0)
         return self.pending()
+
+    def drain_events(self, *, client=None, kind=None) -> list:
+        """Client-visible event feed (docs/observability.md): drain this
+        engine's structured events — admit/retire/backoff/retry/quarantine/
+        compile — optionally filtered to one tenant (``client`` matches the
+        job's ``name``) or one ``kind``. Returns [] when no telemetry is
+        attached; draining is destructive for the matched events only."""
+        if self._obs is None:
+            return []
+        if client is None:
+            return self._obs.drain_events(kind=kind, engine="finetune")
+        return self._obs.drain_events(client=client, kind=kind,
+                                      engine="finetune")
 
     def run(self) -> List[FinetuneJob]:
         """Drive all queued/active jobs to their step budgets."""
@@ -626,6 +719,16 @@ class FinetuneEngine:
                                losses=list(job.losses))
         self.finished.append(job)
         self.stats["retired"] += 1
+        if self._obs is not None:
+            self._obs.event("retire", engine="finetune",
+                            tick=self.stats["train_ticks"], tenant=job.name,
+                            status=status, steps=step)
+            if self.router is not None:
+                u = self.router.utilization()
+                self._obs.metrics.gauge("router_placements").set(
+                    u["placements"])
+                self._obs.metrics.gauge("router_committed_bytes").set(
+                    u["committed_bytes"])
         return job.result
 
     def checkpoint_job(self, job: FinetuneJob, directory: str) -> str:

@@ -59,6 +59,14 @@ class FinetuneJob:
     def schedule_total(self) -> int:
         return self.total_steps or self.steps
 
+    @property
+    def fault_history(self) -> List[tuple]:
+        """Client-visible fault trajectory (docs/observability.md): the
+        health record's ``(tick, state, reason)`` entries, or [] for a job
+        that never faulted — the training twin of
+        ``serving.Request.fault_history``."""
+        return [] if self.health is None else list(self.health.history)
+
 
 @dataclasses.dataclass
 class JobResult:

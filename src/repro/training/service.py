@@ -51,14 +51,17 @@ class SymbiosisEngine:
     @classmethod
     def from_spec(cls, spec: EngineSpec, base_params, *,
                   serving_banks=None, router=None, train_every: int = 1,
-                  policy: Optional[str] = None, **serving_kw):
+                  policy: Optional[str] = None, obs=None, **serving_kw):
         """Build the full symbiotic service from ONE ``EngineSpec``: a
         ``ServingEngine`` when ``spec.serve`` is set (over ``serving_banks``
         — one client-stacked adapter tree per ``spec.banks`` entry), a
         ``FinetuneEngine`` when ``spec.finetune`` is set, both closing over
         the SAME base tree. Under ``spec.mesh`` the base is sharded ONCE
         here; the engines' own placement is idempotent and identity-
-        preserving, so the shared-base leaf check still holds."""
+        preserving, so the shared-base leaf check still holds. One ``obs``
+        (docs/observability.md) is shared by both engines — their spans,
+        metrics and events land in a single registry/event log, labelled
+        ``serving`` / ``finetune``."""
         if spec.mesh is not None:
             from repro.launch import shardings
             base_params = shardings.shard_base_params(
@@ -70,11 +73,12 @@ class SymbiosisEngine:
                 raise ValueError("spec.serve is set: pass serving_banks= "
                                  "(one adapter tree per spec bank)")
             serving = ServingEngine(spec, base_params, serving_banks,
-                                    router=router, policy=policy,
+                                    router=router, policy=policy, obs=obs,
                                     **serving_kw)
         finetune = None
         if spec.finetune is not None:
-            finetune = FinetuneEngine(spec, base_params, router=router)
+            finetune = FinetuneEngine(spec, base_params, router=router,
+                                      obs=obs)
         return cls(serving=serving, finetune=finetune,
                    train_every=train_every)
 
@@ -127,6 +131,25 @@ class SymbiosisEngine:
         if did:
             self.stats["ticks"] += 1
         return did
+
+    def drain_events(self, *, client=None, kind=None) -> list:
+        """Merged client-visible event feed (docs/observability.md): drain
+        both engines' structured events, ordered by global sequence number.
+        When the engines share one ``Obs`` (the ``from_spec`` path) the
+        underlying log is drained once; distinct obs objects are each
+        drained and the results merged."""
+        seen, out = set(), []
+        for eng in (self.serving, self.finetune):
+            obs = getattr(eng, "_obs", None)
+            if eng is None or obs is None or id(obs) in seen:
+                continue
+            seen.add(id(obs))
+            if client is None:
+                out.extend(obs.drain_events(kind=kind))
+            else:
+                out.extend(obs.drain_events(client=client, kind=kind))
+        out.sort(key=lambda e: e.seq)
+        return out
 
     def run(self):
         """Drive both workloads to completion against the shared base.

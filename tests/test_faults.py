@@ -262,6 +262,38 @@ def test_nan_adapter_quarantine_and_client_ban(key):
     assert not check_conservation(eng)
 
 
+def test_quarantine_visible_through_client_event_feed(key):
+    """ISSUE 9 acceptance: the fault episode from the quarantine test above
+    is observable by the CLIENT through ``drain_events`` — the banned tenant
+    sees its quarantine/reject events, the healthy tenant sees only a clean
+    admit/retire stream, and finished records carry ``fault_history``."""
+    from repro.obs import Obs
+    cfg = tiny()
+    base, bank, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    bad = jax.tree.map(lambda p: p.at[0].set(jnp.nan), bank)
+    eng = _serving(cfg, base, bad, obs=Obs())
+    _submit_all(eng, _prompts(cfg, per_client=3))
+    done = eng.run()
+    mine = eng.drain_events(client=0)
+    kinds = [e.kind for e in mine]
+    assert "quarantine" in kinds
+    assert "reject" in kinds                     # banned mid-run
+    assert all(e.tenant == 0 for e in mine)
+    q = next(e for e in mine if e.kind == "quarantine")
+    assert q.engine == "serving" and q.seq >= 0
+    healthy = eng.drain_events(client=1)
+    assert {e.kind for e in healthy} <= {"admit", "retire", "backoff",
+                                         "retry"}
+    assert "quarantine" not in {e.kind for e in healthy}
+    for r in done:
+        if r.client_id == 0 and r.status in ("quarantined", "rejected"):
+            assert r.fault_history         # surfaced on the record itself
+        if r.client_id == 1:
+            assert r.fault_history == []
+    # the feed is destructive: a second drain is empty
+    assert eng.drain_events(client=0) == []
+
+
 def test_conservation_audit_detects_page_leak(key):
     """The audit is not vacuous: a deliberately leaked page is reported."""
     cfg = tiny()
