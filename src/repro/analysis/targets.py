@@ -160,6 +160,36 @@ def serving_targets(arch: str = DENSE) -> list:
                       jax.numpy.asarray(mask)),
                 donate_argnums=(2,), protected_leaves=pool, arch=arch))
 
+        if arch in (DENSE, MOE, VLM):
+            # the cross-client compacted prefill (ISSUE 10 tentpole): the
+            # paged attention engine's ONE admission path — analyzed both
+            # without sharing (ext=0 compiles the exact full-prefill
+            # program) and with a shared-prefix row (ext_blocks=1: one row
+            # reads a mapped prefix page and prefills only its suffix)
+            ptoks = np.zeros((nb, S_pad), np.int32)
+            ptoks[:3, :6] = np.arange(1, 7)
+            plens = np.array([6, 6, 6, 0], np.int32)
+            pstarts = np.zeros((nb,), np.int32)
+            out.append(StepTarget(
+                name=f"compact_prefill[{arch}-paged]",
+                fn=symbiosis.make_compact_prefill(cfg, lora, scfg_p,
+                                                  probe=True),
+                args=(base, bank, caches, jax.numpy.asarray(ptoks),
+                      jax.numpy.asarray(plens), jax.numpy.asarray(pstarts),
+                      jax.numpy.asarray(clients), jax.numpy.asarray(slots),
+                      jax.numpy.asarray(rmask)),
+                donate_argnums=(2,), protected_leaves=pool, arch=arch))
+            sstarts = np.array([8, 0, 0, 0], np.int32)
+            out.append(StepTarget(
+                name=f"compact_prefill[{arch}-shared]",
+                fn=symbiosis.make_compact_prefill(cfg, lora, scfg_p,
+                                                  probe=True, ext_blocks=1),
+                args=(base, bank, caches, jax.numpy.asarray(ptoks),
+                      jax.numpy.asarray(plens), jax.numpy.asarray(sstarts),
+                      jax.numpy.asarray(clients), jax.numpy.asarray(slots),
+                      jax.numpy.asarray(rmask)),
+                donate_argnums=(2,), protected_leaves=pool, arch=arch))
+
         # probe=True: the engine compiles its per-row finite health probe
         # into the donated decode step (docs/robustness.md) — what gets
         # analyzed must be THAT program, probe mask included

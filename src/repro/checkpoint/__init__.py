@@ -1,4 +1,5 @@
 from repro.checkpoint.ckpt import (CheckpointCorruptError, save_checkpoint,
                                    restore_checkpoint, save_job_state,
                                    restore_job_state, latest_step,
-                                   save_engine_state, load_engine_state)
+                                   save_engine_state, load_engine_state,
+                                   set_write_fault_hook)

@@ -45,6 +45,27 @@ class CheckpointCorruptError(RuntimeError):
     file, or unreadable frame) — never silently deserialized."""
 
 
+# checkpoint-write fault injection (docs/robustness.md): the ``ckpt_write``
+# fault kind installs a hook here (``repro.faults.plan.CkptWriteHook``)
+# that every writer consults BEFORE its payload reaches a final name. A
+# raising hook models an IO error (ENOSPC/EIO) or a crash mid-write; the
+# atomic temp-file staging below means a failed write leaves the previous
+# snapshot as the newest valid one — last-good wins on restore.
+_WRITE_FAULT_HOOK = None
+
+
+def set_write_fault_hook(hook):
+    """Install (or clear, with ``None``) the checkpoint-write fault hook.
+    Called as ``hook(point, path, frame)`` where ``point`` names the writer
+    (``"engine_state"`` | ``"checkpoint"``) and ``frame`` is the serialized
+    blob for engine snapshots (``None`` for leaf-file checkpoints). Returns
+    the previously installed hook so tests can restore it."""
+    global _WRITE_FAULT_HOOK
+    prev = _WRITE_FAULT_HOOK
+    _WRITE_FAULT_HOOK = hook
+    return prev
+
+
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
@@ -61,6 +82,8 @@ def save_checkpoint(directory: str, step: int, tree: Any, *, name: str = "state"
     """Write one pytree. Returns the checkpoint path."""
     path = os.path.join(directory, f"step_{step:08d}", name)
     os.makedirs(path, exist_ok=True)
+    if _WRITE_FAULT_HOOK is not None:
+        _WRITE_FAULT_HOOK("checkpoint", path, None)
     paths, leaves, _ = _flatten_with_paths(tree)
     manifest = {"paths": paths, "dtypes": [], "shapes": [], "crcs": []}
     for i, leaf in enumerate(leaves):
@@ -165,6 +188,8 @@ def save_engine_state(directory: str, state: Any, *, seq: Optional[int] = None) 
     frame = (_ENGINE_MAGIC + struct.pack("<QI", len(payload),
                                          zlib.crc32(payload)) + payload)
     path = os.path.join(directory, f"engine_{seq:08d}.ckpt")
+    if _WRITE_FAULT_HOOK is not None:
+        _WRITE_FAULT_HOOK("engine_state", path, frame)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(frame)

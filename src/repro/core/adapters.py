@@ -238,10 +238,14 @@ def apply_adapter_rows(y, x, path, ad_slice, acfg: AdapterConfig,
     if acfg.method == "lora":
         from repro.kernels.sgmv import sgmv   # deferred: kernels import nothing back
         n = x.shape[0]
+        # decode rows are [n, 1, d] (block_t=1); compacted PREFILL rows are
+        # [n, S, d] — one S-token block per row, all owned by that row's
+        # adapter, so block_t=S keeps one sgmv call per dispatch
+        S = x.shape[1] if x.ndim == 3 else 1
         ids = rows_client if rows_mask is None else \
             jnp.where(rows_mask, rows_client, -1)    # dead blocks emit zeros
-        delta = sgmv(x.reshape(n, -1), leaf["A"].astype(x.dtype),
-                     leaf["B"].astype(x.dtype), ids, block_t=1,
+        delta = sgmv(x.reshape(n * S, x.shape[-1]), leaf["A"].astype(x.dtype),
+                     leaf["B"].astype(x.dtype), ids, block_t=S,
                      scale=acfg.alpha / acfg.rank)
         out = y + delta.reshape(y.shape)
         return out if rows_mask is None else jnp.where(_row_shape(rows_mask, y),

@@ -794,6 +794,172 @@ def make_compact_decode_step(cfg: ModelConfig, acfg, scfg: ServeConfig,
     return compact_mixed if mixed else compact
 
 
+def make_compact_prefill(cfg: ModelConfig, acfg, scfg: ServeConfig,
+                         probe: bool = False, ext_blocks: int = 0, **ctx_kw):
+    """Cross-client compacted PREFILL: every same-tick admission — across
+    clients and, in the mixed registry, across banks — rides ONE ragged
+    jit-bucketed batch (the admission analogue of
+    ``make_compact_decode_step``).
+
+    Single-method (``acfg`` an AdapterConfig or None):
+
+      fn(base, bank, caches, tokens, lengths, starts, clients, slots,
+         row_mask) -> (logits [n_rows, V], new bank caches)
+
+    MIXED-METHOD (``acfg`` a tuple/list of AdapterConfigs):
+
+      fn(base, banks, caches, tokens, lengths, starts, clients, slots,
+         methods, locals_, row_mask) -> (logits [n_rows, V], new caches)
+
+    * ``tokens`` [n_rows, S_pad] right-padded prompts; ``lengths`` [n_rows]
+      true suffix lengths; ``starts`` [n_rows] tokens ALREADY cached in the
+      row's mapped shared-prefix pages (0 = full prefill). Row i is slot
+      ``slots[i]`` of client ``clients[i]``; ``row_mask`` False marks
+      padding rows (length 0, every write dropped at the scatter).
+    * ``ext_blocks`` (static, a jit bucket) is the number of leading
+      block-table entries gathered pre-scan as read-only prefix K/V lanes
+      (``model.prefill(starts=, ext_blocks=)``); 0 compiles the exact
+      full-prefill program. Rows with fewer cached blocks mask unused
+      lanes by position — exact-zero softmax weight, so compacted+shared
+      output is bitwise the per-client no-sharing prefill
+      (docs/prefix_cache.md).
+    * Per-row adapters use the same SGMV / per-row-gather machinery as the
+      compacted decode (LoRA blocks are S_pad tokens wide here); mixed
+      rows gate every application by bank membership.
+    * ``probe=True`` returns ``(logits, finite [n_rows] bool, caches)`` —
+      the admission health probe, same contract as the decode step.
+    * Requires the paged layout on a pure-KV attention family (dense /
+      MoE / VLM): recurrent and cross-attention families carry per-slot
+      state the cross-client gather cannot zero per row, and stay on the
+      per-client admission path."""
+    mixed = isinstance(acfg, (tuple, list))
+    acfgs = tuple(acfg) if mixed else None
+    model = get_model(cfg)
+    cache_kw = serve_cache_kwargs(cfg, scfg, pool_pages=1)
+    if "page_block" not in cache_kw:
+        raise ValueError(
+            "compact prefill requires the paged KV layout (ServeConfig."
+            "page_block > 0 on an attention-bearing family)")
+    if cfg.arch not in (DENSE, MOE, VLM):
+        raise ValueError(
+            f"compact prefill serves the pure-KV families (dense/MoE/VLM); "
+            f"{cfg.arch} admissions stay on the per-client prefill path")
+    if ext_blocks and cache_kw.get("quant"):
+        raise ValueError("shared-prefix prefill (ext_blocks > 0) requires "
+                         "an unquantized KV cache")
+    slot_axes = cache_slot_axes(cfg, scfg.max_seq, **cache_kw)
+    page_axes = cache_page_axes(cfg, scfg.max_seq, **cache_kw)
+    slot_axes.pop("block_tbl", None)
+    page_axes.pop("block_tbl", None)
+
+    def _rest(x, lifted):
+        shape = list(x.shape)
+        del shape[lifted], shape[0]
+        return tuple(shape)
+
+    def _gather_caches(caches, rows, C, B):
+        inner = {k: v for k, v in caches.items() if k != "block_tbl"}
+
+        def gather(x, ax, pax):
+            if pax is not None:      # global pool: flat already, zero copies
+                return x
+            if ax is not None:
+                y = jnp.moveaxis(x, ax + 1, 1).reshape((C * B,) + _rest(x, ax + 1))
+                return constrain_batch(jnp.moveaxis(y[rows], 0, ax), ax)
+            raise ValueError("paged cache leaf with neither slot nor page axis")
+
+        compact_cache = jax.tree.map(gather, inner, slot_axes, page_axes)
+        compact_cache["block_tbl"] = constrain_batch(
+            caches["block_tbl"].reshape(C * B, -1)[rows])
+        return inner, compact_cache
+
+    def _scatter_caches(inner, new_compact, rows, row_mask, C, B):
+        new_compact = {k: v for k, v in new_compact.items() if k != "block_tbl"}
+        drop_rows = jnp.where(row_mask, rows, C * B)     # C*B is out of bounds
+
+        def scatter(old, new, ax, pax):
+            if pax is not None:
+                # pool writes were bounded by each row's true length inside
+                # paged_prefill_write (padding rows carry length 0)
+                return new
+            rest = _rest(old, ax + 1)
+            flat = jnp.moveaxis(old, ax + 1, 1).reshape((C * B,) + rest)
+            vals = jnp.moveaxis(new, ax, 0)
+            flat = flat.at[drop_rows].set(vals.astype(flat.dtype), mode="drop")
+            return jnp.moveaxis(flat.reshape((C, B) + rest), 1, ax + 1)
+
+        return jax.tree.map(scatter, inner, new_compact, slot_axes, page_axes)
+
+    def _out(logits, new_caches):
+        if probe:
+            return logits, jnp.isfinite(logits).all(axis=-1), new_caches
+        return logits, new_caches
+
+    def _run(base, caches, tokens, lengths, starts, clients, slots,
+             row_mask, ctx, adapter):
+        C, B = caches["pos"].shape
+        rows = clients.astype(jnp.int32) * B + slots.astype(jnp.int32)
+        inner, compact_cache = _gather_caches(caches, rows, C, B)
+        logits, new_compact = model.prefill(
+            base, {"tokens": constrain_batch(tokens)}, compact_cache, ctx,
+            adapter, lengths=lengths,
+            starts=starts.astype(jnp.int32), ext_blocks=ext_blocks)
+        new_inner = _scatter_caches(inner, new_compact, rows, row_mask, C, B)
+        return _out(constrain_batch(logits),
+                    dict(new_inner, block_tbl=caches["block_tbl"]))
+
+    def compact(base, bank, caches, tokens, lengths, starts, clients, slots,
+                row_mask):
+        clients = clients.astype(jnp.int32)
+        ctx = make_client_ctx(cfg, None, **ctx_kw) if bank is None else \
+            make_compact_ctx(cfg, acfg, clients, **ctx_kw)
+        adapter = adapters_lib.compact_adapter_bank(bank, clients)
+        return _run(base, caches, tokens, lengths, starts, clients, slots,
+                    row_mask, ctx, adapter)
+
+    def compact_mixed(base, banks, caches, tokens, lengths, starts, clients,
+                      slots, methods, locals_, row_mask):
+        methods = methods.astype(jnp.int32)
+        locals_ = locals_.astype(jnp.int32)
+        ctx = make_mixed_ctx(cfg, acfgs, locals_, methods, **ctx_kw)
+        adapter = adapters_lib.compact_mixed_bank(banks, locals_, methods)
+        return _run(base, caches, tokens, lengths, starts,
+                    clients.astype(jnp.int32), slots, row_mask, ctx, adapter)
+
+    return compact_mixed if mixed else compact
+
+
+def make_page_copy(cfg: ModelConfig, scfg: ServeConfig):
+    """Copy-on-write primitive: duplicate ONE global pool page in place.
+
+    fn(caches, src, dst) -> caches with page ``dst`` holding a bitwise copy
+    of page ``src`` on every pool leaf (the layer axis is explicit on the
+    stored leaves, so one dynamic slice/update per leaf copies the page at
+    every layer at once). ``src``/``dst`` are traced int32 scalars — one
+    compile serves every CoW admission. Non-pool leaves (positions, block
+    tables) pass through untouched; the engine jits this with the caches
+    donated, so the copy is a page-sized in-place write, never a pool
+    materialization (docs/prefix_cache.md)."""
+    cache_kw = serve_cache_kwargs(cfg, scfg, pool_pages=1)
+    if "page_block" not in cache_kw:
+        raise ValueError("page copy exists only for the paged KV layout")
+    page_axes = cache_page_axes(cfg, scfg.max_seq, **cache_kw)
+
+    def copy_page(caches, src, dst):
+        src = src.astype(jnp.int32)
+        dst = dst.astype(jnp.int32)
+
+        def cp(x, pax):
+            if pax is None:
+                return x
+            page = jax.lax.dynamic_slice_in_dim(x, src, 1, axis=pax)
+            return jax.lax.dynamic_update_slice_in_dim(x, page, dst, axis=pax)
+
+        return jax.tree.map(cp, caches, page_axes)
+
+    return copy_page
+
+
 def init_client_caches(cfg: ModelConfig, n_clients: int, batch: int, max_seq: int,
                        dtype=None, *, window: int = 0, quant: bool = False,
                        page_block: int = 0, pool_pages: int = 0):

@@ -22,10 +22,18 @@ def serving_conservation(eng) -> List[str]:
     errs: List[str] = []
     if getattr(eng, "_paged", False):
         P = eng._pool_pages
+        # shared-prefix pages (docs/prefix_cache.md): a live ref-held page
+        # appears in the content index (with refs >= 1) and in one or more
+        # slots' _slot_shared lists, but in NO free list and NO exclusive
+        # list — it joins the partition identity exactly once, attributed
+        # to the client range it was popped from
+        index = getattr(eng, "_prefix_index", None)
+        page_refs = index.page_refs() if index is not None else {}
         for c in range(eng.n_clients):
             assigned = [p for (cc, s), pages in eng._slot_pages.items()
                         if cc == c for p in pages]
-            have = sorted(eng._free_pages[c] + assigned)
+            shared_live = [p for p in page_refs if c * P <= p < (c + 1) * P]
+            have = sorted(eng._free_pages[c] + assigned + shared_live)
             own = list(range(c * P, (c + 1) * P))
             if have != own:
                 lost = set(own) - set(have)
@@ -42,6 +50,19 @@ def serving_conservation(eng) -> List[str]:
         if sum(eng._resv_of.values()) != sum(eng._reserved):
             errs.append(f"reservation ledger {sum(eng._resv_of.values())} != "
                         f"per-client reserved {sum(eng._reserved)}")
+        # refcount identity: the index's total references == the total
+        # _slot_shared memberships (every holder counted once, no leaked or
+        # phantom refs), and every held page is actually published
+        slot_shared = getattr(eng, "_slot_shared", {})
+        held = [p for pages in slot_shared.values() for p in pages]
+        if sum(page_refs.values()) != len(held):
+            errs.append(f"prefix index refs {sum(page_refs.values())} != "
+                        f"slot_shared memberships {len(held)} "
+                        "(leaked or phantom reference)")
+        for p in held:
+            if p not in page_refs:
+                errs.append(f"slot_shared holds page {p} that the prefix "
+                            "index no longer publishes (use-after-free)")
     # slot ownership <-> per-request slot lists are inverse maps
     owned = {}
     for c in range(eng.n_clients):

@@ -21,6 +21,11 @@ multi-tenant service sees:
                        the admission rolls back atomically and retries.
 * ``ckpt_corrupt``   — a checkpoint file bit-flipped or truncated on disk:
                        CRC validation rejects it; restore falls back.
+* ``ckpt_write``     — the checkpoint WRITE itself fails (ENOSPC/EIO or a
+                       crash mid-write, injected via ``CkptWriteHook``):
+                       no valid new snapshot lands; the previous one stays
+                       newest-valid (last-good wins), and a quarantine
+                       checkpoint failure never blocks retirement.
 
 ``FaultyStream`` wraps a job's data stream and keys its schedule by CALL
 COUNT, not step: a retried step (same ``step`` value, next call) draws a
@@ -43,7 +48,7 @@ import numpy as np
 from repro.faults.health import FatalFault, TransientFault
 
 KINDS = ("nan_batch", "nan_adapter", "stream_error", "stream_end",
-         "alloc_fail", "ckpt_corrupt")
+         "alloc_fail", "ckpt_corrupt", "ckpt_write")
 _STREAM_KINDS = ("nan_batch", "stream_error", "stream_end")
 # request-stream kinds: prompts can't carry a NaN loss mask, so only the
 # delivery faults apply to serving request streams
@@ -63,6 +68,14 @@ class StreamExhausted(Exception):
 class AllocationFault(TransientFault):
     """Injected allocation failure mid-admission (pool/arena exhaustion
     shape). Transient: the admission rolls back and the tenant retries."""
+
+
+class CkptWriteFault(TransientFault):
+    """Injected checkpoint-write IO error (ENOSPC / EIO / crash-mid-write
+    shape). Transient from the engine's point of view: the snapshot that
+    failed to land is simply absent — the previous one stays the newest
+    valid blob on disk, so a later restore falls back to it (last-good
+    wins), and best-effort writers (quarantine checkpoints) swallow it."""
 
 
 class NonFiniteFault(FatalFault):
@@ -149,6 +162,46 @@ class AllocHook:
                 f"injected allocation failure ({point}, attempt {call})")
 
 
+class CkptWriteHook:
+    """Checkpoint-write fault hook, installed via
+    ``checkpoint.set_write_fault_hook`` and consulted by every checkpoint
+    writer BEFORE its payload reaches a final filename. Keyed by WRITE
+    call index (like ``AllocHook`` is keyed by admission attempt). Two
+    failure shapes:
+
+    * ``mode="io_error"`` — raise before any byte lands: the atomic
+      temp-file staging in ``save_engine_state`` / the manifest-last
+      protocol in ``save_checkpoint`` mean NO new snapshot appears.
+    * ``mode="torn"`` — a torn write: leave a truncated frame AT the
+      final engine-blob path (the non-atomic-writer / power-cut shape),
+      then raise. Restore must reject the torn frame and fall back to
+      the last good blob. Leaf-file checkpoints (``frame is None``)
+      degrade to ``io_error`` — their manifest-last protocol already
+      makes a torn write invisible.
+    """
+
+    def __init__(self, at: Iterable[int] = (), mode: str = "io_error"):
+        if mode not in ("io_error", "torn"):
+            raise ValueError(f"unknown ckpt_write mode {mode!r}")
+        self.at = set(at)
+        self.mode = mode
+        self.calls = 0
+        self.fired = 0
+
+    def __call__(self, point: str, path: str, frame) -> None:
+        call = self.calls
+        self.calls += 1
+        if call not in self.at:
+            return
+        self.fired += 1
+        if self.mode == "torn" and frame is not None:
+            with open(path, "wb") as f:
+                f.write(bytes(frame[: max(1, len(frame) // 2)]))
+        raise CkptWriteFault(
+            f"injected checkpoint-write fault ({self.mode}, {point}, "
+            f"write {call}): {path}")
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
     kind: str       # one of KINDS
@@ -212,6 +265,10 @@ class FaultPlan:
     def alloc_schedule(self) -> set:
         """Admission-attempt indices at which ``AllocHook`` fires."""
         return {e.at for e in self.of_kind("alloc_fail")}
+
+    def ckpt_write_schedule(self) -> set:
+        """Checkpoint-write call indices at which ``CkptWriteHook`` fires."""
+        return {e.at for e in self.of_kind("ckpt_write")}
 
 
 # ---------------------------------------------------------------------------

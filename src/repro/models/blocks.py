@@ -137,10 +137,19 @@ def _pick_chunk(S: int, B: int, H: int, T: int, chunk_q: int,
 
 def mha_forward(params, cfg, x, positions, lin: LinearFns, *, causal: bool = True,
                 kv_x: Optional[jnp.ndarray] = None, kv_positions=None,
-                path_prefix: str = "", chunk_q: int = 1024):
+                ext_kv=None, path_prefix: str = "", chunk_q: int = 1024):
     """Full attention over a sequence (training / prefill / encoder / cross-attn).
 
     x [B,S,d]. If kv_x is given this is cross-attention (non-causal over kv_x).
+
+    ``ext_kv`` — optional ``(k, v, positions)`` of ALREADY-PROJECTED (post
+    qk-norm, post-RoPE) external K/V lanes [B,E,K,hd]/[B,E] prepended to
+    this call's own K/V: the suffix-prefill path attends over cached
+    shared-prefix pages without recomputing them (docs/prefix_cache.md).
+    Lanes whose position fails the causal mask (the engine marks unused
+    lanes with a huge position) contribute exact zeros to the softmax, so
+    a suffix prefill over valid ext lanes is bitwise the corresponding
+    rows of a full prefill.
 
     Layout notes (GSPMD-friendliness, DESIGN.md §5): heads are kept *flat*
     [B,S,H,hd] and KV heads are replicated to H via ``jnp.repeat`` (classic
@@ -170,6 +179,12 @@ def mha_forward(params, cfg, x, positions, lin: LinearFns, *, causal: bool = Tru
     if kv_x is None and cfg.rope_theta > 0:  # self-attention uses RoPE (except whisper-style)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, kv_positions, cfg.rope_theta)
+    if ext_kv is not None:   # shared-prefix lanes ride in front, pre-replication
+        ek, ev, epos = ext_kv
+        k = jnp.concatenate([ek.astype(k.dtype), k], axis=1)
+        v = jnp.concatenate([ev.astype(v.dtype), v], axis=1)
+        kv_positions = jnp.concatenate([epos, kv_positions], axis=1)
+        T = k.shape[1]
     if G > 1:   # kv-replication: [B,T,K,hd] -> [B,T,H,hd]
         k = jnp.repeat(k, G, axis=2)
         v = jnp.repeat(v, G, axis=2)
@@ -451,21 +466,31 @@ def _paged_token_write_vmap(axis_size, in_batched, pool, tbl, pos, x, active):
     return out, False
 
 
-def paged_prefill_write(pool, tbl, x, lengths=None):
+def paged_prefill_write(pool, tbl, x, lengths=None, start=None):
     """Scatter prefill rows x [B, S, ...] into the pool through the block
     table, writing ONLY positions < lengths — right-pad positions never
     touch the pool (pages beyond a row's true length stay unallocated,
     unlike the dense path which writes stale pad K/V to be overwritten
-    later). lengths None writes all S positions."""
+    later). lengths None writes all S positions.
+
+    ``start`` [B] int32 (optional) offsets every row's writes by that many
+    LOGICAL positions: token i of x lands at cache position start+i — the
+    suffix-prefill path, which skips a row's shared-prefix pages and only
+    fills from its first non-cached token onward."""
     P, blk = pool.shape[:2]
     B, S = x.shape[:2]
     t = jnp.arange(S)
-    page = jnp.take(tbl, t // blk, axis=1)           # [B, S]
+    if start is None:
+        page = jnp.take(tbl, t // blk, axis=1)       # [B, S]
+        off = jnp.broadcast_to((t % blk)[None, :], (B, S))
+    else:
+        logical = jnp.asarray(start, jnp.int32)[:, None] + t[None, :]
+        page = jnp.take_along_axis(tbl, logical // blk, axis=1, mode="clip")
+        off = logical % blk
     if lengths is not None:
         valid = t[None, :] < jnp.broadcast_to(jnp.asarray(lengths, jnp.int32),
                                               (B,))[:, None]
         page = jnp.where(valid, page, P)             # P is out of bounds
-    off = jnp.broadcast_to((t % blk)[None, :], (B, S))
     return pool.at[page, off].set(x.astype(pool.dtype), mode="drop")
 
 

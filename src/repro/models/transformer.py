@@ -114,9 +114,10 @@ def _apply_prefixes(attn, p_attn, cfg, h, adapter_slice, lin):
 
 
 def _layer_forward(p, cfg: ModelConfig, x, positions, lin: LinearFns, adapter_slice,
-                   *, moe_dispatch: str = "scatter", capacity_factor=None):
+                   *, moe_dispatch: str = "scatter", capacity_factor=None,
+                   ext_kv=None):
     h = blocks.rmsnorm(p["ln1"], x)
-    attn = blocks.mha_forward(p["attn"], cfg, h, positions, lin)
+    attn = blocks.mha_forward(p["attn"], cfg, h, positions, lin, ext_kv=ext_kv)
     attn = _apply_prefixes(attn, p["attn"], cfg, h, adapter_slice, lin)
     x = x + attn
     h = blocks.rmsnorm(p["ln2"], x)
@@ -403,7 +404,7 @@ def decode_step(cfg: ModelConfig, params, cache, token, ctx: LinCtx = DEFAULT_CT
 
 
 def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
-            adapter=None, *, lengths=None):
+            adapter=None, *, lengths=None, starts=None, ext_blocks=0):
     """Prefill: forward over the prompt, filling the KV cache.
 
     Implemented as forward + bulk cache write (projections recomputed per
@@ -422,6 +423,18 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     keeps non-admitted slots' pages untouched). Quantized caches (``k_s``
     leaves) get per-head int8 quantization at capture time, matching what
     decode would have written.
+
+    ``starts`` ([B] int32, paged caches only) makes this a SUFFIX prefill:
+    each row already holds ``starts[b]`` tokens of K/V in the pages its
+    block table names (shared-prefix pages mapped at admission —
+    docs/prefix_cache.md), this call's tokens are logical positions
+    ``starts[b] .. starts[b]+lengths[b]-1``, and the first ``ext_blocks``
+    table entries per row are gathered BEFORE the layer scan and attended
+    to as read-only external K/V lanes. ``ext_blocks`` is static (a jit
+    bucket); rows with fewer cached tokens mask their unused ext lanes by
+    position, so ext_blocks=0 with starts of zeros is the full prefill
+    program. Requires an unquantized paged cache when ext_blocks > 0
+    (shared pages hold exact K/V; int8 scales don't round-trip).
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -430,15 +443,43 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         x = jnp.concatenate([batch["img_embed"].astype(x.dtype), x], axis=1)
     S_total = x.shape[1]
     prefix = S_total - S                          # leading image tokens (VLM)
-    positions = jnp.broadcast_to(jnp.arange(S_total)[None, :], (B, S_total))
     scan_adapters, pre_adapters = _adapter_layers(adapter, cfg)
     tbl = cache.get("block_tbl")
+    if starts is None:
+        positions = jnp.broadcast_to(jnp.arange(S_total)[None, :], (B, S_total))
+    else:
+        if tbl is None:
+            raise ValueError("suffix prefill (starts=) needs a paged cache")
+        starts = jnp.broadcast_to(jnp.asarray(starts, jnp.int32), (B,))
+        positions = starts[:, None] + jnp.arange(S_total, dtype=jnp.int32)[None, :]
     if lengths is None:
         wlen = None                               # write all S_total positions
     else:
         wlen = prefix + jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
 
-    def capture_layer(p, x, lin, ad):
+    epos = None
+    if ext_blocks:
+        if starts is None:
+            raise ValueError("ext_blocks needs starts (suffix prefill)")
+        if "k_s" in cache["layers"]:
+            raise ValueError("shared-prefix prefill needs an unquantized "
+                             "paged cache (int8 K/V doesn't round-trip)")
+        blk = jax.tree.leaves(cache["layers"])[0].shape[2]
+        etbl = tbl[:, :ext_blocks]                # [B, E] page ids
+        lane = jnp.arange(ext_blocks * blk, dtype=jnp.int32)[None, :]
+        # lanes at/after a row's start are not cached prefix: push their
+        # position out of every causal mask (exact-zero softmax weight)
+        epos = jnp.where(lane < starts[:, None], lane, jnp.int32(1 << 30))
+
+        def egather(leaf):    # [L, P, blk, K, hd] -> [L, B, E*blk, K, hd]
+            g = leaf[:, etbl]
+            return g.reshape(g.shape[:1] + (B, ext_blocks * blk) + g.shape[4:])
+
+        def egather_pre(leaf):  # [P, blk, K, hd] -> [B, E*blk, K, hd]
+            g = leaf[etbl]
+            return g.reshape((B, ext_blocks * blk) + g.shape[3:])
+
+    def capture_layer(p, x, lin, ad, ext=None):
         """Run one layer, also returning its K/V for the cache."""
         h = blocks.rmsnorm(p["ln1"], x)
         hd, K = cfg.hd, cfg.n_kv_heads
@@ -448,7 +489,8 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
             k = blocks.head_rmsnorm(p["attn"]["k_norm"], k)
         if cfg.rope_theta > 0:
             k = blocks.apply_rope(k, positions, cfg.rope_theta)
-        x, _ = _layer_forward(p, cfg, x, positions, lin, ad)
+        ext_kv = None if ext is None else (ext[0], ext[1], epos)
+        x, _ = _layer_forward(p, cfg, x, positions, lin, ad, ext_kv=ext_kv)
         return x, k, v
 
     def write_kv(c, k, v, layer_tbl=None):
@@ -463,7 +505,8 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
             parts = (("k", k), ("v", v))
         if tbl is not None:
             return {n: blocks.paged_prefill_write(
-                c[n], tbl if layer_tbl is None else layer_tbl, val, wlen)
+                c[n], tbl if layer_tbl is None else layer_tbl, val, wlen,
+                start=starts)
                     for n, val in parts}
         return {n: jax.lax.dynamic_update_slice(c[n], val.astype(c[n].dtype),
                                                 (0, 0, 0, 0))
@@ -472,7 +515,11 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
     new_pre = []
     for i, p in enumerate(params.get("pre_layers", [])):
         ad = pre_adapters[i] if pre_adapters is not None else None
-        x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
+        ext = None
+        if ext_blocks:
+            cp = cache["pre_layers"][i]
+            ext = (egather_pre(cp["k"]), egather_pre(cp["v"]))
+        x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad, ext)
         new_pre.append(write_kv(cache["pre_layers"][i], k, v))
 
     # Paged pools ride the scan as CARRY with the layer axis fused into the
@@ -490,16 +537,34 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
             lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
             cache["layers"])
 
-        def body(carry, layer_in):
-            x, pools, i = carry
-            p, ad = layer_in
-            x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
-            pools = write_kv(pools, k, v, layer_tbl=tbl + i * Pl)
-            return (x, pools, i + 1), None
+        if ext_blocks:
+            # gather every layer's shared-prefix lanes BEFORE the scan,
+            # from the unfused input leaves, and ride them as xs: the scan
+            # carry (the donated pool) is written by the same dispatch, so
+            # reading prefix pages through it would race the suffix writes
+            ext_k = egather(cache["layers"]["k"])
+            ext_v = egather(cache["layers"]["v"])
+
+            def body(carry, layer_in):
+                x, pools, i = carry
+                p, ad, ek, ev = layer_in
+                x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad, (ek, ev))
+                pools = write_kv(pools, k, v, layer_tbl=tbl + i * Pl)
+                return (x, pools, i + 1), None
+
+            xs = (params["layers"], scan_adapters, ext_k, ext_v)
+        else:
+            def body(carry, layer_in):
+                x, pools, i = carry
+                p, ad = layer_in
+                x, k, v = capture_layer(p, x, ctx.for_layer(ad), ad)
+                pools = write_kv(pools, k, v, layer_tbl=tbl + i * Pl)
+                return (x, pools, i + 1), None
+
+            xs = (params["layers"], scan_adapters)
 
         (x, fused, _), _ = jax.lax.scan(
-            jax.checkpoint(body), (x, fused, jnp.int32(0)),
-            (params["layers"], scan_adapters))
+            jax.checkpoint(body), (x, fused, jnp.int32(0)), xs)
         new_layers = jax.tree.map(lambda t, old: t.reshape(old.shape),
                                   fused, cache["layers"])
     else:
@@ -521,6 +586,8 @@ def prefill(cfg: ModelConfig, params, batch, cache, ctx: LinCtx = DEFAULT_CTX,
         xg = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         logits = lm_head(cfg, params, xg, ctx.top)[:, 0]
         pos = prefix + lengths
+    if starts is not None:      # decode resumes after prefix + this suffix
+        pos = starts + pos
     new_cache = {"layers": new_layers, "pos": pos}
     if tbl is not None:
         new_cache["block_tbl"] = tbl

@@ -76,15 +76,31 @@ Architecture
   execution for the admitted client, scattered into the bank cache under a
   slot mask — the seed engine instead ran a bank-wide prefill, paying C×
   base compute per admitted request.
-* **Ragged shared prefill.** Several same-client admissions in one tick
-  share ONE masked prefill call: each row carries its own prompt
-  right-padded to the longest prompt's jit bucket and its own true
-  ``lengths`` entry (positions, causal mask, last-token logit gather and
-  paged pool-write bounds are all per-row). Byte-identical to sequential
-  admission — rows are independent — while paying one model execution per
-  client per tick instead of one per request. Attention families only
-  (right-padding would pollute recurrent state); ``ragged_prefill=False``
-  restores per-request calls.
+* **Cross-client compacted prefill.** On paged attention engines, ALL of
+  a tick's admissions — across clients and banks — gather into ONE
+  jit-bucketed ragged batch (``symbiosis.make_compact_prefill``, the
+  prefill analogue of the compacted decode tick): each row carries its own
+  prompt right-padded to a shared suffix bucket, its true ``lengths``
+  entry and per-row (client, adapter, bank) ids, so one model execution
+  per TICK replaces one per client per tick. Byte-identical to sequential
+  per-request admission — rows are independent (per-row positions, causal
+  mask, last-token logit gather, length-bounded pool writes). Dense-layout
+  attention engines keep the same-client masked ragged batch (the paged
+  fold needs page pools); recurrent families and ``ragged_prefill=False``
+  keep per-request calls.
+* **Shared-prefix page reuse (docs/prefix_cache.md).** Prompt prefixes
+  are content-hashed block by block into a refcounted host-side index
+  (``serving.prefix_cache.PrefixIndex``): an admission whose prompt
+  prefix was already prefilled under the SAME adapter maps the published
+  read-only pages into its block table (refs++), CoW-copies a matched
+  partial tail page, and prefills only its suffix — the compacted prefill
+  attends to the mapped pages as external K/V lanes. Retirement releases
+  references; a page recycles only at refcount zero. The router is
+  charged only newly-allocated pages. Byte-identical by construction:
+  published pages hold exactly the bytes the row's own prefill would have
+  written (same adapter, same tokens, same positions), asserted against
+  solo serving in tests/test_prefix_cache.py. ``prefix_cache=False``
+  disables reuse; int8-quantized pools opt out automatically.
 * **Tick API.** ``service_tick()`` runs ONE admission+decode+retire round;
   ``run()`` loops it to completion. ``training.SymbiosisEngine``
   interleaves these ticks with a ``FinetuneEngine``'s train steps so
@@ -155,6 +171,7 @@ from repro.core.engine_spec import EngineSpec
 from repro.core.scheduler import ClientSpec, TickPolicy, simulate
 from repro.faults.health import HealthPolicy, HealthRecord, HealthState, classify
 from repro.faults.plan import TransientFault
+from repro.serving.prefix_cache import PrefixIndex, sharable_tokens
 
 # disabled-telemetry span: one shared, reusable null context manager — the
 # tick loop's `with self._span(name)` costs a function call and nothing
@@ -227,6 +244,40 @@ def _jit_compact_decode(cfg, acfg, scfg, mesh=None, probe=False):
         symbiosis.make_compact_decode_step(cfg, acfg, scfg, probe=probe),
         cfg, scfg, mesh),
                    donate_argnums=2)
+
+
+# The prefill analogue of the compacted decode tick (ISSUE 10 tentpole):
+# one jitted program per (row-bucket-independent) ext_blocks value — the
+# row bucket and padded suffix length are ordinary shape-keyed recompiles
+# inside the one builder, while ext_blocks (how many leading block-table
+# entries each row attends to as read-only shared-prefix lanes) must join
+# the builder key because it changes the traced program structure.
+@functools.lru_cache(maxsize=None)
+def _jit_compact_prefill(cfg, acfg, scfg, mesh=None, ext_blocks=0):
+    return jax.jit(_pin_serving(
+        symbiosis.make_compact_prefill(cfg, acfg, scfg, probe=True,
+                                       ext_blocks=ext_blocks),
+        cfg, scfg, mesh),
+                   donate_argnums=2)
+
+
+# Copy-on-write page duplication for shared-prefix tails: one tiny donated
+# dispatch copying a single pool page (every layer's lanes at once — the
+# stored leaves carry an explicit layer axis). src/dst are traced scalars,
+# so all copies share ONE compile.
+@functools.lru_cache(maxsize=None)
+def _jit_page_copy(cfg, scfg, mesh=None):
+    fn = symbiosis.make_page_copy(cfg, scfg)
+    if mesh is not None:
+        from repro.launch import shardings
+        inner = fn
+
+        def fn(caches, src, dst):
+            caches = shardings.serving_cache_constrain(cfg, scfg, mesh, caches)
+            return shardings.serving_cache_constrain(
+                cfg, scfg, mesh, inner(caches, src, dst))
+
+    return jax.jit(fn, donate_argnums=0)
 
 
 @dataclasses.dataclass
@@ -360,6 +411,7 @@ class ServingEngine:
                         max_inflight_per_client: Optional[int] = None,
                         compact_decode: Optional[bool] = None,
                         ragged_prefill: Optional[bool] = None,
+                        prefix_cache: Optional[bool] = None,
                         health_policy: Optional[HealthPolicy] = None,
                         debug: bool = False, fault_hook=None, obs=None):
         if spec.serve is None:
@@ -385,6 +437,7 @@ class ServingEngine:
                     max_inflight_per_client=max_inflight_per_client,
                     compact_decode=compact_decode,
                     ragged_prefill=ragged_prefill,
+                    prefix_cache=prefix_cache,
                     health_policy=health_policy, debug=debug,
                     fault_hook=fault_hook, obs=obs,
                     mesh=spec.mesh, replicate_base=spec.replicate_base,
@@ -399,6 +452,7 @@ class ServingEngine:
                max_inflight_per_client: Optional[int] = None,
                compact_decode: Optional[bool] = None,
                ragged_prefill: Optional[bool] = None,
+               prefix_cache: Optional[bool] = None,
                health_policy: Optional[HealthPolicy] = None,
                debug: bool = False, fault_hook=None, obs=None,
                mesh=None, replicate_base: bool = False,
@@ -508,6 +562,17 @@ class ServingEngine:
                                 self._tbl_oob, np.int32)
             self._tbl_dirty = True
             self._resv_of: Dict[int, int] = {}
+            # shared-prefix page reuse (ISSUE 10, docs/prefix_cache.md):
+            # the content-keyed refcounted index over published prompt-
+            # prefix pages, the per-slot lists of REF-HELD pages (a slot's
+            # table = shared pages first, then its exclusive _slot_pages),
+            # the per-slot suffix start recorded at admission for the tick's
+            # compacted prefill, and the CoW page copies queued for dispatch
+            # just before that prefill runs
+            self._prefix_index = PrefixIndex()
+            self._slot_shared: Dict[tuple, List[int]] = {}
+            self._prefill_start: Dict[tuple, int] = {}
+            self._pending_copies: List[tuple] = []
         self.caches = symbiosis.init_client_caches(
             cfg, self.n_clients, max_batch_per_client, scfg.max_seq, **cache_kw)
         self._place_on_mesh()
@@ -556,6 +621,27 @@ class ServingEngine:
                              "bucket; attention families only (and not the "
                              "bank_prefill ablation)")
         self._ragged = can_ragged if ragged_prefill is None else ragged_prefill
+        # Cross-client compacted prefill (ISSUE 10 tentpole): on paged
+        # attention engines the tick's admissions — ALL clients, ALL banks —
+        # gather into ONE jit-bucketed ragged batch through
+        # symbiosis.make_compact_prefill (the prefill analogue of the
+        # compacted decode tick); the dense layout keeps the same-client
+        # masked ragged path and recurrent families / ablations keep
+        # per-request calls. Shared-prefix page reuse rides on top of the
+        # compacted path: content-matched prompt-prefix pages are mapped at
+        # admission (refcounted, read-only) and only the suffix prefills.
+        # Sharing needs exact K/V bytes, so int8-quantized pools opt out.
+        self._compact_prefill = self._ragged and self._paged
+        can_share = self._compact_prefill and not self._quant
+        if prefix_cache and not can_share:
+            raise ValueError(
+                "prefix_cache needs the compacted prefill path (paged "
+                "attention-family engine, ragged_prefill not disabled) and "
+                "an unquantized pool — int8 K/V doesn't round-trip "
+                "(docs/prefix_cache.md)")
+        self._share_prefix = can_share if prefix_cache is None else prefix_cache
+        self._page_copy = (_jit_page_copy(cfg, scfg, mesh)
+                           if self._share_prefix else None)
         # jit-key bookkeeping for the analysis bucket-coverage pass: the
         # epoch is bumped whenever admit_bank() legitimately changes hot-
         # path shapes, so post-growth compiles aren't read as recompiles
@@ -595,12 +681,19 @@ class ServingEngine:
         self._slots_of: Dict[int, List[int]] = {}
         self._rng: Dict[int, np.random.Generator] = {}
         self._placement: Dict[int, object] = {}
+        # prefill_tokens counts LOGICAL prompt tokens admitted (layout- and
+        # sharing-invariant); prefill_tokens_computed counts the tokens the
+        # model actually ran — under shared-prefix hits only each row's
+        # suffix — so the two diverge exactly by the reused prefix work
         self.stats = {"ticks": 0, "decode_tokens": 0, "prefill_tokens": 0,
                       "batched_clients": 0, "admitted": 0, "prefill_calls": 0,
                       "peak_inflight": 0, "compact_rows": 0, "compact_padded": 0,
                       "ragged_prefill_batches": 0, "faults": 0,
                       "quarantined_requests": 0, "rejected_requests": 0,
-                      "quarantined_clients": 0}
+                      "quarantined_clients": 0, "compact_prefill_batches": 0,
+                      "compact_prefill_rows": 0, "compact_prefill_padded": 0,
+                      "prefill_tokens_computed": 0, "prefix_hits": 0,
+                      "pages_shared": 0, "cow_copies": 0}
         # telemetry (docs/observability.md): obs=None is a hard no-op — the
         # tick loop sees only `is not None` guards plus the shared null
         # span; attached, all instrumentation is host-side (perf_counter at
@@ -787,6 +880,7 @@ class ServingEngine:
         if len(free) < B:
             return None
         ctx_tokens = S + req.max_new_tokens
+        hits = None
         if self._paged:
             # Reserve pages for the FULL context up front (deadlock freedom:
             # a running sequence can always draw its next page) but assign
@@ -794,14 +888,25 @@ class ServingEngine:
             # exist. Admission backpressure = not enough unreserved pages.
             pages_per_row = -(-ctx_tokens // self._blk)
             prompt_pages = -(-S // self._blk)
-            if (len(self._free_pages[c]) - self._reserved[c]
-                    < pages_per_row * B):
+            need = pages_per_row * B
+            if self._share_prefix:
+                # shared-prefix lookup (read-only; refs are taken inside
+                # the transactional block below): content-matched prefix
+                # pages are mapped instead of popped, so backpressure and
+                # the router charge count only NEWLY allocated pages
+                scope = self._prefix_scope(c)
+                hits = [self._prefix_index.lookup(scope, req.prompt[i],
+                                                  self._blk)
+                        for i in range(B)]
+                need -= sum(h.matched_blocks for h in hits)
+            if len(self._free_pages[c]) - self._reserved[c] < need:
                 return None
         placement = None
         if self.router is not None:
-            # charge what the layout pins: whole pages under paging, a full
-            # max_seq-deep dense slot row otherwise
-            alloc_tokens = (pages_per_row * self._blk if self._paged
+            # charge what the layout pins: whole NEWLY-ALLOCATED pages under
+            # paging (shared-prefix pages are already charged to their
+            # publisher), a full max_seq-deep dense slot row otherwise
+            alloc_tokens = (-(-need * self._blk // B) if self._paged
                             else self.scfg.max_seq)
             try:
                 placement = self.router.route(ctx_tokens, B,
@@ -818,21 +923,40 @@ class ServingEngine:
         done_slots: List[int] = []
         tbl_rows = self._tbl[c, slots].copy() if self._paged else None
         wpos_rows = self._wpos[c, slots].copy() if self._paged else None
+        n_copies0 = len(self._pending_copies) if self._paged else 0
         try:
             if self.fault_hook is not None:
                 self.fault_hook("serve_admit", c)
             if self._paged:
-                for s in slots:
+                for i, s in enumerate(slots):
+                    hit = hits[i] if hits is not None else None
+                    shared: List[int] = []
                     pages: List[int] = []
-                    # register BEFORE popping so a mid-pop failure still
-                    # sees every page taken so far in the rollback sweep
+                    # register BEFORE popping/reffing so a mid-flight
+                    # failure still sees every page and reference taken so
+                    # far in the rollback sweep
+                    self._slot_shared[(c, s)] = shared
                     self._slot_pages[(c, s)] = pages
                     done_slots.append(s)
-                    for _ in range(prompt_pages):
+                    if hit is not None:
+                        for d in hit.full_digests:
+                            shared.append(self._prefix_index.ref(d))
+                    for _ in range(prompt_pages - len(shared)):
                         pages.append(self._free_pages[c].pop())
                     self._tbl[c, s, :] = self._tbl_oob
-                    self._tbl[c, s, :prompt_pages] = pages
+                    self._tbl[c, s, :len(shared)] = shared
+                    self._tbl[c, s, len(shared):prompt_pages] = pages
                     self._wpos[c, s] = S
+                    start = 0
+                    if hit is not None:
+                        start = hit.start
+                        if hit.tail_page is not None:
+                            # CoW: the matched partial tail copies into this
+                            # row's first exclusive page before the suffix
+                            # prefill reads it (flushed in _prefill_compact)
+                            self._pending_copies.append(
+                                (hit.tail_page, pages[0]))
+                    self._prefill_start[(c, s)] = start
                 self._resv_of[id(req)] = (pages_per_row - prompt_pages) * B
                 self._reserved[c] += self._resv_of[id(req)]
                 self._tbl_dirty = True
@@ -840,11 +964,18 @@ class ServingEngine:
             # pop() draws from the END of the free list, so extending with
             # each slot's pages reversed — newest slot first — restores the
             # pool's exact order (a retried admission then draws the SAME
-            # pages, keeping the transient-recovery trajectory bitwise)
+            # pages, keeping the transient-recovery trajectory bitwise);
+            # shared-prefix refs drop in the same reverse order (a ref taken
+            # here can't be the last one — the publisher still holds its own)
             for s in reversed(done_slots):
                 self._free_pages[c].extend(
                     reversed(self._slot_pages.pop((c, s))))
+                for p in reversed(self._slot_shared.pop((c, s), [])):
+                    if self._prefix_index.deref(p):
+                        self._free_pages[p // self._pool_pages].append(p)
+                self._prefill_start.pop((c, s), None)
             if self._paged:
+                del self._pending_copies[n_copies0:]
                 self._tbl[c, slots] = tbl_rows
                 self._wpos[c, slots] = wpos_rows
                 resv = self._resv_of.pop(id(req), None)
@@ -860,6 +991,20 @@ class ServingEngine:
         for s in slots:
             self._slot_owner[c][s] = req
         req.admit_t = time.perf_counter()
+        if hits is not None:
+            n_hit = sum(1 for h in hits if h.start > 0)
+            if n_hit:
+                n_shared = sum(h.matched_blocks for h in hits)
+                n_cow = sum(1 for h in hits if h.tail_page is not None)
+                self.stats["prefix_hits"] += n_hit
+                self.stats["pages_shared"] += n_shared
+                self.stats["cow_copies"] += n_cow
+                if self._obs is not None:
+                    m = self._obs.metrics
+                    m.counter("prefix_cache_hits_total", client=c).inc(n_hit)
+                    m.counter("pages_shared", client=c).inc(n_shared)
+                    if n_cow:
+                        m.counter("cow_copies_total", client=c).inc(n_cow)
         if self._obs is not None:
             m = self._obs.metrics
             m.histogram("serve_queue_wait_seconds", client=c).observe(
@@ -999,13 +1144,22 @@ class ServingEngine:
         self.stats["admitted"] += 1
 
     def _prefill_admitted(self, newly: List[tuple]):
-        """Prefill this tick's admissions. With ``ragged_prefill`` (default
-        on attention families) the same client's admissions share ONE
-        masked prefill call — each row carries its own prompt and true
-        length — instead of one call per request; other families and the
-        ``bank_prefill`` ablation keep per-request calls. Byte-identical to
-        sequential admission: prefill rows are independent (per-row causal
-        attention, length-bounded writes) and the slot masks are disjoint."""
+        """Prefill this tick's admissions through ONE of three paths:
+
+        * paged attention engines (the default): the CROSS-CLIENT compacted
+          prefill — every admitted row this tick, across clients and banks,
+          in one jit-bucketed dispatch (``_prefill_compact``), shared-prefix
+          rows prefilling only their suffix;
+        * dense-layout attention engines with ``ragged_prefill``: the
+          same-client masked ragged batch (ISSUE 4) — the paged fold isn't
+          available without page pools;
+        * recurrent families, ``ragged_prefill=False`` and the
+          ``bank_prefill`` ablation: one masked call per request.
+
+        All three are byte-identical per row: rows are independent (per-row
+        causal attention, length-bounded writes, disjoint slot masks) —
+        asserted across paths in tests/test_serving_engine.py and
+        tests/test_prefix_cache.py."""
         if not newly:
             return
         if not self._ragged:
@@ -1014,6 +1168,9 @@ class ServingEngine:
                           if self.bank_prefill
                           else self._prefill_request(req, slots))
                 self._finish_admit(req, slots, logits)
+            return
+        if self._compact_prefill:
+            self._prefill_compact(newly)
             return
         by_client: Dict[int, List[tuple]] = {}
         for req, slots in newly:
@@ -1055,6 +1212,142 @@ class ServingEngine:
         self.stats["prefill_calls"] += 1
         self.stats["ragged_prefill_batches"] += 1
         return np.asarray(logits)
+
+    def _prefill_compact(self, newly: List[tuple]):
+        """ONE compacted prefill for the whole tick's admissions (ISSUE 10
+        tentpole): gather every admitted (client, slot) row — cross-client,
+        cross-bank — into a jit-bucketed ragged batch and scatter the
+        results back under the row mask, the exact prefill analogue of
+        ``_decode_tick_compact``. Each row carries the suffix start recorded
+        at admission; rows with shared-prefix pages attend to their first
+        ``ext_blocks`` block-table entries as read-only prefix lanes and
+        prefill only their suffix. Queued CoW tail copies flush first, so
+        every prefix page a row reads already holds its final bytes."""
+        with self._span("prefill_compact_gather"):
+            rows = []                        # (req, slot, row-in-request)
+            for req, slots in newly:
+                for i, s in enumerate(slots):
+                    rows.append((req, s, i))
+            n = len(rows)
+            nb = self._row_bucket(n)
+            starts = np.zeros((nb,), np.int32)
+            suffix = np.zeros((n,), np.int32)
+            for r, (req, s, i) in enumerate(rows):
+                starts[r] = self._prefill_start.pop((req.client_id, s), 0)
+                suffix[r] = req.prompt.shape[1] - starts[r]
+            S_pad = self._bucket(int(suffix.max()))
+            ext = self._ext_bucket(
+                int(max(-(-int(starts[r]) // self._blk) for r in range(n))))
+            toks = np.zeros((nb, S_pad), np.int32)
+            lengths = np.zeros((nb,), np.int32)
+            clients = np.zeros((nb,), np.int32)
+            slot_ids = np.zeros((nb,), np.int32)
+            rmask = np.zeros((nb,), bool)
+            for r, (req, s, i) in enumerate(rows):
+                toks[r, :suffix[r]] = req.prompt[i, starts[r]:]
+                lengths[r] = suffix[r]
+                clients[r] = req.client_id
+                slot_ids[r] = s
+                rmask[r] = True
+                self.stats["prefill_tokens"] += int(req.prompt.shape[1])
+                self.stats["prefill_tokens_computed"] += int(suffix[r])
+        self._flush_page_copies()
+        self._sync_tbl()
+        fn = _jit_compact_prefill(
+            self.cfg, self.bank_cfgs if self._mixed else self.bank_cfgs[0],
+            self.scfg, self.mesh, ext)
+        key = (nb, S_pad, ext)
+        if self._mixed:
+            with self._span("jit_dispatch"), self._mesh_ctx():
+                logits, finite, self.caches = tracecount.dispatch(
+                    self, "compact_prefill", key, fn,
+                    self.base, tuple(self.banks), self.caches,
+                    jnp.asarray(toks), jnp.asarray(lengths),
+                    jnp.asarray(starts), jnp.asarray(clients),
+                    jnp.asarray(slot_ids),
+                    jnp.asarray(self._method_of[clients]),
+                    jnp.asarray(self._local_of[clients]),
+                    jnp.asarray(rmask))
+        else:
+            with self._span("jit_dispatch"), self._mesh_ctx():
+                logits, finite, self.caches = tracecount.dispatch(
+                    self, "compact_prefill", key, fn,
+                    self.base, self.banks[0], self.caches,
+                    jnp.asarray(toks), jnp.asarray(lengths),
+                    jnp.asarray(starts), jnp.asarray(clients),
+                    jnp.asarray(slot_ids), jnp.asarray(rmask))
+        with self._span("device_sync"):
+            logits = np.asarray(logits)
+        self.stats["prefill_calls"] += 1
+        self.stats["compact_prefill_batches"] += 1
+        self.stats["compact_prefill_rows"] += n
+        self.stats["compact_prefill_padded"] += nb - n
+        if self._obs is not None:
+            h = self._obs.metrics.histogram("admission_prefill_tokens")
+            for L in suffix:
+                h.observe(float(L))
+        rows_of: Dict[int, List[int]] = {}
+        for r, (req, s, i) in enumerate(rows):
+            rows_of.setdefault(id(req), []).append(r)
+        for req, slots in newly:
+            self._finish_admit(req, slots, logits[rows_of[id(req)]])
+            self._publish_prefix(req, slots)
+
+    def _publish_prefix(self, req: Request, slots: List[int]):
+        """Register a freshly prefilled request's prompt-prefix pages in the
+        content index (docs/prefix_cache.md). Published full blocks move
+        from the slot's exclusive list to its ref-held shared list (refs=1
+        — the publisher's own reference); a partially-filled tail page
+        stays exclusive but is indexed for copy-on-write hits. Duplicate
+        digests (content already published) are skipped inside the index,
+        so re-publishing a hit row only extends the chain with its new
+        blocks."""
+        if not self._share_prefix or req.status != "ok":
+            return
+        c = req.client_id
+        scope = self._prefix_scope(c)
+        for i, s in enumerate(slots):
+            shared = self._slot_shared[(c, s)]
+            pages = self._slot_pages[(c, s)]
+            took = self._prefix_index.publish(
+                scope, req.prompt[i], self._blk, shared + pages, (c, s))
+            for p in took:      # block order is preserved on both lists
+                pages.remove(p)
+                shared.append(p)
+
+    def _prefix_scope(self, c: int) -> bytes:
+        """Digest scope for client ``c``'s prefix pages: the adapter
+        identity. ANY adapter changes deeper layers' K/V — a layer-l delta
+        shifts the residual stream feeding layer l+1's K/V projections —
+        so pages are sharable only between prompts served by the same
+        (bank, local adapter) pair, i.e. the same client or a client
+        admitted over identical adapter rows."""
+        return b"%d:%d" % (int(self._method_of[c]), int(self._local_of[c]))
+
+    def _ext_bucket(self, e: int) -> int:
+        """Jit-bucketed ext_blocks: 0 stays 0 (compiles the exact
+        no-sharing program), otherwise the next power of two capped at the
+        per-slot table depth."""
+        if e <= 0:
+            return 0
+        b = 1
+        while b < e:
+            b *= 2
+        return min(b, self._n_blocks)
+
+    def _flush_page_copies(self):
+        """Dispatch the admission-queued CoW page copies. One donated
+        jitted program (src/dst are traced scalars) copies a single pool
+        page across every layer's lanes; copies run before the compacted
+        prefill so shared tails are in place when the suffix reads them."""
+        if not self._pending_copies:
+            return
+        copies, self._pending_copies = self._pending_copies, []
+        with self._mesh_ctx():
+            for src, dst in copies:
+                self.caches = tracecount.dispatch(
+                    self, "page_copy", (), self._page_copy,
+                    self.caches, jnp.int32(src), jnp.int32(dst))
 
     def _bucket(self, S: int) -> int:
         """Jit-bucketed prompt length. Attention families tolerate right-
@@ -1176,7 +1469,11 @@ class ServingEngine:
         w = int(self._wpos[c, s])
         bi = w // self._blk
         pages = self._slot_pages[(c, s)]
-        if bi >= len(pages):
+        # coverage = ref-held shared prefix pages (block-table front) plus
+        # exclusive pages; growth pages are always exclusive — a decode
+        # write never lands on a shared page (its block is already full)
+        covered = len(self._slot_shared.get((c, s), ())) + len(pages)
+        if bi >= covered:
             page = self._free_pages[c].pop()
             pages.append(page)
             self._tbl[c, s, bi] = page
@@ -1397,8 +1694,20 @@ class ServingEngine:
             if self._paged:
                 # pages (and any unused reservation) return to the pool for
                 # the next admit; the table rows are remapped at admission,
-                # so stale entries can never be read through
+                # so stale entries can never be read through. Shared-prefix
+                # pages RELEASE A REFERENCE instead of freeing: the page
+                # recycles only when the last holder retires, and the
+                # slot's tail-page index entries die with it (the tail page
+                # itself is exclusive and frees normally)
                 self._free_pages[c].extend(self._slot_pages.pop((c, s)))
+                if self._share_prefix:
+                    self._prefix_index.drop_tail((c, s))
+                    for p in self._slot_shared.pop((c, s), []):
+                        if self._prefix_index.deref(p):
+                            self._free_pages[p // self._pool_pages].append(p)
+                else:
+                    self._slot_shared.pop((c, s), None)
+                self._prefill_start.pop((c, s), None)
                 self._wpos[c, s] = 0
         if self._paged:
             self._reserved[c] -= self._resv_of.pop(id(req), 0)
@@ -1491,6 +1800,9 @@ class ServingEngine:
                 "tbl": self._tbl.copy(),
                 "slot_pages": {k: list(v)
                                for k, v in self._slot_pages.items()},
+                "slot_shared": {k: list(v)
+                                for k, v in self._slot_shared.items()},
+                "prefix_index": self._prefix_index.state(),
             }
         return state
 
@@ -1569,6 +1881,10 @@ class ServingEngine:
             self._tbl = a["tbl"].copy()
             self._slot_pages = {tuple(k): list(v)
                                 for k, v in a["slot_pages"].items()}
+            self._slot_shared = {tuple(k): list(v)
+                                 for k, v in a.get("slot_shared", {}).items()}
+            self._prefix_index = PrefixIndex.from_state(
+                a.get("prefix_index", {}))
             self._tbl_dirty = True      # re-push the restored table mirror
 
     # ------------------------------------------------------------------
@@ -1730,6 +2046,28 @@ class ServingEngine:
             d.declare("decode", {()})
         if self._compact_step is not None:
             d.declare("compact_decode", set(self._buckets))
+        if self._compact_prefill:
+            # the compacted cross-client prefill compiles (row bucket,
+            # suffix bucket, ext bucket) triples — every axis a closed set.
+            # ext buckets beyond 0 exist only with shared-prefix reuse on.
+            sbuckets = set()
+            b = 8
+            while True:
+                sbuckets.add(min(b, self.scfg.max_seq))
+                if b >= self.scfg.max_seq:
+                    break
+                b *= 2
+            ebuckets = {0}
+            if self._share_prefix:
+                e = 1
+                while e < self._n_blocks:
+                    ebuckets.add(e)
+                    e *= 2
+                ebuckets.add(self._n_blocks)
+            d.declare("compact_prefill", {(nb, s, e) for nb in self._buckets
+                                          for s in sbuckets for e in ebuckets})
+            if self._share_prefix:
+                d.declare("page_copy", {()})
         return d
 
     # ------------------------------------------------------------------

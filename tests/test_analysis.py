@@ -130,6 +130,45 @@ def test_poolcopy_reshape_alias_still_protected(decode_target):
     assert any(v.detail.get("primitive") == "add" for v in res.violations)
 
 
+# ------------------------------------------------ poolcopy: compact prefill
+@pytest.fixture(scope="module")
+def prefill_target():
+    return next(t for t in serving_targets(DENSE)
+                if t.name == "compact_prefill[dense-paged]")
+
+
+def test_poolcopy_clean_on_compact_prefill(prefill_target):
+    t = prefill_target
+    res = jaxpr_passes.check_pool_copies(t.jaxpr(), t.protected_sigs,
+                                         target=t.name)
+    assert res.ok, [str(v) for v in res.violations]
+    assert res.checked["inplace_writes"] >= 1
+
+
+def test_poolcopy_mutation_compact_prefill_fires(prefill_target):
+    t = prefill_target
+
+    def bad(*args):            # mutation: full-pool copy after the prefill
+        *out, caches = t.fn(*args)
+        return (*out, jax.tree.map(lambda x: x * jnp.asarray(2, x.dtype),
+                                   caches))
+
+    jx = jax.make_jaxpr(bad)(*t.args)
+    res = jaxpr_passes.check_pool_copies(jx, t.protected_sigs,
+                                         target="mutated")
+    assert not res.ok
+    assert any("materializes a pool-sized" in v.message
+               for v in res.violations)
+
+
+def test_donation_clean_on_compact_prefill(prefill_target):
+    t = prefill_target
+    hlo = aliasing.compile_text(t.fn, t.args, t.donate_argnums)
+    res = aliasing.check_donation(hlo, t.donated, target=t.name,
+                                  frozen_leaves=t.frozen)
+    assert res.ok, [str(v) for v in res.violations]
+
+
 # --------------------------------------------------------------- moe remat
 def test_moe_remat_clean_on_real_step(moe_train_target):
     res = jaxpr_passes.check_moe_checkpointed(moe_train_target.jaxpr(),

@@ -323,6 +323,71 @@ def test_engine_checkpoint_crc_last_good_fallback(tmp_path):
         load_engine_state(d)                            # nothing valid left
 
 
+def test_ckpt_write_fault_last_good_blob_wins(tmp_path):
+    """ckpt_write kind (PR 8 residual): an injected IO error or torn write
+    during ``save_engine_state`` never disturbs the last good blob."""
+    import os
+    from repro.checkpoint import set_write_fault_hook
+    from repro.faults.plan import CkptWriteFault, CkptWriteHook, FaultPlan
+
+    d = str(tmp_path)
+    save_engine_state(d, {"v": 0})                       # seq 0, good
+    # ENOSPC/EIO shape: the write raises before any byte lands
+    set_write_fault_hook(CkptWriteHook(at={0}))
+    try:
+        with pytest.raises(CkptWriteFault):
+            save_engine_state(d, {"v": 1})
+    finally:
+        set_write_fault_hook(None)
+    assert load_engine_state(d) == (0, {"v": 0})
+    # torn-write shape: a truncated frame lands AT the final path...
+    hook = CkptWriteHook(at={0}, mode="torn")
+    set_write_fault_hook(hook)
+    try:
+        with pytest.raises(CkptWriteFault):
+            save_engine_state(d, {"v": 2})
+    finally:
+        set_write_fault_hook(None)
+    assert hook.fired == 1
+    assert os.path.exists(os.path.join(d, "engine_00000001.ckpt"))
+    # ...and restore rejects it, falling back to the last good blob
+    assert load_engine_state(d) == (0, {"v": 0})
+    # a later clean write becomes the newest valid snapshot again
+    save_engine_state(d, {"v": 3})
+    assert load_engine_state(d)[1] == {"v": 3}
+    # the kind is plannable like every other
+    plan = FaultPlan(0, n_tenants=2, n_faults=7)
+    assert plan.counts().get("ckpt_write") == 1
+    assert plan.ckpt_write_schedule()
+
+
+def test_quarantine_ckpt_write_fault_does_not_block_retirement(key, tmp_path):
+    """A failing quarantine checkpoint is best-effort by contract: the
+    victim still retires (pages + charges released), the failure is
+    recorded on its health history, and survivors are untouched."""
+    from repro.checkpoint import set_write_fault_hook
+    from repro.faults.plan import CkptWriteHook
+
+    cfg = tiny()
+    base, _, _ = symbiosis.init_system(cfg, LORA, 2, key)
+    eng = FinetuneEngine(cfg, base, fcfg=FinetuneConfig(max_jobs=2),
+                         quarantine_dir=str(tmp_path), debug=True)
+    eng.submit(_job(cfg, 0, schedule={1: "nan_batch"}))   # victim
+    eng.submit(_job(cfg, 1, schedule={}))                 # survivor
+    hook = CkptWriteHook(at=set(range(64)))               # every write fails
+    set_write_fault_hook(hook)
+    try:
+        done = {j.name: j for j in eng.run()}
+    finally:
+        set_write_fault_hook(None)
+    assert done["j0"].status == "quarantined"
+    assert done["j1"].status == "finished"
+    assert hook.fired >= 1
+    assert any("quarantine checkpoint failed" in reason
+               for _, _, reason in done["j0"].health.history)
+    assert not check_conservation(eng)
+
+
 def test_finetune_kill_restore_bitwise(key):
     cfg = tiny()
     base, _, _ = symbiosis.init_system(cfg, LORA, 2, key)

@@ -1,0 +1,458 @@
+"""Cross-client compacted prefill + refcounted shared-prefix pages (ISSUE 10).
+
+Two contracts under test:
+
+1. **Byte identity.** Shared-prefix page reuse is an allocator trick, not a
+   numerics change: every request's greedy output with sharing on is
+   byte-identical to the same workload with ``prefix_cache=False`` and to
+   solo serving — across hit / miss / partial-prefix / CoW-divergence /
+   retire-and-reuse lifecycles, adapter methods, and tick policies.
+2. **Refcount hygiene.** The content index's references always equal the
+   slots' shared-page memberships (no leak, no double free, no
+   use-after-free) — audited after every tick via ``debug=True`` and
+   asserted directly on the ``PrefixIndex`` unit surface.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import AdapterConfig, ServeConfig, DENSE
+from repro.core import adapters as ad_lib
+from repro.core import symbiosis
+from repro.faults.audit import check_conservation
+from repro.models import get_model
+from repro.obs import Obs
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.prefix_cache import (PrefixIndex, chain_digests,
+                                        sharable_tokens)
+from conftest import tiny
+
+BLK = 8
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex unit surface
+# ---------------------------------------------------------------------------
+
+class TestPrefixIndex:
+    def test_sharable_tokens_last_token_never_shared(self):
+        # the consumer must prefill at least its final token
+        assert sharable_tokens(0, BLK) == (0, 0)
+        assert sharable_tokens(1, BLK) == (0, 0)
+        assert sharable_tokens(8, BLK) == (0, 7)    # exact block: 7-token tail
+        assert sharable_tokens(9, BLK) == (1, 0)
+        assert sharable_tokens(17, BLK) == (2, 0)
+        assert sharable_tokens(14, BLK) == (1, 5)
+
+    def test_chain_digests_prefix_property_and_scope(self):
+        rng = np.random.default_rng(0)
+        t = rng.integers(1, 100, 25).astype(np.int32)
+        long = chain_digests(b"0:0", t, BLK)             # f=3, r=0
+        short = chain_digests(b"0:0", t[:17], BLK)       # f=2, r=0
+        assert long[:2] == short
+        # a different scope (bank, local adapter) shifts every digest
+        other = chain_digests(b"0:1", t, BLK)
+        assert all(a != b for a, b in zip(long, other))
+        # a divergent token in block 0 changes block 1's digest too (chained)
+        t2 = t.copy()
+        t2[3] += 1
+        assert chain_digests(b"0:0", t2, BLK)[1] != long[1]
+
+    def test_publish_lookup_full_and_partial(self):
+        rng = np.random.default_rng(1)
+        t = rng.integers(1, 100, 17).astype(np.int32)    # f=2, r=0
+        idx = PrefixIndex()
+        took = idx.publish(b"0:0", t, BLK, [10, 11, 12], (0, 0))
+        assert took == [10, 11]                          # page 12 unshared
+        hit = idx.lookup(b"0:0", t, BLK)
+        assert hit.full_pages == [10, 11] and hit.start == 16
+        assert hit.tail_page is None
+        # partial prefix: only block 0 matches
+        t2 = t.copy()
+        t2[9] += 1
+        hit2 = idx.lookup(b"0:0", t2, BLK)
+        assert hit2.full_pages == [10] and hit2.start == 8
+        # different scope: no match at all
+        assert idx.lookup(b"1:0", t, BLK).matched_blocks == 0
+
+    def test_tail_entry_cow_semantics(self):
+        rng = np.random.default_rng(2)
+        t = rng.integers(1, 100, 14).astype(np.int32)    # f=1, r=5
+        idx = PrefixIndex()
+        took = idx.publish(b"0:0", t, BLK, [3, 4], (0, 0))
+        assert took == [3]                               # tail page 4: refs=0
+        hit = idx.lookup(b"0:0", t, BLK)
+        assert hit.full_pages == [3]
+        assert hit.tail_page == 4 and hit.tail_tokens == 5 and hit.start == 13
+        # a prompt agreeing on fewer tail tokens does NOT hit the tail
+        t2 = t.copy()
+        t2[11] += 1
+        hit2 = idx.lookup(b"0:0", t2, BLK)
+        assert hit2.full_pages == [3] and hit2.tail_page is None
+        # tails are never ref-held
+        tail_digest = [d for d, ref in zip(
+            chain_digests(b"0:0", t, BLK), [False, True]) if ref]
+        with pytest.raises(ValueError):
+            idx.ref(tail_digest[0])
+        # the publisher retires: tail invalidated, full block survives
+        idx.drop_tail((0, 0))
+        assert idx.lookup(b"0:0", t, BLK).tail_page is None
+        assert idx.lookup(b"0:0", t, BLK).full_pages == [3]
+
+    def test_refcount_protocol_and_double_free(self):
+        rng = np.random.default_rng(3)
+        t = rng.integers(1, 100, 9).astype(np.int32)     # f=1, r=0
+        idx = PrefixIndex()
+        (d,) = chain_digests(b"0:0", t, BLK)
+        idx.publish(b"0:0", t, BLK, [7, 8], (0, 0))      # refs=1 (publisher)
+        assert idx.ref(d) == 7                           # refs=2 (consumer)
+        assert idx.page_refs() == {7: 2}
+        assert idx.deref(7) is False                     # publisher lets go
+        assert idx.deref(7) is True                      # last ref: recycle
+        with pytest.raises(KeyError):
+            idx.deref(7)                                 # no longer published
+        # a zero-ref entry surviving in the index (the bug a double free
+        # regression would produce) must raise, never go negative
+        from repro.serving.prefix_cache import _Entry
+        idx._entries[d] = _Entry(page=7, refs=0, tail=0, owner=(0, 0))
+        idx._by_page[7] = d
+        with pytest.raises(RuntimeError, match="double free"):
+            idx.deref(7)
+
+    def test_duplicate_publish_keeps_first(self):
+        rng = np.random.default_rng(4)
+        t = rng.integers(1, 100, 9).astype(np.int32)
+        idx = PrefixIndex()
+        assert idx.publish(b"0:0", t, BLK, [1, 2], (0, 0)) == [1]
+        # a second slot prefilled the same content before looking up: the
+        # first entry wins, the second slot keeps its page exclusive
+        assert idx.publish(b"0:0", t, BLK, [5, 6], (0, 1)) == []
+        assert idx.page_refs() == {1: 1}
+
+    def test_state_round_trip(self):
+        rng = np.random.default_rng(5)
+        t = rng.integers(1, 100, 14).astype(np.int32)
+        idx = PrefixIndex()
+        idx.publish(b"0:0", t, BLK, [3, 4], (0, 0))
+        (d, _tail) = chain_digests(b"0:0", t, BLK)
+        idx.ref(d)
+        clone = PrefixIndex.from_state(idx.state())
+        assert clone.page_refs() == idx.page_refs() == {3: 2}
+        assert clone.lookup(b"0:0", t, BLK).tail_page == 4
+        assert len(clone) == len(idx)
+
+
+# ---------------------------------------------------------------------------
+# engine-level byte identity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def paged_system(key, lora_cfg):
+    cfg = tiny(DENSE)
+    scfg = ServeConfig(n_clients=2, max_seq=48, page_block=BLK)
+    base, bank, _ = symbiosis.init_system(cfg, lora_cfg, 2, key)
+    return cfg, scfg, base, bank
+
+
+def _engine(cfg, scfg, base, bank, lora_cfg, **kw):
+    kw.setdefault("max_batch_per_client", 2)
+    kw.setdefault("debug", True)           # conservation audit every tick
+    return ServingEngine(cfg, lora_cfg, scfg, base, bank, **kw)
+
+
+def _template_reqs(cfg, rng, *, n=4, tpl_len=16, arrive_every=2, max_new=3,
+                   first_max_new=None):
+    """n single-row requests from client 0 sharing one tpl_len-token
+    template, each with a distinct suffix token, arriving staggered so
+    later ones hit what earlier ones published. The index recycles pages
+    when the LAST holder retires (strict refcounting), so the first
+    request defaults to decoding long enough to still be live when the
+    final arrival is admitted."""
+    if first_max_new is None:
+        first_max_new = max_new + arrive_every * n
+    tpl = rng.integers(1, cfg.vocab, tpl_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        prompt = np.concatenate([tpl, [np.int32(1 + i)]])[None, :]
+        reqs.append(Request(client_id=0, prompt=prompt,
+                            max_new_tokens=first_max_new if i == 0 else max_new,
+                            arrive_tick=i * arrive_every))
+    return reqs
+
+
+def _run(eng, reqs):
+    for r in reqs:
+        eng.submit(Request(client_id=r.client_id, prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens,
+                           sampling=r.sampling, arrive_tick=r.arrive_tick))
+    done = eng.run()
+    assert all(r.status == "ok" for r in done)
+    return {r.prompt.tobytes(): r.generated for r in done}
+
+
+class TestSharedPrefixByteIdentity:
+    @pytest.mark.parametrize("policy",
+                             ["lockstep", "nolockstep", "opportunistic"])
+    def test_hit_matches_nocache_every_policy(self, paged_system, lora_cfg,
+                                              policy):
+        cfg, scfg, base, bank = paged_system
+        rng = np.random.default_rng(7)
+        reqs = _template_reqs(cfg, rng)
+        on = _engine(cfg, scfg, base, bank, lora_cfg, policy=policy)
+        off = _engine(cfg, scfg, base, bank, lora_cfg, policy=policy,
+                      prefix_cache=False)
+        got = _run(on, reqs)
+        ref = _run(off, reqs)
+        assert on._share_prefix and not off._share_prefix
+        assert set(got) == set(ref)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+        assert off.stats["prefix_hits"] == 0
+        assert on.stats["prefill_tokens"] == off.stats["prefill_tokens"]
+        if policy != "lockstep":
+            # lockstep retires whole batches before admitting the next, so
+            # strict refcounting leaves nothing to hit — identity still holds
+            assert on.stats["prefix_hits"] >= 1
+            assert on.stats["pages_shared"] >= 2      # two template blocks
+            # suffix-only prefill actually saved compute
+            assert (on.stats["prefill_tokens_computed"]
+                    < off.stats["prefill_tokens_computed"])
+
+    def test_cow_divergence_matches(self, paged_system, lora_cfg):
+        """Prompts agreeing on a full block + 5 tail tokens: the hit copies
+        the publisher's tail page and overwrites from the divergence."""
+        cfg, scfg, base, bank = paged_system
+        rng = np.random.default_rng(11)
+        tpl = rng.integers(1, cfg.vocab, 13).astype(np.int32)   # f=1, r=5
+        reqs = []
+        for i in range(3):
+            prompt = np.concatenate([tpl, [np.int32(1 + i)]])[None, :]
+            reqs.append(Request(client_id=0, prompt=prompt,
+                                max_new_tokens=10 if i == 0 else 3,
+                                arrive_tick=2 * i))
+        on = _engine(cfg, scfg, base, bank, lora_cfg)
+        off = _engine(cfg, scfg, base, bank, lora_cfg, prefix_cache=False)
+        got, ref = _run(on, reqs), _run(off, reqs)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+        assert on.stats["cow_copies"] >= 1
+        assert on.stats["prefix_hits"] >= 1
+
+    def test_miss_is_invisible(self, paged_system, lora_cfg):
+        cfg, scfg, base, bank = paged_system
+        rng = np.random.default_rng(13)
+        reqs = [Request(client_id=c, max_new_tokens=3, arrive_tick=2 * i,
+                        prompt=rng.integers(1, cfg.vocab,
+                                            (1, 10 + i)).astype(np.int32))
+                for i, c in enumerate([0, 1, 0, 1])]
+        on = _engine(cfg, scfg, base, bank, lora_cfg)
+        off = _engine(cfg, scfg, base, bank, lora_cfg, prefix_cache=False)
+        got, ref = _run(on, reqs), _run(off, reqs)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+        assert on.stats["prefix_hits"] == 0
+        assert on.stats["prefill_tokens_computed"] == \
+            off.stats["prefill_tokens_computed"]
+
+    def test_refcounted_retire_and_reuse(self, paged_system, lora_cfg):
+        """Publisher retires while a consumer still decodes (refs keep the
+        pages); after the last holder retires the pages recycle and a
+        fresh template run misses cleanly — all byte-identical and
+        conservation-audited every tick (debug=True)."""
+        cfg, scfg, base, bank = paged_system
+        rng = np.random.default_rng(17)
+        tpl = rng.integers(1, cfg.vocab, 16).astype(np.int32)
+
+        def req(i, max_new, at):
+            return Request(client_id=0, max_new_tokens=max_new,
+                           arrive_tick=at,
+                           prompt=np.concatenate([tpl,
+                                                  [np.int32(1 + i)]])[None, :])
+        # A publishes and retires first; B hits and outlives A (its refs
+        # keep the template pages); C hits via B's refs after A is gone
+        reqs = [req(0, 4, 0), req(1, 12, 1), req(2, 3, 7)]
+        on = _engine(cfg, scfg, base, bank, lora_cfg)
+        off = _engine(cfg, scfg, base, bank, lora_cfg, prefix_cache=False)
+        got, ref = _run(on, reqs), _run(off, reqs)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+        assert on.stats["prefix_hits"] >= 2       # B, and C after A retired
+        # everything retired: no refs survive, every page back in the pool
+        assert on._prefix_index.page_refs() == {}
+        assert not on._slot_shared
+        assert not check_conservation(on)
+        # the template's pages were recycled — a new run starts cold
+        late = [Request(client_id=0, prompt=reqs[0].prompt.copy(),
+                        max_new_tokens=reqs[0].max_new_tokens)]
+        hits_before = on.stats["prefix_hits"]
+        got2 = _run(on, late)
+        np.testing.assert_array_equal(got2[reqs[0].prompt.tobytes()],
+                                      ref[reqs[0].prompt.tobytes()])
+        assert on.stats["prefix_hits"] == hits_before
+
+    def test_matches_solo_serving(self, paged_system, lora_cfg):
+        """The strongest oracle: each templated request equals serving it
+        ALONE through a fresh engine (nothing published, nothing shared)."""
+        cfg, scfg, base, bank = paged_system
+        rng = np.random.default_rng(19)
+        reqs = _template_reqs(cfg, rng, n=3)
+        on = _engine(cfg, scfg, base, bank, lora_cfg)
+        got = _run(on, reqs)
+        assert on.stats["prefix_hits"] >= 1
+        for r in reqs:
+            solo = _engine(cfg, scfg, base, bank, lora_cfg)
+            solo.submit(Request(client_id=0, prompt=r.prompt.copy(),
+                                max_new_tokens=r.max_new_tokens))
+            (done,) = solo.run()
+            np.testing.assert_array_equal(got[r.prompt.tobytes()],
+                                          done.generated)
+
+    def test_engine_state_round_trip_with_live_shared_pages(
+            self, paged_system, lora_cfg):
+        cfg, scfg, base, bank = paged_system
+        rng = np.random.default_rng(23)
+        reqs = _template_reqs(cfg, rng, n=3, max_new=6, arrive_every=2)
+        ref_eng = _engine(cfg, scfg, base, bank, lora_cfg)
+        ref = _run(ref_eng, reqs)
+
+        eng = _engine(cfg, scfg, base, bank, lora_cfg)
+        for r in reqs:
+            eng.submit(Request(client_id=0, prompt=r.prompt.copy(),
+                               max_new_tokens=r.max_new_tokens,
+                               arrive_tick=r.arrive_tick))
+        for _ in range(5):                      # mid-flight: live shared pages
+            eng.service_tick()
+        assert eng._prefix_index.page_refs()    # snapshot carries real refs
+        state = eng.engine_state()              # ... kill ...
+        eng2 = _engine(cfg, scfg, base, bank, lora_cfg)
+        eng2.load_engine_state(state)
+        done = eng2.run()
+        assert len(done) == len(ref)
+        for r in done:
+            np.testing.assert_array_equal(r.generated, ref[r.prompt.tobytes()])
+        assert not check_conservation(eng2)
+
+    def test_obs_bitwise_invisible_and_instruments(self, paged_system,
+                                                   lora_cfg):
+        cfg, scfg, base, bank = paged_system
+        rng = np.random.default_rng(29)
+        reqs = _template_reqs(cfg, rng)
+        obs = Obs()
+        on = _engine(cfg, scfg, base, bank, lora_cfg, obs=obs)
+        off = _engine(cfg, scfg, base, bank, lora_cfg)
+        got, ref = _run(on, reqs), _run(off, reqs)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+        m = obs.metrics
+        assert (m.counter("prefix_cache_hits_total", client=0).value
+                == on.stats["prefix_hits"] > 0)
+        assert (m.counter("pages_shared", client=0).value
+                == on.stats["pages_shared"] > 0)
+        assert m.merged_histogram("admission_prefill_tokens").n \
+            == len(reqs)
+        # the compacted gather shows up as a span phase
+        spans = [r for r in m.samples()
+                 if r["metric"] == "span_seconds"
+                 and r["labels"].get("phase") == "prefill_compact_gather"]
+        assert spans
+
+    def test_prefix_cache_requires_paged_ragged(self, key, lora_cfg):
+        cfg = tiny(DENSE)
+        base, bank, _ = symbiosis.init_system(cfg, lora_cfg, 2, key)
+        dense_scfg = ServeConfig(n_clients=2, max_seq=48)     # no page pool
+        with pytest.raises(ValueError, match="prefix_cache"):
+            _engine(cfg, dense_scfg, base, bank, lora_cfg, prefix_cache=True)
+        quant_scfg = ServeConfig(n_clients=2, max_seq=48, page_block=BLK,
+                                 kv_quant=True)
+        with pytest.raises(ValueError, match="prefix_cache"):
+            _engine(cfg, quant_scfg, base, bank, lora_cfg, prefix_cache=True)
+        # quant engines silently fall back to compacted prefill, no sharing
+        eng = _engine(cfg, quant_scfg, base, bank, lora_cfg)
+        assert eng._compact_prefill and not eng._share_prefix
+
+
+class TestSharedPrefixMixedMethods:
+    METHODS = [
+        AdapterConfig(method="lora", rank=4, alpha=8.0, targets=("q", "v")),
+        AdapterConfig(method="ia3", targets=("k", "v", "down")),
+        AdapterConfig(method="prefix", targets=("q", "v"), n_prefix=4),
+    ]
+
+    def test_mixed_bank_hits_are_byte_identical(self, key):
+        """Each method's client reuses its own template (the digest scope
+        pins (bank, local adapter) — sharing never crosses adapters)."""
+        cfg = tiny(DENSE)
+        scfg = ServeConfig(n_clients=3, max_seq=48, page_block=BLK)
+        base = get_model(cfg).init_params(jax.random.PRNGKey(0))
+        banks = [ad_lib.init_client_bank(cfg, a, 1, jax.random.PRNGKey(5 + i))
+                 for i, a in enumerate(self.METHODS)]
+        rng = np.random.default_rng(31)
+        tpls = {c: rng.integers(1, cfg.vocab, 16).astype(np.int32)
+                for c in range(3)}
+        reqs = []
+        for i in range(2):
+            for c in range(3):
+                prompt = np.concatenate([tpls[c], [np.int32(1 + i)]])[None, :]
+                reqs.append(Request(client_id=c, prompt=prompt,
+                                    max_new_tokens=10 if i == 0 else 3,
+                                    arrive_tick=3 * i))
+
+        def run(**kw):
+            eng = ServingEngine(cfg, self.METHODS, scfg, base, banks,
+                                max_batch_per_client=2, debug=True, **kw)
+            for r in reqs:
+                eng.submit(Request(client_id=r.client_id,
+                                   prompt=r.prompt.copy(),
+                                   max_new_tokens=r.max_new_tokens,
+                                   arrive_tick=r.arrive_tick))
+            done = eng.run()
+            assert all(r.status == "ok" for r in done)
+            return eng, {(r.client_id, r.prompt.tobytes()): r.generated
+                         for r in done}
+
+        on_eng, got = run()
+        off_eng, ref = run(prefix_cache=False)
+        assert set(got) == set(ref)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+        # every method's second templated request hit its own scope
+        assert on_eng.stats["prefix_hits"] >= 3
+        assert not check_conservation(on_eng)
+
+
+@pytest.mark.tier2
+class TestSharedPrefixSweep:
+    """Tier-2 sweep: many users, few templates, every policy — the CI
+    shared-prefix job (ci.yml)."""
+
+    @pytest.mark.parametrize("policy",
+                             ["lockstep", "nolockstep", "opportunistic"])
+    def test_template_mix_byte_identical(self, key, lora_cfg, policy):
+        cfg = tiny(DENSE)
+        scfg = ServeConfig(n_clients=2, max_seq=48, page_block=BLK,
+                           pool_pages=24)
+        base, bank, _ = symbiosis.init_system(cfg, lora_cfg, 2, key)
+        rng = np.random.default_rng(37)
+        tpls = [rng.integers(1, cfg.vocab, 16).astype(np.int32)
+                for _ in range(2)]
+        reqs = []
+        for i in range(10):
+            c = i % 2
+            tpl = tpls[c]
+            suffix = rng.integers(1, cfg.vocab, 1 + i % 3).astype(np.int32)
+            reqs.append(Request(
+                client_id=c,
+                prompt=np.concatenate([tpl, suffix])[None, :],
+                max_new_tokens=5 + i % 4, arrive_tick=i))
+        on = _engine(cfg, scfg, base, bank, lora_cfg, policy=policy)
+        off = _engine(cfg, scfg, base, bank, lora_cfg, policy=policy,
+                      prefix_cache=False)
+        got, ref = _run(on, reqs), _run(off, reqs)
+        assert set(got) == set(ref)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+        if policy != "lockstep":
+            assert on.stats["prefix_hits"] >= 4
+        assert not check_conservation(on)

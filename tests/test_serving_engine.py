@@ -447,9 +447,17 @@ class TestRaggedPrefill:
                                  r.generated.tobytes()) for r in done)
             engines[name] = eng
         assert outs["ragged"] == outs["sequential"]
-        # the 3+2 same-tick admissions collapse into 2 ragged calls (+1 solo)
-        assert engines["ragged"].stats["ragged_prefill_batches"] == 2
-        assert engines["ragged"].stats["prefill_calls"] == 3
+        if page_block:
+            # paged engines route batching through the CROSS-CLIENT compacted
+            # prefill (ISSUE 10): the 3+2 same-tick admissions collapse into
+            # ONE dispatch (+1 for the straggler)
+            assert engines["ragged"].stats["compact_prefill_batches"] == 2
+            assert engines["ragged"].stats["prefill_calls"] == 2
+        else:
+            # dense layout keeps the same-client masked ragged batch:
+            # 2 ragged calls (+1 solo for the straggler)
+            assert engines["ragged"].stats["ragged_prefill_batches"] == 2
+            assert engines["ragged"].stats["prefill_calls"] == 3
         assert engines["sequential"].stats["prefill_calls"] == 6
         assert (engines["ragged"].stats["prefill_tokens"]
                 == engines["sequential"].stats["prefill_tokens"])
